@@ -1,0 +1,87 @@
+"""Shared benchmark plumbing: datasets, timing, CSV emission.
+
+Datasets are synthetic power-law (Barabási–Albert) and random graphs —
+the same small-diameter complex-network regime as the paper's Table 2
+corpus, scaled to this CPU container. Every benchmark prints
+``name,us_per_call,derived`` rows (benchmarks/run.py contract).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graphs import generators as gen
+from repro.graphs.coo import from_edges
+from repro.core.construct import build_labelling, select_landmarks_by_degree
+
+DATASETS = {
+    # name: (builder, kwargs)  — ordered small → large
+    "ba_2k": lambda: gen.barabasi_albert(2_000, 3, seed=0),
+    "ba_10k": lambda: gen.barabasi_albert(10_000, 4, seed=1),
+    "ba_20k": lambda: gen.barabasi_albert(20_000, 5, seed=2),
+    "er_5k": lambda: gen.erdos_renyi(5_000, 0.0015, seed=3),
+}
+
+
+@dataclass
+class Instance:
+    name: str
+    n: int
+    edges: np.ndarray
+    g: object
+    landmarks: object
+    lab: object
+    construct_s: float
+
+
+_CACHE: dict[tuple, Instance] = {}
+
+
+def build_instance(name: str, n_landmarks: int = 16,
+                   extra_capacity: int = 4096) -> Instance:
+    key = (name, n_landmarks)
+    if key in _CACHE:
+        return _CACHE[key]
+    edges = DATASETS[name]()
+    n = int(edges.max()) + 1
+    g = from_edges(n, edges, edges.shape[0] + extra_capacity)
+    landmarks = select_landmarks_by_degree(g, n_landmarks)
+    t0 = time.time()
+    lab = build_labelling(g, landmarks)
+    jax.block_until_ready(lab.dist)
+    inst = Instance(name, n, edges, g, landmarks, lab, time.time() - t0)
+    _CACHE[key] = inst
+    return inst
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.time()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.time() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, seconds: float, derived: str = "") -> str:
+    row = f"{name},{seconds * 1e6:.1f},{derived}"
+    print(row)
+    return row
+
+
+def update_stream(edges: np.ndarray, n: int, batch_size: int, mode: str,
+                  seed: int = 0):
+    """Paper's test-data generation: decremental / incremental / mixed."""
+    if mode == "decremental":
+        return gen.random_batch_updates(edges, n, 0, batch_size, seed=seed)
+    if mode == "incremental":
+        return gen.random_batch_updates(edges, n, batch_size, 0, seed=seed)
+    return gen.random_batch_updates(edges, n, batch_size // 2,
+                                    batch_size - batch_size // 2, seed=seed)

@@ -1,0 +1,44 @@
+"""Paper Figure 6: total time (one batch update + 1000 queries, amortized
+per query) vs batch size, BHL⁺ against the BiBFS online baseline."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.graphs.coo import make_batch, INF_D
+from repro.core.batch import batchhl_update
+from repro.core.query import batched_query, bounded_bibfs
+from benchmarks import common as cm
+
+SIZES = (32, 64, 128, 256, 512)
+N_QUERIES = 256
+
+
+def run() -> list[str]:
+    rows = []
+    rng = np.random.default_rng(5)
+    inst = cm.build_instance("ba_10k")
+    qs = jnp.asarray(rng.integers(0, inst.n, N_QUERIES), jnp.int32)
+    qt = jnp.asarray(rng.integers(0, inst.n, N_QUERIES), jnp.int32)
+    for size in SIZES:
+        ups = cm.update_stream(inst.edges, inst.n, size, "mixed", seed=17)
+        b = make_batch(ups, pad_to=size)
+
+        def upd_and_query():
+            g2, lab2, _ = batchhl_update(inst.g, b, inst.lab)
+            return batched_query(g2, lab2, qs, qt)
+
+        t = cm.timeit(upd_and_query, iters=2)
+        rows.append(cm.emit(f"fig6/ba_10k/BHL+/batch{size}",
+                            t / N_QUERIES, f"queries={N_QUERIES}"))
+    # BiBFS baseline: queries only (no labelling to maintain)
+    empty = jnp.zeros((0,), jnp.int32)
+    t = cm.timeit(lambda: bounded_bibfs(
+        inst.g, empty, qs, qt, jnp.full((N_QUERIES,), INF_D), 64), iters=2)
+    rows.append(cm.emit("fig6/ba_10k/BiBFS", t / N_QUERIES,
+                        f"queries={N_QUERIES}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

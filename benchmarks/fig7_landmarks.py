@@ -1,0 +1,37 @@
+"""Paper Figures 7+8: update time and query time under 8–48 landmarks."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.graphs.coo import make_batch
+from repro.core.batch import batchhl_update
+from repro.core.query import batched_query
+from benchmarks import common as cm
+
+LANDMARK_COUNTS = (8, 16, 32, 48)
+BATCH = 128
+N_QUERIES = 256
+
+
+def run() -> list[str]:
+    rows = []
+    rng = np.random.default_rng(9)
+    for r in LANDMARK_COUNTS:
+        inst = cm.build_instance("ba_10k", n_landmarks=r)
+        ups = cm.update_stream(inst.edges, inst.n, BATCH, "mixed", seed=23)
+        b = make_batch(ups, pad_to=BATCH)
+        t_u = cm.timeit(lambda: batchhl_update(inst.g, b, inst.lab))
+        rows.append(cm.emit(f"fig7/ba_10k/update/R{r}", t_u,
+                            f"batch={BATCH},label_size="
+                            f"{int(inst.lab.label_size())}"))
+        qs = jnp.asarray(rng.integers(0, inst.n, N_QUERIES), jnp.int32)
+        qt = jnp.asarray(rng.integers(0, inst.n, N_QUERIES), jnp.int32)
+        t_q = cm.timeit(lambda: batched_query(inst.g, inst.lab, qs, qt))
+        rows.append(cm.emit(f"fig8/ba_10k/query/R{r}", t_q / N_QUERIES,
+                            f"batch={N_QUERIES}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

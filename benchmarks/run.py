@@ -1,0 +1,57 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Modules:
+  table3_update_time   — Table 3 (BHL⁺/BHL/BHLˢ/UHL⁺ update time)
+  table4_construction  — Table 4 (construction, query time, label size)
+  table5_affected      — Table 5 + Fig. 2 (affected-vertex counts)
+  table6_directed      — Table 6 (directed graphs, two-plane BatchHL)
+  fig6_batch_sizes     — Fig. 6 (amortized total time vs batch size)
+  fig7_landmarks       — Figs. 7/8 (update/query time vs landmarks)
+
+``--fast`` trims datasets for CI-ish runs; default runs everything.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names")
+    args = ap.parse_args()
+
+    from benchmarks import (table3_update_time, table4_construction,
+                            table5_affected, table6_directed,
+                            fig6_batch_sizes, fig7_landmarks)
+    modules = {
+        "table3": table3_update_time,
+        "table4": table4_construction,
+        "table5": table5_affected,
+        "table6": table6_directed,
+        "fig6": fig6_batch_sizes,
+        "fig7": fig7_landmarks,
+    }
+    picked = (args.only.split(",") if args.only else list(modules))
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    rows = 0
+    for name in picked:
+        mod = modules[name]
+        try:
+            if args.fast and name in ("table3", "table4"):
+                out = mod.run(datasets=("ba_2k",))
+            else:
+                out = mod.run()
+            rows += len(out)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)
+            raise
+    print(f"# {rows} rows in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper Table 4: construction time, query time, labelling size —
+BHL⁺ vs the pure online-search baseline (BiBFS, no labelling)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.query import batched_query, bounded_bibfs, query_upper_bound
+from repro.core.labelling import HighwayLabelling
+from repro.graphs.coo import INF_D
+from benchmarks import common as cm
+
+DATASETS = ("ba_2k", "ba_10k", "ba_20k", "er_5k")
+N_QUERIES = 256
+
+
+def run(datasets=DATASETS) -> list[str]:
+    rows = []
+    rng = np.random.default_rng(3)
+    for ds in datasets:
+        inst = cm.build_instance(ds)
+        rows.append(cm.emit(f"table4/{ds}/construction", inst.construct_s,
+                            f"V={inst.n},E={inst.edges.shape[0]}"))
+        size = int(inst.lab.label_size())
+        bytes_ = size * 8  # (landmark id, distance) pairs
+        rows.append(cm.emit(f"table4/{ds}/label_size", 0.0,
+                            f"entries={size},bytes={bytes_},"
+                            f"avg_per_vertex={size / inst.n:.2f}"))
+
+        qs = jnp.asarray(rng.integers(0, inst.n, N_QUERIES), jnp.int32)
+        qt = jnp.asarray(rng.integers(0, inst.n, N_QUERIES), jnp.int32)
+        t_q = cm.timeit(lambda: batched_query(inst.g, inst.lab, qs, qt))
+        rows.append(cm.emit(f"table4/{ds}/query_BHL+", t_q / N_QUERIES,
+                            f"batch={N_QUERIES}"))
+
+        # BiBFS baseline: unbounded bidirectional search, no labelling
+        # (bound = INF ⇒ no highway pruning; landmarks kept traversable
+        # by passing an empty landmark set).
+        empty = jnp.zeros((0,), jnp.int32)
+        t_bibfs = cm.timeit(
+            lambda: bounded_bibfs(inst.g, empty, qs, qt,
+                                  jnp.full((N_QUERIES,), INF_D), 64))
+        rows.append(cm.emit(f"table4/{ds}/query_BiBFS",
+                            t_bibfs / N_QUERIES, f"batch={N_QUERIES}"))
+
+        # upper-bound-only path (labels without the sparsified search)
+        t_ub = cm.timeit(
+            lambda: query_upper_bound(inst.lab, qs, qt))
+        rows.append(cm.emit(f"table4/{ds}/query_bound_only",
+                            t_ub / N_QUERIES, f"batch={N_QUERIES}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,77 @@
+"""Paper Table 6: directed graphs — update/construction/query time and
+labelling size for the two-plane (forward+backward) BatchHL."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.coo import make_batch
+from repro.core.directed import (from_arcs, build_directed_labelling,
+                                 batchhl_update_directed, directed_query)
+from benchmarks import common as cm
+
+BATCH = 128
+N_QUERIES = 256
+
+
+def _digraph(n, m, seed=0):
+    rng = np.random.default_rng(seed)
+    arcs = set()
+    for v in range(1, n):
+        u = int(rng.integers(v))
+        arcs.add((u, v) if rng.random() < 0.7 else (v, u))
+    while len(arcs) < m:
+        u, v = int(rng.integers(n)), int(rng.integers(n))
+        if u != v:
+            arcs.add((u, v))
+    return np.asarray(sorted(arcs), np.int32)
+
+
+def run() -> list[str]:
+    rows = []
+    rng = np.random.default_rng(1)
+    for name, n, m in (("digraph_2k", 2000, 8000),
+                       ("digraph_8k", 8000, 32000)):
+        arcs = _digraph(n, m)
+        g = from_arcs(n, arcs, arcs.shape[0] + 2 * BATCH)
+        deg = np.zeros(n)
+        for u, v in arcs:
+            deg[u] += 1
+            deg[v] += 1
+        landmarks = jnp.asarray(np.argsort(-deg)[:16].astype(np.int32))
+        t0 = time.time()
+        lab = build_directed_labelling(g, landmarks)
+        jax.block_until_ready(lab.fwd.dist)
+        rows.append(cm.emit(f"table6/{name}/construction",
+                            time.time() - t0, f"V={n},A={m}"))
+        size = int(lab.fwd.label_size()) + int(lab.bwd.label_size())
+        rows.append(cm.emit(f"table6/{name}/label_size", 0.0,
+                            f"entries={size},per_vertex={size / n:.2f}"))
+
+        existing = {(int(u), int(v)) for u, v in arcs}
+        ups = []
+        picks = rng.choice(len(arcs), size=BATCH // 2, replace=False)
+        ups += [(int(arcs[i, 0]), int(arcs[i, 1]), True) for i in picks]
+        while sum(1 for x in ups if not x[2]) < BATCH // 2:
+            u, v = int(rng.integers(n)), int(rng.integers(n))
+            if u != v and (u, v) not in existing:
+                existing.add((u, v))
+                ups.append((u, v, False))
+        batch = make_batch(ups, pad_to=BATCH)
+        t_u = cm.timeit(lambda: batchhl_update_directed(g, batch, lab))
+        rows.append(cm.emit(f"table6/{name}/update_BHL+", t_u,
+                            f"batch={BATCH}"))
+
+        qs = jnp.asarray(rng.integers(0, n, N_QUERIES), jnp.int32)
+        qt = jnp.asarray(rng.integers(0, n, N_QUERIES), jnp.int32)
+        t_q = cm.timeit(lambda: directed_query(g, lab, qs, qt))
+        rows.append(cm.emit(f"table6/{name}/query", t_q / N_QUERIES,
+                            f"batch={N_QUERIES}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,19 @@
+"""End-to-end driver: a BatchHL distance-query service under churn.
+
+Simulates the paper's serving scenario: a power-law network receives
+batches of edge updates while answering distance-query traffic; the
+labelling is maintained incrementally (never rebuilt), checkpointed, and
+verified against a BFS oracle each tick.
+
+    PYTHONPATH=src python examples/dynamic_distance_service.py
+"""
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    sys.exit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--n", "3000", "--batches", "4", "--batch-size", "120",
+         "--queries", "256", "--verify",
+         "--ckpt-dir", "/tmp/repro_service_ckpt"],
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"}))

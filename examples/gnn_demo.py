@@ -1,0 +1,56 @@
+"""GNN + BatchHL integration demo: GraphCast-style mesh GNN whose
+grid→mesh encoder graph is batch-dynamic (stations drop in/out), with
+BatchHL maintaining hop distances that feed the neighbor sampler bias.
+
+    PYTHONPATH=src python examples/gnn_demo.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import common as cc
+from repro.data.synthetic import coherent_gnn_batch
+from repro.models import gnn as gnn_lib
+from repro.train.optimizer import AdamWConfig
+from repro.train import train_step as ts_lib
+from repro.graphs import generators as gen
+from repro.graphs.coo import from_edges, make_batch
+from repro.graphs.sampler import build_csr, sample_neighbors
+from repro.core.construct import build_labelling, select_landmarks_by_degree
+from repro.core.batch import batchhl_update
+
+# --- 1. train a reduced GraphCast on a synthetic mesh ----------------------
+cfg = cc.get_arch("graphcast").reduced_config()
+batch = coherent_gnn_batch("graphcast", n_nodes=200, avg_deg=4,
+                           d_feat=cfg.d_in, d_out=cfg.d_out)
+params = gnn_lib.init_params(jax.random.PRNGKey(0), cfg)
+opt = AdamWConfig(lr=1e-3)
+step = jax.jit(ts_lib.make_generic_train_step(
+    lambda p, b: gnn_lib.loss_fn(p, b, cfg), opt))
+state = ts_lib.init_train_state(params, opt)
+for i in range(30):
+    state, aux = step(state, batch)
+print(f"graphcast-reduced trained 30 steps, loss={float(aux['loss']):.4f}")
+
+# --- 2. BatchHL maintains distances on the (dynamic) station graph ---------
+n = 1000
+edges = gen.barabasi_albert(n, 3, seed=2)
+g = from_edges(n, edges, edges.shape[0] + 64)
+landmarks = select_landmarks_by_degree(g, 8)
+lab = build_labelling(g, landmarks)
+ups = gen.random_batch_updates(edges, n, n_ins=20, n_del=20, seed=3)
+g, lab, aff = batchhl_update(g, make_batch(ups, pad_to=40), lab)
+print(f"station graph updated, {int(jnp.sum(aff))} affected pairs")
+
+# --- 3. distance labels bias the neighbor sampler ---------------------------
+# closeness = negative min distance to any landmark (fresh from BatchHL)
+closeness = -jnp.min(lab.dist, axis=0).astype(jnp.float32)
+csr = build_csr(n, edges)
+seeds = jnp.arange(32, dtype=jnp.int32)
+nbrs_biased, _ = sample_neighbors(csr, seeds, 8, jax.random.PRNGKey(1),
+                                  bias=closeness)
+nbrs_plain, _ = sample_neighbors(csr, seeds, 8, jax.random.PRNGKey(1))
+d_b = float(jnp.mean(jnp.min(lab.dist, axis=0)[nbrs_biased]))
+d_p = float(jnp.mean(jnp.min(lab.dist, axis=0)[nbrs_plain]))
+print(f"sampler: mean landmark-distance of sampled neighbors "
+      f"biased={d_b:.2f} vs uniform={d_p:.2f} (biased should be ≤)")

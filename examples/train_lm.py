@@ -1,0 +1,79 @@
+"""Train a ~100M-param Gemma-2-style LM for a few hundred steps on CPU,
+with checkpoint/restart fault tolerance (kill it and rerun — it resumes).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+This is the reduced-scale twin of the pod-scale train_4k cell: the same
+train_step factory, optimizer, and checkpoint manager that the dry-run
+lowers for 256/512 chips, running end-to-end on one CPU device.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import TransformerConfig, init_params
+from repro.train.optimizer import AdamWConfig
+from repro.train import train_step as ts_lib
+from repro.checkpoint import manager as ckpt
+
+
+def config_100m() -> TransformerConfig:
+    return TransformerConfig(
+        name="gemma2-100m", n_layers=6, d_model=512, n_heads=8,
+        n_kv_heads=4, d_head=64, d_ff=2048, vocab=32000,
+        attn_pattern="local_global", window=256,
+        attn_softcap=50.0, final_softcap=30.0, act="gelu",
+        dtype=jnp.float32, q_chunk=128, kv_chunk=128, loss_chunk=128)
+
+
+def batch_fn(step: int, batch: int, seq: int, vocab: int) -> dict:
+    rng = np.random.default_rng(step)
+    # skewed unigram stream so the model has something to learn
+    toks = (rng.zipf(1.5, size=(batch, seq + 1)) % vocab).astype(np.int32)
+    return {"tokens": jnp.asarray(toks[:, :-1]),
+            "targets": jnp.asarray(toks[:, 1:])}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm100m")
+    args = ap.parse_args()
+
+    cfg = config_100m()
+    n_params = cfg.params_count
+    print(f"model: {n_params / 1e6:.0f}M params")
+    opt = AdamWConfig(lr=3e-4)
+    step_fn = jax.jit(ts_lib.make_lm_train_step(cfg, opt, microbatch=2))
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    start = ckpt.latest_step(args.ckpt_dir)
+    if start is not None:
+        state, start = ckpt.restore(args.ckpt_dir,
+                                    ts_lib.init_train_state(params, opt))
+        print(f"resumed at step {start}")
+    else:
+        state, start = ts_lib.init_train_state(params, opt), 0
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        state, aux = step_fn(state, batch_fn(step, args.batch, args.seq,
+                                             cfg.vocab))
+        if step % 20 == 0:
+            tput = args.batch * args.seq / max(time.time() - t0, 1e-9)
+            print(f"step {step:4d}  loss {float(aux['loss']):.4f}  "
+                  f"({tput:.0f} tok/s)")
+            t0 = time.time()
+        if (step + 1) % 100 == 0:
+            ckpt.save(args.ckpt_dir, step + 1, state)
+            ckpt.prune(args.ckpt_dir, keep=2)
+    print(f"final loss {float(aux['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

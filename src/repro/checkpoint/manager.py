@@ -1,0 +1,96 @@
+"""Checkpointing with atomic rename + elastic re-shard on restore.
+
+Fault-tolerance contract (DESIGN.md §4):
+  * save(step) writes every leaf as .npy under a temp dir, then atomically
+    renames to step_<n> — a preempted writer never corrupts the latest
+    checkpoint;
+  * restore() finds the newest complete checkpoint and places each leaf
+    with the *current* mesh/sharding — restoring a 512-chip checkpoint onto
+    256 chips (or CPU) re-shards transparently (elastic scaling);
+  * the data pipeline is stateless-seeded, so (params, opt, step) is the
+    entire job state and restart is exact.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return leaves, treedef
+
+
+def _key_str(path) -> str:
+    return "__".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path)
+
+
+def save(ckpt_dir: str, step: int, tree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, _ = _flatten(tree)
+    manifest = []
+    for path, leaf in leaves:
+        name = _key_str(path)
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(os.path.join(tmp, name + ".npy"), arr)
+        manifest.append(name)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "leaves": manifest}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and os.path.exists(
+                os.path.join(ckpt_dir, d, "manifest.json")):
+            steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, tree_like, shardings=None, step: int | None = None):
+    """Restore into the structure of `tree_like`; optionally place each
+    leaf with `shardings` (same pytree structure) — elastic re-shard."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    leaves, treedef = _flatten(tree_like)
+    sh_leaves = None
+    if shardings is not None:
+        sh_leaves = jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "addressable_devices"))
+    out = []
+    for i, (path, leaf) in enumerate(leaves):
+        arr = np.load(os.path.join(d, _key_str(path) + ".npy"))
+        if sh_leaves is not None:
+            out.append(jax.device_put(arr, sh_leaves[i]))
+        else:
+            out.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(tree_like), out), step
+
+
+def prune(ckpt_dir: str, keep: int = 3) -> None:
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+        if d.startswith("step_"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)

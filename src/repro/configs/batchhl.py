@@ -1,0 +1,153 @@
+"""batchhl [paper]: the distance-query service itself as a dry-run config.
+
+Production-scale posture: |V| = 2²⁰ vertices, edge capacity 2²³ (16.7M
+directed slots), R = 32 landmarks, batches of 1024 updates, query batches
+of 1024. Sharding: landmark planes [R, V] split (model → R, data → V);
+edges over data; updates replicated (tiny).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import common as cc
+from repro.data import synthetic as synth
+
+ARCH_ID = "batchhl"
+FAMILY = "batchhl"
+# query_1k_repl is the beyond-paper optimized query layout (see §Perf):
+# graph + labelling replicated per device (128 MB), queries sharded over
+# *all* mesh axes → the BiBFS frontier expansion runs with zero collectives.
+SHAPES = ("update_1k", "update_10k", "query_1k", "query_1k_repl",
+          "construct")
+
+N_VERTICES = 1 << 20
+EDGE_CAP = 1 << 23          # undirected capacity; 2x directed slots
+N_LANDMARKS = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchHLConfig:
+    name: str = ARCH_ID
+    n_vertices: int = N_VERTICES
+    edge_cap: int = EDGE_CAP
+    n_landmarks: int = N_LANDMARKS
+    improved: bool = True        # BHL+ (Algo 3) by default
+
+
+def model_config() -> BatchHLConfig:
+    return BatchHLConfig()
+
+
+def reduced_config() -> BatchHLConfig:
+    return BatchHLConfig(name=ARCH_ID + "-smoke", n_vertices=256,
+                         edge_cap=1024, n_landmarks=4)
+
+
+def _graph_shapes(c: BatchHLConfig):
+    e2 = 2 * c.edge_cap
+    return {
+        "src": jax.ShapeDtypeStruct((e2,), jnp.int32),
+        "dst": jax.ShapeDtypeStruct((e2,), jnp.int32),
+        "valid": jax.ShapeDtypeStruct((e2,), jnp.bool_),
+    }
+
+
+def _labelling_shapes(c: BatchHLConfig):
+    r, v = c.n_landmarks, c.n_vertices
+    return {
+        "landmarks": jax.ShapeDtypeStruct((r,), jnp.int32),
+        "dist": jax.ShapeDtypeStruct((r, v), jnp.int32),
+        "hub": jax.ShapeDtypeStruct((r, v), jnp.bool_),
+        "highway": jax.ShapeDtypeStruct((r, r), jnp.int32),
+    }
+
+
+def build_cell(shape_name: str, pod: bool) -> cc.Cell:
+    from repro.graphs.coo import Graph, BatchUpdate
+    from repro.core.labelling import HighwayLabelling
+    from repro.core.batch import batchhl_update
+    from repro.core.construct import build_labelling
+    from repro.core.query import batched_query
+
+    c = model_config()
+    bax = cc.batch_axes(pod)
+    gsh = _graph_shapes(c)
+    lsh = _labelling_shapes(c)
+    g_spec = {"src": P(bax), "dst": P(bax), "valid": P(bax)}
+    lab_spec = {"landmarks": P(None), "dist": P("model", bax),
+                "hub": P("model", bax), "highway": P(None, None)}
+
+    def g_struct(shapes):
+        return Graph(src=shapes["src"], dst=shapes["dst"],
+                     valid=shapes["valid"], n=c.n_vertices)
+
+    def lab_struct(shapes):
+        return HighwayLabelling(**shapes)
+
+    if shape_name.startswith("update"):
+        u = 1024 if shape_name == "update_1k" else 10240
+        ush = {
+            "src": jax.ShapeDtypeStruct((u,), jnp.int32),
+            "dst": jax.ShapeDtypeStruct((u,), jnp.int32),
+            "is_del": jax.ShapeDtypeStruct((u,), jnp.bool_),
+            "valid": jax.ShapeDtypeStruct((u,), jnp.bool_),
+        }
+        u_spec = {k: P(None) for k in ush}
+
+        def step(g, batch, lab):
+            g2, lab2, aff = batchhl_update(
+                Graph(**g, n=c.n_vertices), BatchUpdate(**batch),
+                HighwayLabelling(**lab), improved=c.improved)
+            return ({"src": g2.src, "dst": g2.dst, "valid": g2.valid},
+                    {"landmarks": lab2.landmarks, "dist": lab2.dist,
+                     "hub": lab2.hub, "highway": lab2.highway},
+                    jnp.sum(aff))
+        return cc.Cell(ARCH_ID, shape_name, "update", step,
+                       (gsh, ush, lsh), (g_spec, u_spec, lab_spec),
+                       (g_spec, lab_spec, P()),
+                       dict(updates=u, edges=2 * c.edge_cap,
+                            landmarks=c.n_landmarks, train=False))
+
+    if shape_name.startswith("query_1k"):
+        b = 1024
+        qsh = {"s": jax.ShapeDtypeStruct((b,), jnp.int32),
+               "t": jax.ShapeDtypeStruct((b,), jnp.int32)}
+        if shape_name == "query_1k_repl":
+            # §Perf optimized layout: queries over every axis, graph +
+            # labelling replicated (≈160 MB/device) → frontier waves are
+            # collective-free; only the final answers gather.
+            q_ax = ("pod", "data", "model") if pod else ("data", "model")
+            q_spec = {"s": P(q_ax), "t": P(q_ax)}
+            g_spec_q = {"src": P(None), "dst": P(None), "valid": P(None)}
+            lab_spec_q = {"landmarks": P(None), "dist": P(None, None),
+                          "hub": P(None, None), "highway": P(None, None)}
+            out_spec = P(q_ax)
+        else:
+            q_spec = {"s": P(bax), "t": P(bax)}
+            g_spec_q, lab_spec_q, out_spec = g_spec, lab_spec, P(bax)
+
+        def step(g, lab, q):
+            return batched_query(Graph(**g, n=c.n_vertices),
+                                 HighwayLabelling(**lab), q["s"], q["t"],
+                                 max_steps=16)
+        return cc.Cell(ARCH_ID, shape_name, "query", step,
+                       (gsh, lsh, qsh), (g_spec_q, lab_spec_q, q_spec),
+                       out_spec,
+                       dict(queries=b, landmarks=c.n_landmarks,
+                            train=False))
+
+    # construct
+    def step(g, landmarks):
+        lab = build_labelling(Graph(**g, n=c.n_vertices), landmarks,
+                              max_iters=64)
+        return {"landmarks": lab.landmarks, "dist": lab.dist,
+                "hub": lab.hub, "highway": lab.highway}
+    rsh = jax.ShapeDtypeStruct((c.n_landmarks,), jnp.int32)
+    return cc.Cell(ARCH_ID, shape_name, "construct", step,
+                   (gsh, rsh), (g_spec, P(None)), lab_spec,
+                   dict(landmarks=c.n_landmarks, edges=2 * c.edge_cap,
+                        train=False))

@@ -1,0 +1,232 @@
+"""BatchHL: batch search (Algorithms 2 & 3) and batch repair (Algorithm 4).
+
+TPU adaptation: the paper's priority-queue best-first searches become
+monotone fixpoints of dense edge-relaxation sweeps (see DESIGN.md §2).
+Because every expansion step adds exactly one hop, the queue is monotone and
+its pop order is immaterial to the final key of each vertex — the sweep
+fixpoint equals the queue result. All landmark planes run vmapped in
+lockstep (the paper's landmark parallelism, §6) and the vertex axis is
+shardable across the mesh `data` axis.
+
+Variants (paper §7 naming):
+  BHL   = basic batch search (Algo 2) + batch repair (Algo 4)
+  BHL+  = improved batch search (Algo 3) + batch repair (Algo 4)
+  BHL^s = split insert/delete sub-batches (for Fig. 2 comparisons)
+  UHL+  = unit-update loop (single-update baseline)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.coo import Graph, BatchUpdate, INF_D, apply_batch
+from repro.graphs.segment import masked_segment_min
+from repro.core.labelling import (
+    HighwayLabelling, INF_KEY2, INF_KEY4,
+    key2_dist, key2_hub, key2_extend,
+    key4_from_key2, key4_extend, key4_beta,
+    landmark_onehot,
+)
+
+_MAX_WAVES_CAP = 1 << 20  # safety valve; loops exit on fixpoint far earlier
+
+
+def _per_plane_hub_mask(labelling: HighwayLabelling, n: int) -> jax.Array:
+    """[R, V] True where vertex is a landmark *other than* the plane's own."""
+    is_hub_v = landmark_onehot(labelling.landmarks, n)
+    own = jax.nn.one_hot(labelling.landmarks, n, dtype=bool)
+    return jnp.broadcast_to(is_hub_v, own.shape) & ~own
+
+
+def _fixpoint(body_fn, init: jax.Array) -> jax.Array:
+    """Iterate x <- body_fn(x) (monotone, elementwise) until unchanged."""
+    def cond(state):
+        _, changed, it = state
+        return changed & (it < _MAX_WAVES_CAP)
+
+    def body(state):
+        x, _, it = state
+        nx = body_fn(x)
+        return nx, jnp.any(nx != x), it + 1
+
+    out, _, _ = jax.lax.while_loop(cond, body,
+                                   (init, jnp.asarray(True), jnp.asarray(0)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Batch Search — Algorithm 2 (basic, returns CP-affected superset)
+# ---------------------------------------------------------------------------
+
+def batch_search_basic(g_old: Graph, g_new: Graph, batch: BatchUpdate,
+                       labelling: HighwayLabelling) -> jax.Array:
+    """Returns aff[R, V] bool — the CP-affected supersets, per landmark."""
+    n = g_old.n
+    dist_g = labelling.dist                                   # [R, V]
+
+    da = dist_g[:, batch.src]                                 # [R, U]
+    db = dist_g[:, batch.dst]
+    nontrivial = (da != db) & batch.valid[None, :]
+    anchor = jnp.where(da < db, batch.dst[None, :], batch.src[None, :])
+    d_pre = jnp.minimum(da, db)
+    seed_d = jnp.minimum(d_pre + 1, INF_D)
+    seed_d = jnp.where(nontrivial, seed_d, INF_D)
+
+    # Scatter-min seeds into per-plane planes.
+    def scatter_seeds(anchors, vals):
+        plane = jnp.full((n,), INF_D, jnp.int32)
+        return plane.at[anchors].min(vals)
+    seed = jax.vmap(scatter_seeds)(anchor, seed_d)            # [R, V]
+    seeded = seed < INF_D                                     # anchors join
+                                                              # V_AFF+ uncond.
+
+    def plane_fix(seed_p, dist_p):
+        def sweep(best):
+            cand = masked_segment_min(
+                jnp.minimum(best[g_new.src] + 1, INF_D), g_new.dst, n,
+                g_new.valid, INF_D)
+            accept = cand <= dist_p                           # Algo2 line 12
+            cand = jnp.where(accept, cand, INF_D)
+            return jnp.minimum(best, jnp.minimum(cand, seed_p))
+        return _fixpoint(sweep, seed_p)
+
+    best = jax.vmap(plane_fix)(seed, dist_g)
+    return seeded | (best < INF_D)
+
+
+# ---------------------------------------------------------------------------
+# Batch Search — Algorithm 3 (improved, extended landmark lengths)
+# ---------------------------------------------------------------------------
+
+def batch_search_improved(g_old: Graph, g_new: Graph, batch: BatchUpdate,
+                          labelling: HighwayLabelling) -> jax.Array:
+    """Returns aff[R, V] bool ⊇ LD-affected vertices, per landmark."""
+    n = g_old.n
+    dist_g = labelling.dist
+    key2_g = labelling.key2()                                 # [R, V]
+    beta = key4_beta(key2_g)                                  # [R, V]
+    hub_mask = _per_plane_hub_mask(labelling, n)              # [R, V]
+
+    da = dist_g[:, batch.src]
+    db = dist_g[:, batch.dst]
+    nontrivial = (da != db) & batch.valid[None, :]
+    a_is_pre = da < db
+    anchor = jnp.where(a_is_pre, batch.dst[None, :], batch.src[None, :])
+    pre = jnp.where(a_is_pre, batch.src[None, :], batch.dst[None, :])
+
+    key2_pre = jnp.take_along_axis(key2_g, pre, axis=1)       # [R, U]
+    k4 = key4_from_key2(key2_pre, batch.is_del[None, :])
+    anchor_is_hub = jnp.take_along_axis(hub_mask, anchor, axis=1)
+    seed_k4 = key4_extend(k4, anchor_is_hub)
+    seed_k4 = jnp.where(nontrivial, seed_k4, INF_KEY4)
+
+    def scatter_seeds(anchors, vals):
+        plane = jnp.full((n,), INF_KEY4, jnp.int32)
+        return plane.at[anchors].min(vals)
+    seed = jax.vmap(scatter_seeds)(anchor, seed_k4)
+    seeded = seed < INF_KEY4
+
+    def plane_fix(seed_p, beta_p, hub_p):
+        dst_hub = hub_p[g_new.dst]
+
+        def sweep(best):
+            cand = key4_extend(best[g_new.src], dst_hub)
+            cand = masked_segment_min(cand, g_new.dst, n, g_new.valid,
+                                      INF_KEY4)
+            accept = cand <= beta_p                           # Algo3 line 14
+            cand = jnp.where(accept, cand, INF_KEY4)
+            return jnp.minimum(best, jnp.minimum(cand, seed_p))
+        return _fixpoint(sweep, seed_p)
+
+    best = jax.vmap(plane_fix)(seed, beta, hub_mask)
+    return seeded | (best < INF_KEY4)
+
+
+# ---------------------------------------------------------------------------
+# Batch Repair — Algorithm 4
+# ---------------------------------------------------------------------------
+
+def batch_repair(g_new: Graph, aff: jax.Array,
+                 labelling: HighwayLabelling) -> HighwayLabelling:
+    """Settle d^L_{G'} on the affected sets and rewrite labels minimally.
+
+    The paper's ascending-distance wavefront (settle V_min, relax neighbors)
+    is realized as a boundary-seeded relaxation fixpoint: identical final
+    values by Lemma 5.20 + monotonicity.
+    """
+    n = g_new.n
+    key2_g = labelling.key2()
+    hub_mask = _per_plane_hub_mask(labelling, n)
+    r_count = labelling.num_landmarks
+
+    def plane_repair(aff_p, key2_p, hub_p):
+        dst_hub = hub_p[g_new.dst]
+        # Landmark-distance bounds from *unaffected* neighbours (line 3).
+        bou_mask = g_new.valid & ~aff_p[g_new.src] & aff_p[g_new.dst]
+        base = masked_segment_min(
+            key2_extend(key2_p[g_new.src], dst_hub), g_new.dst, n,
+            bou_mask, INF_KEY2)
+        base = jnp.where(aff_p, base, INF_KEY2)
+
+        # Interior relaxation (lines 5-15 wavefront → fixpoint).
+        int_mask = g_new.valid & aff_p[g_new.src] & aff_p[g_new.dst]
+
+        def sweep(cur):
+            cand = masked_segment_min(
+                key2_extend(cur[g_new.src], dst_hub), g_new.dst, n,
+                int_mask, INF_KEY2)
+            return jnp.minimum(cur, cand)
+
+        settled = _fixpoint(sweep, base)
+        return jnp.where(aff_p, settled, key2_p)
+
+    new_key2 = jax.vmap(plane_repair)(aff, key2_g, hub_mask)
+    dist = jnp.minimum(key2_dist(new_key2), INF_D)
+    hub = key2_hub(new_key2) & (dist < INF_D)
+    highway = dist[jnp.arange(r_count)[:, None],
+                   labelling.landmarks[None, :]]
+    return HighwayLabelling(labelling.landmarks, dist, hub, highway)
+
+
+# ---------------------------------------------------------------------------
+# BatchHL — Algorithm 1
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("improved",))
+def batchhl_update(g_old: Graph, batch: BatchUpdate,
+                   labelling: HighwayLabelling, improved: bool = True
+                   ) -> tuple[Graph, HighwayLabelling, jax.Array]:
+    """One BatchHL step: apply B, search, repair. Returns (G', Γ', aff)."""
+    g_new = apply_batch(g_old, batch)
+    search = batch_search_improved if improved else batch_search_basic
+    aff = search(g_old, g_new, batch, labelling)
+    new_labelling = batch_repair(g_new, aff, labelling)
+    return g_new, new_labelling, aff
+
+
+def batchhl_update_split(g_old: Graph, batch: BatchUpdate,
+                         labelling: HighwayLabelling, improved: bool = True):
+    """BHL^s: insertions and deletions as two sequential sub-batches."""
+    ins = BatchUpdate(batch.src, batch.dst, batch.is_del,
+                      batch.valid & ~batch.is_del)
+    dele = BatchUpdate(batch.src, batch.dst, batch.is_del,
+                       batch.valid & batch.is_del)
+    g1, lab1, aff1 = batchhl_update(g_old, ins, labelling, improved)
+    g2, lab2, aff2 = batchhl_update(g1, dele, lab1, improved)
+    return g2, lab2, aff1 | aff2
+
+
+def uhl_update(g_old: Graph, batch: BatchUpdate,
+               labelling: HighwayLabelling, improved: bool = True):
+    """UHL+: the single-update baseline — one BatchHL call per update."""
+    g, lab = g_old, labelling
+    total_aff = jnp.zeros_like(labelling.hub)
+    u = batch.src.shape[0]
+    for i in range(u):
+        single = BatchUpdate(batch.src[i:i + 1], batch.dst[i:i + 1],
+                             batch.is_del[i:i + 1], batch.valid[i:i + 1])
+        g, lab, aff = batchhl_update(g, single, lab, improved)
+        total_aff = total_aff | aff
+    return g, lab, total_aff

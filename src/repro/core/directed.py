@@ -1,0 +1,224 @@
+"""Directed-graph BatchHL (paper §6, Table 6).
+
+Two labelling planes are maintained:
+  * forward  L_f[r, v] = δ(r → v)  — wave relaxation along arcs,
+  * backward L_b[r, v] = δ(v → r)  — relaxation along reversed arcs,
+with forward/backward highways H_f = H_bᵀ. A query (s, t) combines
+    d⊤ = min_{i,j}  L_b[i, s] + H_f[i, j] + L_f[j, t]
+with a distance-bounded directed bidirectional search (forward from s,
+backward from t) on G[V \\ R].
+
+Updates: an arc (a→b) only creates/destroys paths entering through b on the
+forward plane (and through a on the backward plane), so the anchor is fixed
+per plane — a one-sided specialization of the paper's anchor rule. Batch
+search/repair then run unchanged on the corresponding edge orientation.
+
+Storage: one padded arc table (src, dst, valid) holds each arc once; the
+backward plane relaxes it with src/dst swapped. `apply_batch_directed`
+matches deletions exactly (no undirected canonicalization).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.coo import Graph, BatchUpdate, INF_D
+from repro.core.labelling import (
+    HighwayLabelling, INF_KEY2, INF_KEY4, key2_dist, key2_hub,
+    key4_from_key2, key4_extend, key4_beta,
+)
+from repro.core.batch import (_per_plane_hub_mask, _fixpoint, batch_repair)
+from repro.graphs.segment import masked_segment_min
+from repro.core.construct import build_labelling
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("src", "dst", "valid"), meta_fields=("n",))
+@dataclasses.dataclass(frozen=True)
+class DirectedGraph:
+    src: jax.Array    # int32[cap] arc tails
+    dst: jax.Array    # int32[cap] arc heads
+    valid: jax.Array  # bool[cap]
+    n: int
+
+    def fwd(self) -> Graph:
+        return Graph(self.src, self.dst, self.valid, self.n)
+
+    def rev(self) -> Graph:
+        return Graph(self.dst, self.src, self.valid, self.n)
+
+
+def from_arcs(n: int, arcs: np.ndarray, capacity: int) -> DirectedGraph:
+    arcs = np.asarray(arcs, np.int32).reshape(-1, 2)
+    m = arcs.shape[0]
+    if m > capacity:
+        raise ValueError(f"{m} arcs exceed capacity {capacity}")
+    src = np.zeros(capacity, np.int32)
+    dst = np.zeros(capacity, np.int32)
+    valid = np.zeros(capacity, bool)
+    src[:m], dst[:m] = arcs[:, 0], arcs[:, 1]
+    valid[:m] = True
+    return DirectedGraph(jnp.asarray(src), jnp.asarray(dst),
+                         jnp.asarray(valid), n)
+
+
+def apply_batch_directed(g: DirectedGraph, b: BatchUpdate) -> DirectedGraph:
+    """Exact-arc deletion + free-slot insertion (single slots)."""
+    del_mask = b.is_del & b.valid
+    d_src = jnp.where(del_mask, b.src, -1)
+    d_dst = jnp.where(del_mask, b.dst, -1)
+    hit = jnp.any((g.src[:, None] == d_src[None, :])
+                  & (g.dst[:, None] == d_dst[None, :]), axis=1)
+    valid = g.valid & ~hit
+
+    ins_mask = (~b.is_del) & b.valid
+    u = b.src.shape[0]
+    free_idx = jnp.nonzero(~valid, size=u, fill_value=valid.shape[0] - 1)[0]
+    rank = jnp.cumsum(ins_mask) - 1
+    slot = free_idx[jnp.clip(rank, 0, u - 1)]
+    oob = jnp.int32(g.src.shape[0])
+    slot = jnp.where(ins_mask, slot, oob)
+    src = g.src.at[slot].set(b.src, mode="drop")
+    dst = g.dst.at[slot].set(b.dst, mode="drop")
+    valid = valid.at[slot].set(True, mode="drop")
+    return DirectedGraph(src, dst, valid, g.n)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("fwd", "bwd"), meta_fields=())
+@dataclasses.dataclass(frozen=True)
+class DirectedLabelling:
+    fwd: HighwayLabelling   # L_f, H_f (distances r → v)
+    bwd: HighwayLabelling   # L_b, H_b (distances v → r)
+
+
+def build_directed_labelling(g: DirectedGraph,
+                             landmarks: jax.Array) -> DirectedLabelling:
+    return DirectedLabelling(build_labelling(g.fwd(), landmarks),
+                             build_labelling(g.rev(), landmarks))
+
+
+def _directed_search(g_new: Graph, batch_src, batch_dst, batch_is_del,
+                     batch_valid, labelling: HighwayLabelling) -> jax.Array:
+    """Improved batch search on one plane; anchors fixed at arc heads."""
+    n = g_new.n
+    dist_g = labelling.dist
+    key2_g = labelling.key2()
+    beta = key4_beta(key2_g)
+    hub_mask = _per_plane_hub_mask(labelling, n)
+
+    da = dist_g[:, batch_src]                                # [R, U] (pre)
+    db = dist_g[:, batch_dst]
+    # Arc a→b can only change paths through b; skip if it cannot shorten /
+    # was not potentially on a shortest path (superset-safe check).
+    nontrivial = (da + 1 <= db) & (da < INF_D) & batch_valid[None, :]
+    key2_pre = jnp.take_along_axis(key2_g, batch_src[None, :].repeat(
+        dist_g.shape[0], 0), axis=1)
+    k4 = key4_from_key2(key2_pre, batch_is_del[None, :])
+    anchor_is_hub = jnp.take_along_axis(
+        hub_mask, batch_dst[None, :].repeat(dist_g.shape[0], 0), axis=1)
+    seed_k4 = key4_extend(k4, anchor_is_hub)
+    seed_k4 = jnp.where(nontrivial, seed_k4, INF_KEY4)
+
+    def scatter_seeds(vals):
+        plane = jnp.full((n,), INF_KEY4, jnp.int32)
+        return plane.at[batch_dst].min(vals)
+    seed = jax.vmap(scatter_seeds)(seed_k4)
+    seeded = seed < INF_KEY4
+
+    def plane_fix(seed_p, beta_p, hub_p):
+        dst_hub = hub_p[g_new.dst]
+
+        def sweep(best):
+            cand = key4_extend(best[g_new.src], dst_hub)
+            cand = masked_segment_min(cand, g_new.dst, n, g_new.valid,
+                                      INF_KEY4)
+            cand = jnp.where(cand <= beta_p, cand, INF_KEY4)
+            return jnp.minimum(best, jnp.minimum(cand, seed_p))
+        return _fixpoint(sweep, seed_p)
+
+    best = jax.vmap(plane_fix)(seed, beta, hub_mask)
+    return seeded | (best < INF_KEY4)
+
+
+@jax.jit
+def batchhl_update_directed(g: DirectedGraph, batch: BatchUpdate,
+                            lab: DirectedLabelling
+                            ) -> tuple[DirectedGraph, DirectedLabelling,
+                                       jax.Array]:
+    """One directed BatchHL step: both planes searched + repaired."""
+    g2 = apply_batch_directed(g, batch)
+    # forward plane: arcs as-is, anchor = head
+    aff_f = _directed_search(g2.fwd(), batch.src, batch.dst, batch.is_del,
+                             batch.valid, lab.fwd)
+    new_f = batch_repair(g2.fwd(), aff_f, lab.fwd)
+    # backward plane: reversed arcs, anchor = tail
+    aff_b = _directed_search(g2.rev(), batch.dst, batch.src, batch.is_del,
+                             batch.valid, lab.bwd)
+    new_b = batch_repair(g2.rev(), aff_b, lab.bwd)
+    return g2, DirectedLabelling(new_f, new_b), aff_f | aff_b
+
+
+def directed_query(g: DirectedGraph, lab: DirectedLabelling, s: jax.Array,
+                   t: jax.Array, max_steps: int = 64) -> jax.Array:
+    """Exact directed distances d(s → t) for query batches."""
+    from repro.core.query import effective_labels
+    from repro.core.labelling import landmark_onehot
+
+    lb = effective_labels(lab.bwd)                           # δ(· → r_i)
+    lf = effective_labels(lab.fwd)                           # δ(r_j → ·)
+    s_lab = jnp.minimum(lb[:, s].T, INF_D)                   # [B, R]
+    t_lab = jnp.minimum(lf[:, t].T, INF_D)
+    mid = jnp.min(s_lab[:, :, None] + lab.fwd.highway[None, :, :], axis=1)
+    d_top = jnp.minimum(jnp.min(mid + t_lab, axis=1), INF_D)
+
+    # bounded directed bidirectional search on G[V \ R]
+    n = g.n
+    b = s.shape[0]
+    blocked = landmark_onehot(lab.fwd.landmarks, n)
+    inf = INF_D
+    ds = jnp.full((b, n), inf, jnp.int32).at[jnp.arange(b), s].set(0)
+    dt = jnp.full((b, n), inf, jnp.int32).at[jnp.arange(b), t].set(0)
+    ds = jnp.where(blocked[s][:, None], inf, ds)
+    dt = jnp.where(blocked[t][:, None], inf, dt)
+
+    def expand(dist_x, level, srcs, dsts):
+        frontier = dist_x == level
+        msg = frontier[:, srcs] & g.valid[None, :]
+        reached = jax.vmap(
+            lambda m: jax.ops.segment_max(m, dsts, num_segments=n))(msg)
+        newly = reached & (dist_x == inf) & ~blocked[None, :]
+        return jnp.where(newly, level + 1, dist_x)
+
+    def cond(state):
+        ds, dt, ls, lt, best, step = state
+        return (jnp.any((ls + lt + 2) <= jnp.minimum(best, d_top))
+                & (step < max_steps))
+
+    def body(state):
+        ds, dt, ls, lt, best, step = state
+        exp_s = jnp.sum(ds == ls) <= jnp.sum(dt == lt)
+
+        def s_side(a):
+            ds, dt, ls, lt = a
+            return expand(ds, ls, g.src, g.dst), dt, ls + 1, lt
+
+        def t_side(a):
+            ds, dt, ls, lt = a
+            return ds, expand(dt, lt, g.dst, g.src), ls, lt + 1
+
+        ds, dt, ls, lt = jax.lax.cond(exp_s, s_side, t_side,
+                                      (ds, dt, ls, lt))
+        best = jnp.minimum(best, jnp.min(jnp.minimum(ds + dt, inf), axis=1))
+        return ds, dt, ls, lt, best, step + 1
+
+    best0 = jnp.min(jnp.minimum(ds + dt, inf), axis=1)
+    state = (ds, dt, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+             best0, jnp.zeros((), jnp.int32))
+    *_, best, _ = jax.lax.while_loop(cond, body, state)
+    out = jnp.minimum(best, d_top)
+    return jnp.where(out >= INF_D, INF_D, out)

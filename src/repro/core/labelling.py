@@ -1,0 +1,120 @@
+"""Highway-cover labelling state and landmark-length encodings.
+
+The paper's label lists are realized as dense per-landmark planes:
+
+  dist[R, V]  int32   d_G(r, v)                      (INF_D if unreachable)
+  hub[R, V]   bool    landmark flag of d^L_G(r, v):  True iff some shortest
+                      r->v path passes through a landmark other than r
+                      (endpoints count, per the paper's ⊕ operator)
+  highway[R,R] int32  δ_H
+
+The minimal highway-cover labelling (Lemma 5.14) is the masked set
+{(r, v) : dist finite ∧ ¬hub}; `label_size` counts it exactly.
+
+Landmark lengths (d, l) and extended landmark lengths (d, l, e) are encoded
+as integers so lexicographic tuple order (True < False on flags) is integer
+order and `min` implements tuple minimization on the VPU:
+
+  key2(d, l)    = 2*d + (1 - l)             # l ∈ {0,1}, 1 = True
+  key4(d, l, e) = 4*d + 2*(1 - l) + (1 - e)
+
+The paper's path-extension operator (d,l) ⊕ w becomes key arithmetic:
+add the step, then clear the l-bit when w is a landmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.coo import INF_D
+
+INF_KEY2 = jnp.int32(2) * INF_D + 1
+INF_KEY4 = jnp.int32(4) * INF_D + 3
+
+
+# --- key2: landmark length (d, l) ------------------------------------------
+
+def key2_make(d, l):
+    return 2 * d + (1 - l.astype(jnp.int32))
+
+
+def key2_dist(key2):
+    return key2 >> 1
+
+
+def key2_hub(key2):
+    return (key2 & 1) == 0
+
+
+def key2_extend(key2, dst_is_hub, inf=INF_KEY2):
+    """(d,l) ⊕ w : +1 step; force l=True when w is a landmark (≠ r)."""
+    out = jnp.minimum(key2 + 2, inf)
+    out = jnp.where(dst_is_hub, out & ~jnp.int32(1), out)
+    return out
+
+
+# --- key4: extended landmark length (d, l, e) -------------------------------
+
+def key4_make(d, l, e):
+    return 4 * d + 2 * (1 - l.astype(jnp.int32)) + (1 - e.astype(jnp.int32))
+
+
+def key4_from_key2(key2, e):
+    """Lift (d,l) to (d,l,e)."""
+    return 2 * key2 + (1 - e.astype(jnp.int32))
+
+
+def key4_extend(key4, dst_is_hub, inf=INF_KEY4):
+    """((d,l) ⊕ w, e): step keeps the deletion flag."""
+    out = jnp.minimum(key4 + 4, inf)
+    out = jnp.where(dst_is_hub, out & ~jnp.int32(2), out)
+    return out
+
+
+def key4_beta(key2_g):
+    """β(r, v) = (d^L_G(r,v), True): the improved-search pruning bound."""
+    return 2 * key2_g  # e=True encodes as +0
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("landmarks", "dist", "hub", "highway"), meta_fields=())
+@dataclasses.dataclass(frozen=True)
+class HighwayLabelling:
+    landmarks: jax.Array  # int32[R] vertex ids
+    dist: jax.Array       # int32[R, V]
+    hub: jax.Array        # bool[R, V]
+    highway: jax.Array    # int32[R, R]
+
+    @property
+    def num_landmarks(self) -> int:
+        return self.landmarks.shape[0]
+
+    def key2(self) -> jax.Array:
+        """[R, V] encoded landmark distances d^L_G(r, ·)."""
+        return key2_make(self.dist, self.hub)
+
+    def label_mask(self) -> jax.Array:
+        """[R, V] True where the minimal labelling stores an r-label."""
+        mask = (self.dist < INF_D) & ~self.hub
+        # Landmarks store no labels (their distances live in the highway),
+        # except the trivial self entry, which we exclude from counting too.
+        v_ids = jnp.arange(self.dist.shape[1])
+        is_landmark_v = jnp.any(v_ids[None, :] == self.landmarks[:, None],
+                                axis=0)
+        return mask & ~is_landmark_v[None, :]
+
+    def label_size(self) -> jax.Array:
+        return jnp.sum(self.label_mask())
+
+    def label_values(self) -> jax.Array:
+        """[R, V] label distances, INF_D where no label exists."""
+        return jnp.where(self.label_mask(), self.dist, INF_D)
+
+
+def landmark_onehot(landmarks: jax.Array, n: int) -> jax.Array:
+    """bool[V]: vertex is a landmark."""
+    v_ids = jnp.arange(n)
+    return jnp.any(v_ids[None, :] == landmarks[:, None], axis=0)

@@ -1,0 +1,229 @@
+"""Stateless-seeded synthetic data: batch = f(layout, step).
+
+Every input pipeline is a pure function of (layout, seed/step) so a
+restarted job regenerates the exact stream — the fault-tolerance contract
+(DESIGN.md §4). `materialize(layout, seed)` builds real arrays for smoke
+tests/examples; `as_specs(layout)` turns the same layout into
+ShapeDtypeStructs for dry-run lowering — one source of truth, no drift.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+# A layout is a dict: name -> (shape tuple, dtype, kind)
+# kind ∈ {"tokens:<vocab>", "ids:<max>", "float", "bool", "pos", "angle"}
+
+
+def as_specs(layout: dict) -> dict:
+    return {k: jax.ShapeDtypeStruct(shape, dtype)
+            for k, (shape, dtype, _) in layout.items()}
+
+
+def materialize(layout: dict, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, (shape, dtype, kind) in layout.items():
+        if kind.startswith("tokens:") or kind.startswith("ids:"):
+            hi = int(kind.split(":")[1])
+            out[k] = jnp.asarray(
+                rng.integers(0, hi, size=shape).astype(np.int32))
+        elif kind == "bool":
+            out[k] = jnp.asarray(np.ones(shape, bool))
+        elif kind == "pos":
+            out[k] = jnp.asarray(
+                rng.normal(size=shape).astype(np.float32) * 2.0)
+        elif kind == "angle":
+            out[k] = jnp.asarray(
+                rng.uniform(0, np.pi, size=shape).astype(np.float32))
+        elif kind == "zeros":
+            out[k] = jnp.zeros(shape, dtype)
+        else:
+            out[k] = jnp.asarray(
+                rng.normal(size=shape).astype(np.float32)).astype(dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# layouts per family
+# ---------------------------------------------------------------------------
+
+def lm_train_layout(batch: int, seq: int, vocab: int) -> dict:
+    return {
+        "tokens": ((batch, seq), jnp.int32, f"tokens:{vocab}"),
+        "targets": ((batch, seq), jnp.int32, f"tokens:{vocab}"),
+    }
+
+
+def lm_decode_layout(batch: int, vocab: int) -> dict:
+    return {"tokens": ((batch, 1), jnp.int32, f"tokens:{vocab}")}
+
+
+def lm_prefill_layout(batch: int, seq: int, vocab: int) -> dict:
+    return {"tokens": ((batch, seq), jnp.int32, f"tokens:{vocab}")}
+
+
+def gnn_layout(arch: str, n_nodes: int, n_edges_directed: int, d_feat: int,
+               d_out: int, n_graphs: int | None = None,
+               tri_cap: int | None = None, mesh_ratio: int = 16) -> dict:
+    """Shared GNN input layout. n_edges_directed counts each direction."""
+    e = n_edges_directed
+    lay = {
+        "node_feat": ((n_nodes, d_feat), jnp.float32, "float"),
+        "positions": ((n_nodes, 3), jnp.float32, "pos"),
+        "src": ((e,), jnp.int32, f"ids:{n_nodes}"),
+        "dst": ((e,), jnp.int32, f"ids:{n_nodes}"),
+        "edge_mask": ((e,), jnp.bool_, "bool"),
+        "node_mask": ((n_nodes,), jnp.bool_, "bool"),
+    }
+    if n_graphs is not None:
+        lay["graph_ids"] = ((n_nodes,), jnp.int32, f"ids:{n_graphs}")
+        lay["targets"] = ((n_graphs, d_out), jnp.float32, "float")
+    else:
+        lay["targets"] = ((n_nodes, d_out), jnp.float32, "float")
+    if arch == "dimenet":
+        t = tri_cap if tri_cap is not None else 2 * e
+        lay.update({
+            "tri_kj": ((t,), jnp.int32, f"ids:{e}"),
+            "tri_ji": ((t,), jnp.int32, f"ids:{e}"),
+            "tri_mask": ((t,), jnp.bool_, "bool"),
+            "tri_angle": ((t,), jnp.float32, "angle"),
+        })
+    if arch == "graphcast":
+        m = max(n_nodes // mesh_ratio, 4)
+        me = 4 * m
+        lay.update({
+            "mesh_pos": ((m, 3), jnp.float32, "pos"),
+            "g2m_src": ((n_nodes,), jnp.int32, f"ids:{n_nodes}"),
+            "g2m_dst": ((n_nodes,), jnp.int32, f"ids:{m}"),
+            "g2m_mask": ((n_nodes,), jnp.bool_, "bool"),
+            "mesh_src": ((me,), jnp.int32, f"ids:{m}"),
+            "mesh_dst": ((me,), jnp.int32, f"ids:{m}"),
+            "mesh_mask": ((me,), jnp.bool_, "bool"),
+            "m2g_src": ((n_nodes,), jnp.int32, f"ids:{m}"),
+            "m2g_dst": ((n_nodes,), jnp.int32, f"ids:{n_nodes}"),
+            "m2g_mask": ((n_nodes,), jnp.bool_, "bool"),
+        })
+    return lay
+
+
+def mind_train_layout(batch: int, hist_len: int, n_items: int) -> dict:
+    return {
+        "hist": ((batch, hist_len), jnp.int32, f"ids:{n_items}"),
+        "hist_mask": ((batch, hist_len), jnp.bool_, "bool"),
+        "target": ((batch,), jnp.int32, f"ids:{n_items}"),
+    }
+
+
+def mind_serve_layout(batch: int, hist_len: int, n_items: int,
+                      n_cands: int) -> dict:
+    return {
+        "hist": ((batch, hist_len), jnp.int32, f"ids:{n_items}"),
+        "hist_mask": ((batch, hist_len), jnp.bool_, "bool"),
+        "cands": ((batch, n_cands), jnp.int32, f"ids:{n_items}"),
+    }
+
+
+def mind_retrieval_layout(hist_len: int, n_items: int,
+                          n_cands: int) -> dict:
+    return {
+        "hist": ((1, hist_len), jnp.int32, f"ids:{n_items}"),
+        "hist_mask": ((1, hist_len), jnp.bool_, "bool"),
+        "cands": ((n_cands,), jnp.int32, f"ids:{n_items}"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Coherent small-graph batches (smoke tests need real geometry/topology)
+# ---------------------------------------------------------------------------
+
+def coherent_gnn_batch(arch: str, n_nodes: int, avg_deg: int, d_feat: int,
+                       d_out: int, seed: int = 0,
+                       n_graphs: int | None = None) -> dict:
+    """Small but *valid* graph batch: consistent edges, triplets, meshes."""
+    rng = np.random.default_rng(seed)
+    pos = rng.normal(size=(n_nodes, 3)).astype(np.float32) * 2.0
+    # kNN-ish random graph
+    m = n_nodes * avg_deg // 2
+    src = rng.integers(0, n_nodes, m)
+    dst = rng.integers(0, n_nodes, m)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    src2 = np.concatenate([src, dst]).astype(np.int32)
+    dst2 = np.concatenate([dst, src]).astype(np.int32)
+    e = src2.shape[0]
+    batch = {
+        "node_feat": jnp.asarray(
+            rng.normal(size=(n_nodes, d_feat)).astype(np.float32)),
+        "positions": jnp.asarray(pos),
+        "src": jnp.asarray(src2),
+        "dst": jnp.asarray(dst2),
+        "edge_mask": jnp.ones((e,), bool),
+        "node_mask": jnp.ones((n_nodes,), bool),
+    }
+    if n_graphs is not None:
+        gid = (np.arange(n_nodes) * n_graphs // n_nodes).astype(np.int32)
+        batch["graph_ids"] = jnp.asarray(gid)
+        batch["targets"] = jnp.asarray(
+            rng.normal(size=(n_graphs, d_out)).astype(np.float32))
+    else:
+        batch["targets"] = jnp.asarray(
+            rng.normal(size=(n_nodes, d_out)).astype(np.float32))
+    if arch == "dimenet":
+        # Real triplets: (k→j) feeding (j→i), capped.
+        by_dst: dict[int, list[int]] = {}
+        for eid, dd in enumerate(dst2):
+            by_dst.setdefault(int(dd), []).append(eid)
+        tk, tj, ang = [], [], []
+        cap = 4 * e
+        for eid_ji in range(e):
+            j = int(src2[eid_ji])
+            for eid_kj in by_dst.get(j, [])[:4]:
+                if int(src2[eid_kj]) == int(dst2[eid_ji]):
+                    continue
+                v1 = pos[int(src2[eid_kj])] - pos[j]
+                v2 = pos[int(dst2[eid_ji])] - pos[j]
+                cos = np.dot(v1, v2) / (np.linalg.norm(v1)
+                                        * np.linalg.norm(v2) + 1e-9)
+                tk.append(eid_kj)
+                tj.append(eid_ji)
+                ang.append(np.arccos(np.clip(cos, -1, 1)))
+                if len(tk) >= cap:
+                    break
+            if len(tk) >= cap:
+                break
+        t = max(len(tk), 1)
+        tri_kj = np.zeros(cap, np.int32)
+        tri_ji = np.zeros(cap, np.int32)
+        tri_angle = np.zeros(cap, np.float32)
+        tri_mask = np.zeros(cap, bool)
+        tri_kj[:t] = tk[:t] or [0]
+        tri_ji[:t] = tj[:t] or [0]
+        tri_angle[:t] = ang[:t] or [0.0]
+        tri_mask[:len(tk)] = True
+        batch.update({
+            "tri_kj": jnp.asarray(tri_kj), "tri_ji": jnp.asarray(tri_ji),
+            "tri_angle": jnp.asarray(tri_angle),
+            "tri_mask": jnp.asarray(tri_mask),
+        })
+    if arch == "graphcast":
+        mesh_n = max(n_nodes // 16, 4)
+        assign = (np.arange(n_nodes) * mesh_n // n_nodes).astype(np.int32)
+        mesh_pos = np.stack([pos[assign == i].mean(0) if (assign == i).any()
+                             else np.zeros(3) for i in range(mesh_n)])
+        me = 4 * mesh_n
+        ms = rng.integers(0, mesh_n, me).astype(np.int32)
+        md = rng.integers(0, mesh_n, me).astype(np.int32)
+        batch.update({
+            "mesh_pos": jnp.asarray(mesh_pos.astype(np.float32)),
+            "g2m_src": jnp.asarray(np.arange(n_nodes, dtype=np.int32)),
+            "g2m_dst": jnp.asarray(assign),
+            "g2m_mask": jnp.ones((n_nodes,), bool),
+            "mesh_src": jnp.asarray(ms), "mesh_dst": jnp.asarray(md),
+            "mesh_mask": jnp.ones((me,), bool),
+            "m2g_src": jnp.asarray(assign),
+            "m2g_dst": jnp.asarray(np.arange(n_nodes, dtype=np.int32)),
+            "m2g_mask": jnp.ones((n_nodes,), bool),
+        })
+    return batch

@@ -1,0 +1,137 @@
+"""Padded COO graph structures for batch-dynamic graphs on TPU.
+
+Shapes are static: a graph owns a fixed edge *capacity*; edges live in slots
+with a validity mask. Batch updates toggle validity (deletions) and fill free
+slots (insertions), so a single compiled executable serves every batch.
+
+Undirected edges are stored as both directions in adjacent slot pairs
+(slot 2k holds u->v, slot 2k+1 holds v->u), which keeps insertion/deletion
+of the two directions in lockstep.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Large-but-safe int32 infinity for distances (headroom for +1 relaxations).
+INF_D = jnp.int32(1 << 28)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("src", "dst", "valid"), meta_fields=("n",))
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Padded undirected graph in COO form (both directions stored)."""
+    src: jax.Array   # int32[2*cap]
+    dst: jax.Array   # int32[2*cap]
+    valid: jax.Array # bool[2*cap]
+    n: int           # static vertex count
+
+    @property
+    def capacity(self) -> int:
+        return self.src.shape[0] // 2
+
+    def num_edges(self) -> jax.Array:
+        return jnp.sum(self.valid) // 2
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("src", "dst", "is_del", "valid"), meta_fields=())
+@dataclasses.dataclass(frozen=True)
+class BatchUpdate:
+    """A padded batch of edge updates (insertions + deletions)."""
+    src: jax.Array    # int32[U]
+    dst: jax.Array    # int32[U]
+    is_del: jax.Array # bool[U]
+    valid: jax.Array  # bool[U]  (padding mask)
+
+
+def from_edges(n: int, edges: np.ndarray, capacity: int) -> Graph:
+    """Build a padded Graph from a [m, 2] numpy edge array (undirected)."""
+    edges = np.asarray(edges, dtype=np.int32).reshape(-1, 2)
+    m = edges.shape[0]
+    if m > capacity:
+        raise ValueError(f"{m} edges exceed capacity {capacity}")
+    src = np.zeros(2 * capacity, np.int32)
+    dst = np.zeros(2 * capacity, np.int32)
+    valid = np.zeros(2 * capacity, bool)
+    src[0:2 * m:2], dst[0:2 * m:2] = edges[:, 0], edges[:, 1]
+    src[1:2 * m:2], dst[1:2 * m:2] = edges[:, 1], edges[:, 0]
+    valid[:2 * m] = True
+    return Graph(jnp.asarray(src), jnp.asarray(dst), jnp.asarray(valid), n)
+
+
+def make_batch(updates, pad_to: int | None = None) -> BatchUpdate:
+    """updates: iterable of (u, v, is_del). Pads to `pad_to` slots."""
+    ups = list(updates)
+    u_count = len(ups)
+    size = pad_to or max(u_count, 1)
+    src = np.zeros(size, np.int32)
+    dst = np.zeros(size, np.int32)
+    is_del = np.zeros(size, bool)
+    valid = np.zeros(size, bool)
+    for i, (a, b, d) in enumerate(ups):
+        src[i], dst[i], is_del[i], valid[i] = a, b, d, True
+    return BatchUpdate(jnp.asarray(src), jnp.asarray(dst),
+                       jnp.asarray(is_del), jnp.asarray(valid))
+
+
+def apply_batch(g: Graph, b: BatchUpdate) -> Graph:
+    """Apply a batch update, returning G'.
+
+    Deletions: clear validity of matching slots (both directions).
+    Insertions: write both directions into the first free slot pair.
+    Invalid (padded) updates are ignored.
+    """
+    # --- deletions ---------------------------------------------------------
+    # Undirected match on canonical (min, max) endpoints; [E2, U] compare.
+    del_mask_u = b.is_del & b.valid
+    g_lo = jnp.minimum(g.src, g.dst)
+    g_hi = jnp.maximum(g.src, g.dst)
+    b_lo = jnp.where(del_mask_u, jnp.minimum(b.src, b.dst), -1)
+    b_hi = jnp.where(del_mask_u, jnp.maximum(b.src, b.dst), -1)
+    hit = jnp.any((g_lo[:, None] == b_lo[None, :])
+                  & (g_hi[:, None] == b_hi[None, :]), axis=1)
+    valid = g.valid & ~hit
+
+    # --- insertions --------------------------------------------------------
+    ins_mask = (~b.is_del) & b.valid
+    u_slots = b.src.shape[0]
+    # Free slot *pairs* (even index free & odd index free).
+    pair_free = ~(valid[0::2] | valid[1::2])
+    # Rank of each insertion among valid insertions.
+    ins_rank = jnp.cumsum(ins_mask) - 1
+    # The k-th free pair index, for k = 0..U-1.
+    free_pair_idx = jnp.nonzero(pair_free, size=u_slots,
+                                fill_value=pair_free.shape[0] - 1)[0]
+    pair_for_ins = free_pair_idx[jnp.clip(ins_rank, 0, u_slots - 1)]
+    even = 2 * pair_for_ins
+    odd = even + 1
+    # Non-insert rows scatter to an out-of-bounds index, which JAX drops —
+    # never to slot 0, where duplicate writes would clobber real inserts.
+    oob = jnp.int32(g.src.shape[0])
+    safe_even = jnp.where(ins_mask, even, oob)
+    safe_odd = jnp.where(ins_mask, odd, oob)
+    src = g.src.at[safe_even].set(b.src, mode="drop")
+    dst = g.dst.at[safe_even].set(b.dst, mode="drop")
+    src = src.at[safe_odd].set(b.dst, mode="drop")
+    dst = dst.at[safe_odd].set(b.src, mode="drop")
+    valid = valid.at[safe_even].set(True, mode="drop")
+    valid = valid.at[safe_odd].set(True, mode="drop")
+    return Graph(src, dst, valid, g.n)
+
+
+def to_numpy_adj(g: Graph) -> dict[int, set[int]]:
+    """Adjacency dict for the oracle / tests (host only)."""
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    valid = np.asarray(g.valid)
+    adj: dict[int, set[int]] = {v: set() for v in range(g.n)}
+    for s, d, ok in zip(src, dst, valid):
+        if ok:
+            adj[int(s)].add(int(d))
+    return adj

@@ -1,0 +1,108 @@
+"""Synthetic graph generators (host-side numpy) for tests and benchmarks.
+
+Complex networks in the paper are small-diameter power-law graphs; the
+Barabási–Albert generator reproduces that regime. Grid meshes feed
+GraphCast-style configs; molecule batches feed SchNet/DimeNet/MACE.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def barabasi_albert(n: int, m: int, seed: int = 0) -> np.ndarray:
+    """BA preferential attachment; returns unique undirected edges [E, 2]."""
+    rng = np.random.default_rng(seed)
+    targets = list(range(m))
+    repeated: list[int] = []
+    edges = []
+    for v in range(m, n):
+        for t in set(targets):
+            edges.append((v, t))
+        repeated.extend(targets)
+        repeated.extend([v] * m)
+        targets = [int(repeated[rng.integers(len(repeated))])
+                   for _ in range(m)]
+    return _dedupe(np.asarray(edges, np.int32))
+
+
+def erdos_renyi(n: int, p: float, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    rows, cols = np.triu_indices(n, k=1)
+    keep = rng.random(rows.shape[0]) < p
+    return np.stack([rows[keep], cols[keep]], axis=1).astype(np.int32)
+
+
+def random_connected(n: int, extra_edges: int, seed: int = 0) -> np.ndarray:
+    """Random tree + extra random edges — always connected."""
+    rng = np.random.default_rng(seed)
+    edges = [(v, int(rng.integers(v))) for v in range(1, n)]
+    for _ in range(extra_edges):
+        u, v = rng.integers(n), rng.integers(n)
+        if u != v:
+            edges.append((int(u), int(v)))
+    return _dedupe(np.asarray(edges, np.int32))
+
+
+def grid_mesh(rows: int, cols: int) -> np.ndarray:
+    """4-connected grid (GraphCast-style regular mesh)."""
+    idx = np.arange(rows * cols).reshape(rows, cols)
+    e = []
+    e.append(np.stack([idx[:, :-1].ravel(), idx[:, 1:].ravel()], axis=1))
+    e.append(np.stack([idx[:-1, :].ravel(), idx[1:, :].ravel()], axis=1))
+    return np.concatenate(e).astype(np.int32)
+
+
+def molecule_batch(n_mols: int, atoms_per_mol: int, seed: int = 0
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Batched random molecules: positions [N,3] + radius-graph edges."""
+    rng = np.random.default_rng(seed)
+    pos = rng.normal(size=(n_mols * atoms_per_mol, 3)).astype(np.float32)
+    edges = []
+    for m in range(n_mols):
+        base = m * atoms_per_mol
+        p = pos[base:base + atoms_per_mol]
+        d = np.linalg.norm(p[:, None] - p[None, :], axis=-1)
+        src, dst = np.nonzero((d < 1.8) & (d > 0))
+        keep = src < dst
+        edges.append(np.stack([src[keep] + base, dst[keep] + base], axis=1))
+    return pos, np.concatenate(edges).astype(np.int32)
+
+
+def random_batch_updates(edges: np.ndarray, n: int, n_ins: int, n_del: int,
+                         seed: int = 0) -> list[tuple[int, int, bool]]:
+    """Valid updates: deletions sampled from existing edges, insertions are
+    fresh non-edges (paper §3: invalid updates are ignored)."""
+    rng = np.random.default_rng(seed)
+    existing = {(min(u, v), max(u, v)) for u, v in edges}
+    out: list[tuple[int, int, bool]] = []
+    if n_del:
+        sel = rng.choice(len(edges), size=min(n_del, len(edges)),
+                         replace=False)
+        chosen = set()
+        for i in sel:
+            u, v = int(edges[i, 0]), int(edges[i, 1])
+            out.append((u, v, True))
+            chosen.add((min(u, v), max(u, v)))
+    else:
+        chosen = set()
+    tries = 0
+    while sum(1 for e in out if not e[2]) < n_ins and tries < 100 * n_ins + 100:
+        tries += 1
+        u, v = int(rng.integers(n)), int(rng.integers(n))
+        key = (min(u, v), max(u, v))
+        if u == v or key in existing or key in chosen:
+            continue
+        chosen.add(key)
+        out.append((u, v, False))
+    rng.shuffle(out)
+    return out
+
+
+def _dedupe(edges: np.ndarray) -> np.ndarray:
+    if edges.size == 0:
+        return edges.reshape(0, 2)
+    lo = np.minimum(edges[:, 0], edges[:, 1])
+    hi = np.maximum(edges[:, 0], edges[:, 1])
+    keep = lo != hi
+    uniq = np.unique(np.stack([lo[keep], hi[keep]], axis=1), axis=0)
+    return uniq.astype(np.int32)

@@ -1,0 +1,59 @@
+"""Masked segment-op wrappers: the message-passing substrate.
+
+Both BatchHL's relaxation sweeps and the GNN models route through these, so
+the Pallas `edge_relax` kernel can be swapped in at one seam
+(`use_kernel=True` routes to kernels.edge_relax.ops when shapes allow).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_segment_min(data: jax.Array, segment_ids: jax.Array,
+                       num_segments: int, mask: jax.Array,
+                       fill: jax.Array) -> jax.Array:
+    """segment_min over masked entries; empty segments get `fill`."""
+    data = jnp.where(mask, data, fill)
+    out = jax.ops.segment_min(data, segment_ids, num_segments=num_segments)
+    return jnp.minimum(out, fill)  # clamp +inf sentinels from empty segments
+
+
+def masked_segment_sum(data: jax.Array, segment_ids: jax.Array,
+                       num_segments: int, mask: jax.Array) -> jax.Array:
+    if mask is not None:
+        zero = jnp.zeros((), data.dtype)
+        data = jnp.where(
+            mask.reshape(mask.shape + (1,) * (data.ndim - mask.ndim)),
+            data, zero)
+    return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+
+
+def masked_segment_max(data: jax.Array, segment_ids: jax.Array,
+                       num_segments: int, mask: jax.Array,
+                       fill: jax.Array) -> jax.Array:
+    data = jnp.where(mask, data, fill)
+    out = jax.ops.segment_max(data, segment_ids, num_segments=num_segments)
+    return jnp.maximum(out, fill)
+
+
+def masked_segment_mean(data: jax.Array, segment_ids: jax.Array,
+                        num_segments: int, mask: jax.Array) -> jax.Array:
+    s = masked_segment_sum(data, segment_ids, num_segments, mask)
+    cnt = jax.ops.segment_sum(mask.astype(data.dtype), segment_ids,
+                              num_segments=num_segments)
+    cnt = jnp.maximum(cnt, 1)
+    return s / cnt.reshape(cnt.shape + (1,) * (s.ndim - cnt.ndim))
+
+
+def edge_relax_sweep(keys: jax.Array, src: jax.Array, dst: jax.Array,
+                     edge_mask: jax.Array, step: jax.Array | int,
+                     n: int, inf: jax.Array) -> jax.Array:
+    """One relaxation wave: cand[v] = min over valid edges (u,v) of keys[u]+step.
+
+    The hot loop of construction / batch search / batch repair. `keys` may be
+    [V] or batched [..., V] (vmapped by callers).
+    """
+    gathered = keys[src]
+    cand = jnp.minimum(gathered + step, inf)
+    return masked_segment_min(cand, dst, n, edge_mask, inf)

@@ -1,0 +1,1 @@
+from repro.kernels.edge_relax import kernel, ops, ref  # noqa: F401

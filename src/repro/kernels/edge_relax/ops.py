@@ -1,0 +1,51 @@
+"""Jit'd wrapper: tiled Pallas edge relaxation with jnp fallback.
+
+`BlockedGraph` carries the one-off destination-block tiling; re-tiling is
+needed only when topology slots change (insertions), not per wave.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.edge_relax import kernel, ref
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("src_t", "dstloc_t", "valid_t"),
+         meta_fields=("n", "block_v"))
+@dataclasses.dataclass(frozen=True)
+class BlockedGraph:
+    src_t: jax.Array
+    dstloc_t: jax.Array
+    valid_t: jax.Array
+    n: int
+    block_v: int
+
+
+def prepare(src, dst, valid, n: int, block_v: int = 512) -> BlockedGraph:
+    src_t, dstloc_t, valid_t, bv = kernel.block_edges(
+        np.asarray(src), np.asarray(dst), np.asarray(valid), n, block_v)
+    return BlockedGraph(jnp.asarray(src_t), jnp.asarray(dstloc_t),
+                        jnp.asarray(valid_t), n, bv)
+
+
+def edge_relax(keys: jax.Array, bg: BlockedGraph, step,
+               use_pallas: bool | None = None) -> jax.Array:
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    interpret = jax.default_backend() != "tpu"
+    if use_pallas or interpret is False:
+        return kernel.edge_relax_pallas(keys, bg.src_t, bg.dstloc_t,
+                                        bg.valid_t, step, bg.n, bg.block_v,
+                                        interpret=interpret)
+    # jnp fallback on the tiled representation (same math, XLA segment_min).
+    flat_dst = (bg.dstloc_t
+                + (jnp.arange(bg.src_t.shape[0]) * bg.block_v)[:, None])
+    return ref.edge_relax(keys, bg.src_t.reshape(-1), flat_dst.reshape(-1),
+                          bg.valid_t.reshape(-1) != 0, step,
+                          bg.src_t.shape[0] * bg.block_v)[:bg.n]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the edge-relaxation kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF32 = 1 << 29  # plain int: pallas kernels must not capture traced constants
+
+
+def edge_relax(keys: jax.Array, src: jax.Array, dst: jax.Array,
+               valid: jax.Array, step, n: int) -> jax.Array:
+    """cand[v] = min over valid edges (u,v) of keys[u] + step; INF if none."""
+    cand = jnp.minimum(keys[src] + step, INF32)
+    cand = jnp.where(valid, cand, INF32)
+    out = jax.ops.segment_min(cand, dst, num_segments=n)
+    return jnp.minimum(out, INF32)

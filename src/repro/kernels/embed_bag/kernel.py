@@ -1,0 +1,62 @@
+"""Embedding-bag kernel: weighted gather-reduce over a sharded table.
+
+    out[b, :] = Σ_l  w[b, l] · table[idx[b, l], :]
+
+JAX has no native EmbeddingBag; this is the framework's own (taxonomy
+§B.6 — the recsys hot path, also reused as the GNN neighbor-feature
+gather). The batch axis is tiled; each grid step gathers its [BB, L] bag
+rows from the VMEM-resident table shard and contracts the bag axis with
+the per-sample weights — the contraction maps onto the MXU as a
+[BB, L] × [L·gather] weighted reduce realized via einsum.
+
+Production layout: the table is row-sharded over the mesh (`model`×`data`);
+each device's shard (rows_local × D ≤ a few MB after sharding a 10⁷-row
+table 256-way) fits VMEM; out-of-shard indices are masked to row 0 with
+weight 0 by the ops wrapper, and partial bags are summed with psum — the
+standard sharded-embedding reduce-scatter pattern.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BB = 128
+
+
+def _embed_bag_kernel(table_ref, idx_ref, w_ref, o_ref):
+    table = table_ref[...]        # [N, D] (device shard)
+    idx = idx_ref[...]            # [BB, L]
+    w = w_ref[...]                # [BB, L]
+    rows = jnp.take(table, idx.reshape(-1), axis=0)          # [BB*L, D]
+    rows = rows.reshape(idx.shape[0], idx.shape[1], -1)      # [BB, L, D]
+    o_ref[...] = jnp.einsum("bl,bld->bd", w, rows,
+                            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def embed_bag_pallas(table: jax.Array, idx: jax.Array, weights: jax.Array,
+                     block_b: int = DEFAULT_BB,
+                     interpret: bool = True) -> jax.Array:
+    """table [N,D] f32, idx [B,L] int32, weights [B,L] f32 → [B,D] f32."""
+    b, l = idx.shape
+    n, d = table.shape
+    bp = -(-b // block_b) * block_b
+    idx_p = jnp.zeros((bp, l), jnp.int32).at[:b].set(idx)
+    w_p = jnp.zeros((bp, l), weights.dtype).at[:b].set(weights)
+
+    out = pl.pallas_call(
+        _embed_bag_kernel,
+        grid=(bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_b, l), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, l), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, d), jnp.float32),
+        interpret=interpret,
+    )(table.astype(jnp.float32), idx_p, w_p)
+    return out[:b]

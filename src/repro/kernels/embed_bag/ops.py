@@ -1,0 +1,30 @@
+"""Jit'd wrapper for embedding-bag with mean/sum modes and masking."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embed_bag import kernel, ref
+
+
+def embed_bag(table: jax.Array, idx: jax.Array,
+              mask: jax.Array | None = None, mode: str = "sum",
+              use_pallas: bool | None = None) -> jax.Array:
+    """EmbeddingBag(table, idx) with optional validity mask.
+
+    table [N, D]; idx [B, L] int32; mask [B, L] bool. mode ∈ {sum, mean}.
+    """
+    b, l = idx.shape
+    w = jnp.ones((b, l), jnp.float32)
+    if mask is not None:
+        w = w * mask.astype(jnp.float32)
+        idx = jnp.where(mask, idx, 0)
+    if mode == "mean":
+        denom = jnp.maximum(w.sum(axis=1, keepdims=True), 1.0)
+        w = w / denom
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        interpret = jax.default_backend() != "tpu"
+        return kernel.embed_bag_pallas(table, idx, w, interpret=interpret)
+    return ref.embed_bag(table, idx, w)

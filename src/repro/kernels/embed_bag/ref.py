@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for embedding-bag (take + weighted segment reduce)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embed_bag(table: jax.Array, idx: jax.Array,
+              weights: jax.Array) -> jax.Array:
+    """out[b] = Σ_l weights[b,l] · table[idx[b,l]]."""
+    rows = jnp.take(table, idx, axis=0)                       # [B, L, D]
+    return jnp.einsum("bl,bld->bd", weights.astype(jnp.float32),
+                      rows.astype(jnp.float32))

@@ -1,0 +1,1 @@
+from repro.kernels.minplus import kernel, ops, ref  # noqa: F401

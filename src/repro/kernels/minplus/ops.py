@@ -1,0 +1,26 @@
+"""Jit'd public wrapper for the min-plus kernel with CPU fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.minplus import kernel, ref
+
+
+def minplus_bound(s: jax.Array, h: jax.Array, t: jax.Array,
+                  use_pallas: bool | None = None) -> jax.Array:
+    """Eq.-3 upper bound for a query batch. S/T [B,R], H [R,R] int32 → [B].
+
+    use_pallas=None auto-selects: the Pallas kernel on TPU, interpret-mode
+    Pallas for small validation runs, and the jnp oracle otherwise.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        interpret = jax.default_backend() != "tpu"
+        return kernel.minplus_pallas(s.astype(jnp.int32),
+                                     h.astype(jnp.int32),
+                                     t.astype(jnp.int32),
+                                     interpret=interpret)
+    return ref.minplus_bound(s.astype(jnp.int32), h.astype(jnp.int32),
+                             t.astype(jnp.int32))

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the min-plus query-bound kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF32 = 1 << 29  # plain int: pallas kernels must not capture traced constants
+
+
+def minplus_bound(s: jax.Array, h: jax.Array, t: jax.Array) -> jax.Array:
+    """out[b] = min_{i,j} S[b,i] + H[i,j] + T[b,j] (int32, INF-saturating)."""
+    mid = jnp.min(jnp.minimum(s[:, :, None] + h[None, :, :], INF32), axis=1)
+    return jnp.min(jnp.minimum(mid + t, INF32), axis=1)

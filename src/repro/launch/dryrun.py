@@ -1,0 +1,156 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede any jax import: jax locks the device count on first init.
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax                                   # noqa: E402
+from jax.sharding import NamedSharding       # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.configs import common                    # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces:
+  * compiled.memory_analysis()  — proves the program fits HBM,
+  * compiled.cost_analysis()    — per-device HLO FLOPs / bytes,
+  * per-type collective bytes parsed from the post-SPMD HLO text,
+and writes one JSON record per cell under experiments/dryrun/.
+"""
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in the per-device HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # result = shape op-name(...)
+        for coll in _COLLECTIVES:
+            if f" {coll}(" in stripped or f" {coll}-start(" in stripped:
+                m = _SHAPE_RE.search(stripped.split("=", 1)[-1])
+                if m:
+                    out[coll] += _shape_bytes(m.group(1), m.group(2))
+                    counts[coll] += 1
+                break
+    out_total = sum(out.values())
+    return {"per_type_bytes": out, "counts": counts, "total_bytes": out_total}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = common.build_cell(arch, shape, pod=multi_pod)
+
+    def to_sharding(spec_tree):
+        return jax.tree.map(
+            lambda spec: NamedSharding(mesh, spec), spec_tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    t0 = time.time()
+    with mesh:
+        in_sh = tuple(to_sharding(s) for s in cell.in_specs)
+        out_sh = to_sharding(cell.out_specs)
+        jitted = jax.jit(cell.step_fn, in_shardings=in_sh,
+                         out_shardings=out_sh)
+        lowered = jitted.lower(*cell.arg_specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        coll = parse_collective_bytes(compiled.as_text())
+
+    record = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": 512 if multi_pod else 256,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        },
+        "cost": {k: cost.get(k) for k in
+                 ("flops", "bytes accessed", "transcendentals")},
+        "collectives": coll,
+        "flops_note": cell.flops_note,
+    }
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="arch id; default = all assigned archs")
+    ap.add_argument("--shape", default=None,
+                    help="shape name; default = all shapes of the arch")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--include-batchhl", action="store_true",
+                    help="also dry-run the paper's own BatchHL service")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(common.ALL_ARCHS)
+    if args.include_batchhl and "batchhl" not in archs:
+        archs.append("batchhl")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        shapes = [args.shape] if args.shape else \
+            list(common.arch_shapes(arch))
+        for shape in shapes:
+            for multi_pod in meshes:
+                tag = f"{arch}__{shape}__{'multi' if multi_pod else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                try:
+                    rec = run_cell(arch, shape, multi_pod)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    n_ok += 1
+                    print(f"OK   {tag}: compile={rec['compile_s']}s "
+                          f"flops={rec['cost'].get('flops')} "
+                          f"coll={rec['collectives']['total_bytes']}")
+                except Exception as e:  # noqa: BLE001
+                    n_fail += 1
+                    print(f"FAIL {tag}: {e}")
+                    traceback.print_exc()
+    print(f"dry-run complete: {n_ok} ok, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

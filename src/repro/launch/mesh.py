@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing never touches jax
+device state; the dry-run entrypoint sets XLA_FLAGS *before* any jax import.
+
+Mesh geometry (TPU v5e pods): one pod = 256 chips as (data=16, model=16);
+multi-pod = 2 pods → (pod=2, data=16, model=16) with the `pod` axis mapped
+across DCN. Axis roles: `data` = batch/FSDP/vertex shards, `model` = tensor/
+expert/landmark parallel, `pod` = extra data parallelism across pods.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate mesh for CPU tests: all axes size 1 except data."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

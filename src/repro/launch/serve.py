@@ -1,0 +1,107 @@
+"""BatchHL distance-query serving driver — the paper's system end-to-end.
+
+    PYTHONPATH=src python -m repro.launch.serve --n 2000 --batches 5
+
+Loop per tick: ingest a batch of edge updates (insert+delete mix), run
+BatchHL (batch search + batch repair), answer a query batch, report
+latencies and labelling size. Optionally verifies every answer against a
+BFS oracle (--verify), and checkpoints the labelling for restart.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs import generators as gen
+from repro.graphs.coo import from_edges, make_batch, to_numpy_adj
+from repro.core.construct import build_labelling, select_landmarks_by_degree
+from repro.core.batch import batchhl_update
+from repro.core.query import batched_query
+from repro.core import ref
+from repro.checkpoint import manager as ckpt
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=2000)
+    ap.add_argument("--deg", type=int, default=4)
+    ap.add_argument("--landmarks", type=int, default=16)
+    ap.add_argument("--batches", type=int, default=5)
+    ap.add_argument("--batch-size", type=int, default=100)
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--verify", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    edges = gen.barabasi_albert(args.n, args.deg, seed=0)
+    cap = edges.shape[0] + args.batches * args.batch_size + 64
+    g = from_edges(args.n, edges, cap)
+    landmarks = select_landmarks_by_degree(g, args.landmarks)
+
+    t0 = time.time()
+    lab = build_labelling(g, landmarks)
+    jax.block_until_ready(lab.dist)
+    print(f"constructed labelling: {args.n} vertices, "
+          f"{edges.shape[0]} edges, R={args.landmarks}, "
+          f"size={int(lab.label_size())}, {time.time() - t0:.2f}s")
+
+    cur_edges = edges.copy()
+    rng = np.random.default_rng(7)
+    for tick in range(args.batches):
+        ups = gen.random_batch_updates(
+            cur_edges, args.n, n_ins=args.batch_size // 2,
+            n_del=args.batch_size // 2, seed=100 + tick)
+        batch = make_batch(ups, pad_to=args.batch_size)
+        t0 = time.time()
+        g, lab, aff = batchhl_update(g, batch, lab, improved=True)
+        jax.block_until_ready(lab.dist)
+        t_upd = time.time() - t0
+
+        qs = jnp.asarray(rng.integers(0, args.n, args.queries), jnp.int32)
+        qt = jnp.asarray(rng.integers(0, args.n, args.queries), jnp.int32)
+        t0 = time.time()
+        dist = batched_query(g, lab, qs, qt)
+        jax.block_until_ready(dist)
+        t_q = time.time() - t0
+
+        print(f"tick {tick}: update {t_upd * 1e3:.1f}ms "
+              f"({int(jnp.sum(aff))} affected) | "
+              f"{args.queries} queries {t_q * 1e3:.1f}ms "
+              f"({t_q / args.queries * 1e6:.0f}us/q) | "
+              f"label size {int(lab.label_size())}")
+
+        # maintain host-side edge list for the next update generator
+        adjset = {(min(a, b), max(a, b)) for a, b in cur_edges}
+        for u, v, is_del in ups:
+            k = (min(u, v), max(u, v))
+            if is_del:
+                adjset.discard(k)
+            else:
+                adjset.add(k)
+        cur_edges = np.asarray(sorted(adjset), np.int32)
+
+        if args.verify:
+            adj = to_numpy_adj(g)
+            wrong = 0
+            for i in range(min(64, args.queries)):
+                o = ref.pair_distance(adj, args.n, int(qs[i]), int(qt[i]))
+                got = float(dist[i])
+                o = got if (o == ref.INF and got >= 1e8) else o
+                if int(qs[i]) == int(qt[i]):
+                    o = 0
+                wrong += int(got != o)
+            print(f"  verify: {wrong}/64 mismatches")
+
+        if args.ckpt_dir:
+            ckpt.save(args.ckpt_dir, tick + 1,
+                      {"dist": lab.dist, "hub": lab.hub,
+                       "highway": lab.highway, "landmarks": lab.landmarks})
+    print("serve loop done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,396 @@
+"""GNN model zoo: SchNet, DimeNet, MACE(-lite), GraphCast.
+
+All four run on the same padded-COO + segment-op substrate as BatchHL's
+relaxation sweeps (DESIGN.md §5): message passing is gather → elementwise →
+`segment_sum` into destination nodes, with validity masks for padding.
+
+Input convention (`GraphBatch`): node features [N, F], positions [N, 3],
+directed edges (src, dst) [E] + edge mask, optional graph ids [N] for
+batched small graphs, and (DimeNet only) capped triplet index lists.
+
+Kernel regimes per taxonomy §B.3: SchNet = RBF filter + scatter;
+DimeNet = triplet gather (not expressible as SpMM); MACE = equivariant
+tensor products (implemented for l ∈ {0,1,2} — see DESIGN.md
+§Arch-applicability for the Clebsch–Gordan simplification); GraphCast =
+encoder-processor-decoder interaction networks over a grid↔mesh bipartite
+topology.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.segment import masked_segment_sum, masked_segment_mean
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    arch: str                  # schnet | dimenet | mace | graphcast
+    d_in: int
+    d_hidden: int
+    d_out: int
+    # schnet
+    n_interactions: int = 3
+    n_rbf: int = 300
+    cutoff: float = 10.0
+    # dimenet
+    n_blocks: int = 6
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    # mace
+    n_layers: int = 2
+    l_max: int = 2
+    correlation: int = 3
+    mace_n_rbf: int = 8
+    # graphcast
+    n_process_layers: int = 16
+    mesh_ratio: int = 16       # grid nodes per mesh node (refinement proxy)
+    dtype: Any = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+def _mlp_params(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{
+        "w": (jax.random.normal(k, (a, b), jnp.float32)
+              / math.sqrt(a)).astype(dtype),
+        "b": jnp.zeros((b,), dtype),
+    } for k, (a, b) in zip(ks, zip(dims[:-1], dims[1:]))]
+
+
+def _mlp_shapes(dims, dtype):
+    return [{"w": jax.ShapeDtypeStruct((a, b), dtype),
+             "b": jax.ShapeDtypeStruct((b,), dtype)}
+            for a, b in zip(dims[:-1], dims[1:])]
+
+
+def _mlp(layers, x, act=jax.nn.silu, final_act=False):
+    for i, l in enumerate(layers):
+        x = jnp.einsum("...a,ab->...b", x, l["w"],
+                       preferred_element_type=jnp.float32).astype(x.dtype) \
+            + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def _rbf_expand(d, n_rbf, cutoff):
+    """Gaussian radial basis with cosine cutoff envelope."""
+    centers = jnp.linspace(0.0, cutoff, n_rbf)
+    gamma = n_rbf / cutoff
+    phi = jnp.exp(-gamma * (d[..., None] - centers) ** 2)
+    env = 0.5 * (jnp.cos(jnp.pi * jnp.clip(d / cutoff, 0, 1)) + 1.0)
+    return phi * env[..., None]
+
+
+def _edge_vectors(pos, src, dst):
+    vec = pos[dst] - pos[src]
+    d = jnp.sqrt(jnp.sum(vec * vec, axis=-1) + 1e-12)
+    return vec / d[:, None], d
+
+
+# ---------------------------------------------------------------------------
+# SchNet
+# ---------------------------------------------------------------------------
+
+def schnet_init(key, c: GNNConfig):
+    ks = jax.random.split(key, 3 + c.n_interactions * 3)
+    p = {"embed": _mlp_params(ks[0], [c.d_in, c.d_hidden], c.dtype),
+         "out": _mlp_params(ks[1], [c.d_hidden, c.d_hidden, c.d_out],
+                            c.dtype)}
+    p["blocks"] = [{
+        "filter": _mlp_params(ks[2 + 3 * i], [c.n_rbf, c.d_hidden,
+                                              c.d_hidden], c.dtype),
+        "in_lin": _mlp_params(ks[3 + 3 * i], [c.d_hidden, c.d_hidden],
+                              c.dtype),
+        "out_mlp": _mlp_params(ks[4 + 3 * i], [c.d_hidden, c.d_hidden,
+                                               c.d_hidden], c.dtype),
+    } for i in range(c.n_interactions)]
+    return p
+
+
+def schnet_forward(p, batch, c: GNNConfig):
+    x = _mlp(p["embed"], batch["node_feat"].astype(c.dtype))
+    src, dst, emask = batch["src"], batch["dst"], batch["edge_mask"]
+    n = x.shape[0]
+    _, d = _edge_vectors(batch["positions"], src, dst)
+    rbf = _rbf_expand(d, c.n_rbf, c.cutoff).astype(c.dtype)
+    for blk in p["blocks"]:
+        w = _mlp(blk["filter"], rbf)                       # [E, H]
+        h = _mlp(blk["in_lin"], x)
+        msg = h[src] * w
+        agg = masked_segment_sum(msg, dst, n, emask)
+        x = x + _mlp(blk["out_mlp"], agg)
+    return _mlp(p["out"], x)                               # [N, d_out]
+
+
+# ---------------------------------------------------------------------------
+# DimeNet (directional message passing with triplet interactions)
+# ---------------------------------------------------------------------------
+
+def dimenet_init(key, c: GNNConfig):
+    ks = jax.random.split(key, 5 + c.n_blocks * 4)
+    h = c.d_hidden
+    p = {
+        "edge_embed": _mlp_params(ks[0], [2 * c.d_in + c.n_radial, h],
+                                  c.dtype),
+        "rbf_lin": _mlp_params(ks[1], [c.n_radial, h], c.dtype),
+        "out": _mlp_params(ks[2], [h, h, c.d_out], c.dtype),
+        "bilinear": (jax.random.normal(
+            ks[3], (c.n_spherical * c.n_radial, c.n_bilinear, h),
+            jnp.float32) / math.sqrt(h)).astype(c.dtype),
+        "bl_proj": _mlp_params(ks[4], [c.n_bilinear * h, h], c.dtype),
+    }
+    p["blocks"] = [{
+        "msg_mlp": _mlp_params(ks[5 + 4 * i], [h, h, h], c.dtype),
+        "tri_kj": _mlp_params(ks[6 + 4 * i], [h, h], c.dtype),
+        "upd": _mlp_params(ks[7 + 4 * i], [h, h], c.dtype),
+        "out_edge": _mlp_params(ks[8 + 4 * i], [h, h], c.dtype),
+    } for i in range(c.n_blocks)]
+    return p
+
+
+def _sbf_expand(d, angle, c: GNNConfig):
+    """Simplified spherical basis: sin-radial × cos(m·angle) outer product.
+
+    (The exact DimeNet basis uses spherical Bessel × Legendre; this keeps
+    the same [n_spherical × n_radial] feature geometry — noted in DESIGN.)
+    """
+    dn = jnp.clip(d / c.cutoff, 1e-6, 1.0)
+    radial = jnp.sin(jnp.pi * jnp.arange(1, c.n_radial + 1) * dn[..., None])\
+        / dn[..., None]                                    # [T, n_radial]
+    ms = jnp.arange(c.n_spherical)
+    angular = jnp.cos(ms * angle[..., None])               # [T, n_spherical]
+    out = angular[..., :, None] * radial[..., None, :]
+    return out.reshape(out.shape[:-2] + (c.n_spherical * c.n_radial,))
+
+
+def dimenet_forward(p, batch, c: GNNConfig):
+    src, dst, emask = batch["src"], batch["dst"], batch["edge_mask"]
+    n = batch["node_feat"].shape[0]
+    e = src.shape[0]
+    x = batch["node_feat"].astype(c.dtype)
+    _, d = _edge_vectors(batch["positions"], src, dst)
+    rbf = _rbf_expand(d, c.n_radial, c.cutoff).astype(c.dtype)
+
+    m = _mlp(p["edge_embed"],
+             jnp.concatenate([x[src], x[dst], rbf], axis=-1))  # [E, H]
+
+    # Triplets: edge kj feeds edge ji where dst(kj) == src(ji).
+    t_kj, t_ji = batch["tri_kj"], batch["tri_ji"]          # [T] edge ids
+    t_mask = batch["tri_mask"]
+    angle = batch["tri_angle"]                             # [T]
+    d_kj = d[t_kj]
+    sbf = _sbf_expand(d_kj, angle, c).astype(c.dtype)      # [T, S*R]
+
+    for blk in p["blocks"]:
+        mk = _mlp(blk["tri_kj"], m)[t_kj]                  # [T, H]
+        w = jnp.einsum("ts,sbh->tbh", sbf, p["bilinear"],
+                       preferred_element_type=jnp.float32).astype(c.dtype)
+        tri_msg = (w * mk[:, None, :]).reshape(sbf.shape[0], -1)
+        tri_msg = _mlp(p["bl_proj"], tri_msg)              # [T, H]
+        agg = masked_segment_sum(tri_msg, t_ji, e, t_mask)
+        m = m + _mlp(blk["upd"], jax.nn.silu(
+            _mlp(blk["msg_mlp"], m) + agg))
+        m = m + _mlp(blk["out_edge"], _mlp(p["rbf_lin"], rbf) * m)
+
+    node_agg = masked_segment_sum(m, dst, n, emask)
+    return _mlp(p["out"], node_agg)
+
+
+# ---------------------------------------------------------------------------
+# MACE-lite (E(3)-equivariant, l ∈ {0,1,2}, product correlation stack)
+# ---------------------------------------------------------------------------
+
+def mace_init(key, c: GNNConfig):
+    h = c.d_hidden
+    ks = jax.random.split(key, 3 + c.n_layers * 6)
+    p = {"embed": _mlp_params(ks[0], [c.d_in, h], c.dtype),
+         "out": _mlp_params(ks[1], [h, h, c.d_out], c.dtype)}
+    p["layers"] = [{
+        "radial": _mlp_params(ks[2 + 6 * i], [c.mace_n_rbf, h, 3 * h],
+                              c.dtype),
+        "mix0": _mlp_params(ks[3 + 6 * i], [h, h], c.dtype),
+        "mix1": (jax.random.normal(ks[4 + 6 * i], (h, h), jnp.float32)
+                 / math.sqrt(h)).astype(c.dtype),
+        "mix2": (jax.random.normal(ks[5 + 6 * i], (h, h), jnp.float32)
+                 / math.sqrt(h)).astype(c.dtype),
+        "prod": _mlp_params(ks[6 + 6 * i], [3 * h, h], c.dtype),
+        "upd": _mlp_params(ks[7 + 6 * i], [2 * h, h], c.dtype),
+    } for i in range(c.n_layers)]
+    return p
+
+
+def mace_forward(p, batch, c: GNNConfig):
+    """Equivariant message passing. Features: s [N,H] scalars,
+    v [N,H,3] vectors (l=1), t [N,H,3,3] traceless-symmetric (l=2)."""
+    src, dst, emask = batch["src"], batch["dst"], batch["edge_mask"]
+    n = batch["node_feat"].shape[0]
+    s = _mlp(p["embed"], batch["node_feat"].astype(c.dtype))
+    h = s.shape[-1]
+    v = jnp.zeros((n, h, 3), c.dtype)
+    t = jnp.zeros((n, h, 3, 3), c.dtype)
+
+    u, d = _edge_vectors(batch["positions"], src, dst)     # [E,3], [E]
+    rbf = _rbf_expand(d, c.mace_n_rbf, c.cutoff).astype(c.dtype)
+    # Spherical harmonics of edge direction (unnormalised):
+    y1 = u                                                 # l=1: [E, 3]
+    eye = jnp.eye(3, dtype=c.dtype)
+    y2 = (u[:, :, None] * u[:, None, :]
+          - eye[None] / 3.0)                               # l=2: [E, 3, 3]
+
+    for lay in p["layers"]:
+        w = _mlp(lay["radial"], rbf)                       # [E, 3H]
+        w0, w1, w2 = jnp.split(w, 3, axis=-1)
+        # messages (each term is manifestly equivariant)
+        m0 = w0 * s[src]                                   # scalar msg
+        m1 = (w1 * s[src])[..., None] * y1[:, None, :] \
+            + w1[..., None] * v[src]                       # vector msg
+        m2 = (w2 * s[src])[..., None, None] * y2[:, None, :, :] \
+            + w2[..., None, None] * t[src]                 # l=2 msg
+        a0 = masked_segment_sum(m0, dst, n, emask)
+        a1 = masked_segment_sum(m1, dst, n, emask)
+        a2 = masked_segment_sum(m2, dst, n, emask)
+
+        # Correlation (order ≤ 3) via invariant contractions:
+        inv1 = jnp.sum(a1 * a1, axis=-1)                   # |v|² per channel
+        inv2 = jnp.sum(a2 * a2, axis=(-1, -2))             # |t|²
+        inv3 = jnp.einsum("nhi,nhij,nhj->nh", a1, a2, a1,
+                          preferred_element_type=jnp.float32
+                          ).astype(c.dtype)                # v·t·v (order 3)
+        prod = _mlp(lay["prod"],
+                    jnp.concatenate([a0, inv1 + inv2, inv3], -1))
+        s = s + _mlp(lay["upd"], jnp.concatenate([s, prod], -1))
+        v = v + jnp.einsum("nhi,hg->ngi", a1, lay["mix1"],
+                           preferred_element_type=jnp.float32
+                           ).astype(c.dtype)
+        t = t + jnp.einsum("nhij,hg->ngij", a2, lay["mix2"],
+                           preferred_element_type=jnp.float32
+                           ).astype(c.dtype)
+
+    return _mlp(p["out"], s)
+
+
+# ---------------------------------------------------------------------------
+# GraphCast (encoder – processor – decoder over grid↔mesh)
+# ---------------------------------------------------------------------------
+
+def _interaction_params(key, h, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"edge_mlp": _mlp_params(k1, [3 * h, h, h], dtype),
+            "node_mlp": _mlp_params(k2, [2 * h, h, h], dtype)}
+
+
+def _interaction(p, x_src, x_dst, e_feat, src, dst, emask, n_dst):
+    """GraphNet block: edge update then node update (sum aggregation)."""
+    e_in = jnp.concatenate([e_feat, x_src[src], x_dst[dst]], axis=-1)
+    e_new = e_feat + _mlp(p["edge_mlp"], e_in)
+    agg = masked_segment_sum(e_new, dst, n_dst, emask)
+    x_new = x_dst + _mlp(p["node_mlp"],
+                         jnp.concatenate([x_dst, agg], axis=-1))
+    return x_new, e_new
+
+
+def graphcast_init(key, c: GNNConfig):
+    h = c.d_hidden
+    ks = jax.random.split(key, 6 + c.n_process_layers)
+    return {
+        "grid_embed": _mlp_params(ks[0], [c.d_in, h], c.dtype),
+        "mesh_embed": _mlp_params(ks[1], [4, h], c.dtype),
+        "e_g2m": _mlp_params(ks[2], [4, h], c.dtype),
+        "e_mesh": _mlp_params(ks[3], [4, h], c.dtype),
+        "e_m2g": _mlp_params(ks[4], [4, h], c.dtype),
+        "enc": _interaction_params(ks[5], h, c.dtype),
+        "proc": [_interaction_params(ks[6 + i], h, c.dtype)
+                 for i in range(c.n_process_layers)],
+        "dec": _interaction_params(ks[5], h, c.dtype),
+        "out": _mlp_params(ks[-1], [h, h, c.d_out], c.dtype),
+    }
+
+
+def _edge_geo(pos_src, pos_dst, src, dst):
+    rel = pos_dst[dst] - pos_src[src]
+    d = jnp.sqrt(jnp.sum(rel * rel, -1, keepdims=True) + 1e-12)
+    return jnp.concatenate([rel, d], axis=-1)              # [E, 4]
+
+
+def graphcast_forward(p, batch, c: GNNConfig):
+    """batch: grid node_feat/positions + mesh topology (precomputed):
+    mesh_pos [M,3], g2m (src=grid, dst=mesh), mesh edges, m2g edges."""
+    xg = _mlp(p["grid_embed"], batch["node_feat"].astype(c.dtype))
+    n_grid = xg.shape[0]
+    mesh_pos = batch["mesh_pos"]
+    n_mesh = mesh_pos.shape[0]
+    xm = _mlp(p["mesh_embed"],
+              _edge_geo(mesh_pos, mesh_pos,
+                        jnp.zeros((n_mesh,), jnp.int32),
+                        jnp.arange(n_mesh)))
+
+    # encoder: grid → mesh
+    eg = _mlp(p["e_g2m"], _edge_geo(batch["positions"], mesh_pos,
+                                    batch["g2m_src"], batch["g2m_dst"])
+              .astype(c.dtype))
+    xm, _ = _interaction(p["enc"], xg, xm, eg, batch["g2m_src"],
+                         batch["g2m_dst"], batch["g2m_mask"], n_mesh)
+
+    # processor: message passing on the mesh
+    em = _mlp(p["e_mesh"], _edge_geo(mesh_pos, mesh_pos,
+                                     batch["mesh_src"], batch["mesh_dst"])
+              .astype(c.dtype))
+    for blk in p["proc"]:
+        xm, em = _interaction(blk, xm, xm, em, batch["mesh_src"],
+                              batch["mesh_dst"], batch["mesh_mask"], n_mesh)
+
+    # decoder: mesh → grid
+    ed = _mlp(p["e_m2g"], _edge_geo(mesh_pos, batch["positions"],
+                                    batch["m2g_src"], batch["m2g_dst"])
+              .astype(c.dtype))
+    xg, _ = _interaction(p["dec"], xm, xg, ed, batch["m2g_src"],
+                         batch["m2g_dst"], batch["m2g_mask"], n_grid)
+    return _mlp(p["out"], xg)
+
+
+# ---------------------------------------------------------------------------
+# unified entry points
+# ---------------------------------------------------------------------------
+
+_INIT = {"schnet": schnet_init, "dimenet": dimenet_init, "mace": mace_init,
+         "graphcast": graphcast_init}
+_FWD = {"schnet": schnet_forward, "dimenet": dimenet_forward,
+        "mace": mace_forward, "graphcast": graphcast_forward}
+
+
+def init_params(key, c: GNNConfig):
+    return _INIT[c.arch](key, c)
+
+
+def forward(params, batch, c: GNNConfig):
+    return _FWD[c.arch](params, batch, c)
+
+
+def loss_fn(params, batch, c: GNNConfig) -> jax.Array:
+    """Node-level regression (molecular energies use graph-sum readout)."""
+    pred = forward(params, batch, c)
+    tgt = batch["targets"]
+    if "graph_ids" in batch:
+        n_graphs = tgt.shape[0]  # static: per-graph targets
+        pred = masked_segment_sum(pred, batch["graph_ids"], n_graphs,
+                                  batch["node_mask"])
+        diff = (pred - tgt).astype(jnp.float32)
+        return jnp.mean(diff * diff)
+    mask = batch.get("node_mask")
+    diff = (pred - tgt).astype(jnp.float32)
+    sq = jnp.sum(diff * diff, axis=-1)
+    if mask is not None:
+        sq = jnp.where(mask, sq, 0.0)
+        return jnp.sum(sq) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(sq)

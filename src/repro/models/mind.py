@@ -1,0 +1,143 @@
+"""MIND: Multi-Interest Network with Dynamic routing (recsys).
+
+Pipeline: item-embedding gather over user history → B2I capsule routing
+(3 iterations) extracting K=4 interest capsules → label-aware attention for
+training / max-over-interests scoring for retrieval.
+
+The embedding table is the huge-sparse-table hot path (taxonomy §B.6): a
+10⁷-row table row-sharded over the mesh; history lookup is the framework's
+own EmbeddingBag substrate (kernels/embed_bag for bag reductions; capsule
+routing needs per-item rows so the history gather stays a plain take).
+Retrieval scores 10⁶ candidates as one batched matmul over the
+candidate-sharded table — never a loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MindConfig:
+    name: str
+    n_items: int
+    embed_dim: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    hist_len: int = 50
+    dtype: Any = jnp.float32
+    temperature: float = 0.05
+
+
+def param_shapes(c: MindConfig) -> dict:
+    d = c.embed_dim
+    return {
+        "item_embed": jax.ShapeDtypeStruct((c.n_items, d), c.dtype),
+        "bilinear": jax.ShapeDtypeStruct((d, d), c.dtype),
+        "out_proj": jax.ShapeDtypeStruct((d, d), c.dtype),
+    }
+
+
+def param_specs(c: MindConfig, pod: bool = False) -> dict:
+    rows = ("model", "pod", "data") if pod else ("model", "data")
+    return {"item_embed": P(rows, None),
+            "bilinear": P(None, None),
+            "out_proj": P(None, None)}
+
+
+def init_params(key: jax.Array, c: MindConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = c.embed_dim
+    return {
+        "item_embed": (jax.random.normal(k1, (c.n_items, d), jnp.float32)
+                       * 0.1).astype(c.dtype),
+        "bilinear": (jax.random.normal(k2, (d, d), jnp.float32)
+                     / math.sqrt(d)).astype(c.dtype),
+        "out_proj": (jax.random.normal(k3, (d, d), jnp.float32)
+                     / math.sqrt(d)).astype(c.dtype),
+    }
+
+
+def _squash(x: jax.Array) -> jax.Array:
+    sq = jnp.sum(x * x, axis=-1, keepdims=True)
+    return (sq / (1.0 + sq)) * x / jnp.sqrt(sq + 1e-9)
+
+
+def extract_interests(params: dict, hist: jax.Array,
+                      hist_mask: jax.Array, c: MindConfig) -> jax.Array:
+    """B2I dynamic routing. hist [B, L] item ids → interests [B, K, D]."""
+    emb = jnp.take(params["item_embed"], hist, axis=0)     # [B, L, D]
+    u_hat = jnp.einsum("bld,de->ble", emb, params["bilinear"],
+                       preferred_element_type=jnp.float32
+                       ).astype(emb.dtype)                 # [B, L, D]
+    b_logit = jnp.zeros(hist.shape[:1] + (c.n_interests, hist.shape[1]),
+                        jnp.float32)                       # [B, K, L]
+    neg = jnp.asarray(-1e9, jnp.float32)
+    u_sg = jax.lax.stop_gradient(u_hat)
+    for it in range(c.capsule_iters):
+        logit = jnp.where(hist_mask[:, None, :], b_logit, neg)
+        w = jax.nn.softmax(logit, axis=1)                  # over interests
+        src = u_hat if it == c.capsule_iters - 1 else u_sg
+        z = jnp.einsum("bkl,bld->bkd", w.astype(src.dtype), src,
+                       preferred_element_type=jnp.float32
+                       ).astype(src.dtype)
+        caps = _squash(z.astype(jnp.float32)).astype(src.dtype)
+        if it < c.capsule_iters - 1:
+            b_logit = b_logit + jnp.einsum(
+                "bkd,bld->bkl", caps, u_sg,
+                preferred_element_type=jnp.float32)
+    return jnp.einsum("bkd,de->bke", caps, params["out_proj"],
+                      preferred_element_type=jnp.float32).astype(caps.dtype)
+
+
+def label_aware_user_vec(interests: jax.Array, target_emb: jax.Array,
+                         power: float = 2.0) -> jax.Array:
+    """Label-aware attention (paper eq. 8): pow-sharpened softmax over K."""
+    logits = jnp.einsum("bkd,bd->bk", interests, target_emb,
+                        preferred_element_type=jnp.float32)
+    w = jax.nn.softmax(logits * power, axis=-1)
+    return jnp.einsum("bk,bkd->bd", w.astype(interests.dtype), interests,
+                      preferred_element_type=jnp.float32
+                      ).astype(interests.dtype)
+
+
+def train_loss(params: dict, batch: dict, c: MindConfig) -> jax.Array:
+    """Sampled-softmax with in-batch negatives."""
+    interests = extract_interests(params, batch["hist"],
+                                  batch["hist_mask"], c)
+    tgt = jnp.take(params["item_embed"], batch["target"], axis=0)  # [B, D]
+    user = label_aware_user_vec(interests, tgt)            # [B, D]
+    logits = jnp.einsum("bd,cd->bc", user, tgt,
+                        preferred_element_type=jnp.float32)
+    logits = logits / c.temperature
+    labels = jnp.arange(logits.shape[0])
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], -1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def serve_scores(params: dict, batch: dict, c: MindConfig) -> jax.Array:
+    """Online inference: score candidate items. hist [B,L], cands [B,C]
+    → scores [B, C] (max over interests)."""
+    interests = extract_interests(params, batch["hist"],
+                                  batch["hist_mask"], c)
+    cand = jnp.take(params["item_embed"], batch["cands"], axis=0)  # [B,C,D]
+    scores = jnp.einsum("bkd,bcd->bkc", interests, cand,
+                        preferred_element_type=jnp.float32)
+    return jnp.max(scores, axis=1)
+
+
+def retrieval_scores(params: dict, batch: dict, c: MindConfig) -> jax.Array:
+    """Retrieval: one query against the full candidate set [C] (10⁶) —
+    a single batched matmul against the candidate-sharded embedding rows."""
+    interests = extract_interests(params, batch["hist"],
+                                  batch["hist_mask"], c)   # [1, K, D]
+    cand = jnp.take(params["item_embed"], batch["cands"], axis=0)  # [C, D]
+    scores = jnp.einsum("bkd,cd->bkc", interests, cand,
+                        preferred_element_type=jnp.float32)
+    return jnp.max(scores, axis=1)                         # [1, C]

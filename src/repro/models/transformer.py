@@ -1,0 +1,780 @@
+"""Composable decoder-only transformer covering the five assigned LM archs.
+
+Features (selected per-config): GQA and MLA attention, RoPE, sliding-window
+and local/global-alternating attention, attn/final logit softcapping
+(Gemma-2), gated (SwiGLU/GeGLU) and ungated (ReLU²) FFNs, capacity-based
+top-k MoE with shared experts (Mixtral / DeepSeek-V2), scan-over-layers with
+remat, flash-style chunked attention (no O(S²) buffer is ever materialised),
+and KV-cache decode with sequence-sharded caches (flash-decoding semantics
+via GSPMD partial-softmax collectives).
+
+Weights are stored bf16 (configurable); matmuls accumulate in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import moe as moe_lib
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    # attention flavour
+    attn_pattern: str = "full"       # full | swa | local_global
+    window: int = 4096
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    # MLA (DeepSeek-V2)
+    use_mla: bool = False
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # FFN flavour
+    act: str = "silu"                # silu | gelu | relu2
+    gated: bool = True
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 2
+    d_ff_expert: int = 0
+    first_k_dense: int = 0
+    capacity_factor: float = 1.25
+    # misc
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    # attention chunking (flash-style)
+    q_chunk: int = 512
+    kv_chunk: int = 512
+    loss_chunk: int = 512
+    # analysis mode: unroll the layer stack (python loop) so
+    # compiled.cost_analysis() counts every layer — used by the roofline
+    # extraction, never in production (see benchmarks/roofline.py).
+    unroll_layers: bool = False
+    # §Perf beyond-paper optimization: sliding-window layers keep a
+    # ring-buffer KV cache of `window` entries instead of the full context
+    # (decode memory term ∝ cache reads; see EXPERIMENTS.md §Perf).
+    ring_local: bool = False
+    # §Perf: under the v2 scheme attention is data-parallel; this constraint
+    # additionally spreads the batch over ('data','model') around attention
+    # so the model axis doesn't idle there (train cells with batch % 256
+    # == 0 only; needs a mesh context — set by lm_cell, never in CPU tests).
+    attn_2d_batch: bool = False
+
+    @property
+    def params_count(self) -> int:
+        """Approximate parameter count N (for MODEL_FLOPS = 6·N·D)."""
+        c = self
+        embed = c.vocab * c.d_model
+        if c.use_mla:
+            attn = c.d_model * (c.n_heads * (c.qk_nope_dim + c.qk_rope_dim))
+            attn += c.d_model * (c.kv_lora_rank + c.qk_rope_dim)
+            attn += c.kv_lora_rank * c.n_heads * (c.qk_nope_dim
+                                                  + c.v_head_dim)
+            attn += c.n_heads * c.v_head_dim * c.d_model
+        else:
+            attn = c.d_model * c.n_heads * c.d_head
+            attn += 2 * c.d_model * c.n_kv_heads * c.d_head
+            attn += c.n_heads * c.d_head * c.d_model
+        ffn_dense = c.d_model * c.d_ff * (3 if c.gated else 2)
+        if c.moe:
+            ffn_moe = (c.n_experts
+                       * c.d_model * c.d_ff_expert * (3 if c.gated else 2))
+            ffn_moe += c.n_shared_experts * c.d_model * c.d_ff_expert * 3
+            ffn_moe += c.d_model * c.n_experts  # router
+            n_moe = c.n_layers - c.first_k_dense
+            ffn_total = c.first_k_dense * ffn_dense + n_moe * ffn_moe
+        else:
+            ffn_total = c.n_layers * ffn_dense
+        return embed + c.n_layers * attn + ffn_total + embed  # + lm head
+
+    @property
+    def active_params_count(self) -> int:
+        """Active parameters per token (MoE: only routed-to experts)."""
+        c = self
+        if not c.moe:
+            return self.params_count
+        embed = c.vocab * c.d_model
+        attn = (c.d_model * c.n_heads * c.d_head
+                + 2 * c.d_model * c.n_kv_heads * c.d_head
+                + c.n_heads * c.d_head * c.d_model)
+        if c.use_mla:
+            attn = (c.d_model * (c.n_heads * (c.qk_nope_dim + c.qk_rope_dim))
+                    + c.d_model * (c.kv_lora_rank + c.qk_rope_dim)
+                    + c.kv_lora_rank * c.n_heads * (c.qk_nope_dim
+                                                    + c.v_head_dim)
+                    + c.n_heads * c.v_head_dim * c.d_model)
+        act_ffn = ((c.top_k + c.n_shared_experts)
+                   * c.d_model * c.d_ff_expert * (3 if c.gated else 2))
+        return embed * 2 + c.n_layers * (attn + act_ffn)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init / shape declaration
+# ---------------------------------------------------------------------------
+
+def _dense(key, shape, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def layer_param_shapes(c: TransformerConfig, moe_layer: bool) -> dict:
+    """Shapes of one layer's params (stacked under a leading L axis later)."""
+    d, dt = c.d_model, c.dtype
+    p: dict[str, Any] = {
+        "ln_attn": ((d,), jnp.float32),
+        "ln_ffn": ((d,), jnp.float32),
+    }
+    if c.use_mla:
+        p.update({
+            "wq": ((d, c.n_heads * (c.qk_nope_dim + c.qk_rope_dim)), dt),
+            "wkv_a": ((d, c.kv_lora_rank + c.qk_rope_dim), dt),
+            "kv_ln": ((c.kv_lora_rank,), jnp.float32),
+            "wkv_b": ((c.kv_lora_rank,
+                       c.n_heads * (c.qk_nope_dim + c.v_head_dim)), dt),
+            "wo": ((c.n_heads * c.v_head_dim, d), dt),
+        })
+    else:
+        p.update({
+            "wq": ((d, c.n_heads * c.d_head), dt),
+            "wk": ((d, c.n_kv_heads * c.d_head), dt),
+            "wv": ((d, c.n_kv_heads * c.d_head), dt),
+            "wo": ((c.n_heads * c.d_head, d), dt),
+        })
+    if moe_layer:
+        e, f = c.n_experts, c.d_ff_expert
+        p["router"] = ((d, e), jnp.float32)
+        p["w_gate"] = ((e, d, f), dt)
+        p["w_up"] = ((e, d, f), dt)
+        p["w_down"] = ((e, f, d), dt)
+        if c.n_shared_experts:
+            fs = c.n_shared_experts * f
+            p["ws_gate"] = ((d, fs), dt)
+            p["ws_up"] = ((d, fs), dt)
+            p["ws_down"] = ((fs, d), dt)
+    else:
+        p["w_gate"] = ((c.d_model, c.d_ff), dt)
+        if c.gated:
+            p["w_up"] = ((c.d_model, c.d_ff), dt)
+        p["w_down"] = ((c.d_ff, c.d_model), dt)
+    return p
+
+
+def param_shapes(c: TransformerConfig) -> dict:
+    """Full ShapeDtypeStruct pytree (for eval_shape / dry-run lowering)."""
+    def stack(shapes: dict, n: int) -> dict:
+        return {k: jax.ShapeDtypeStruct((n,) + s, d)
+                for k, (s, d) in shapes.items()}
+
+    n_moe = c.n_layers - c.first_k_dense if c.moe else 0
+    n_dense = c.n_layers - n_moe
+    out = {
+        "embed": jax.ShapeDtypeStruct((c.vocab, c.d_model), c.dtype),
+        "final_ln": jax.ShapeDtypeStruct((c.d_model,), jnp.float32),
+        "lm_head": jax.ShapeDtypeStruct((c.d_model, c.vocab), c.dtype),
+    }
+    if n_dense:
+        out["dense_layers"] = stack(layer_param_shapes(c, False), n_dense)
+    if n_moe:
+        out["moe_layers"] = stack(layer_param_shapes(c, True), n_moe)
+    return out
+
+
+def init_params(key: jax.Array, c: TransformerConfig) -> dict:
+    """Real initialization (used by smoke tests / examples)."""
+    shapes = param_shapes(c)
+    flat, treedef = jax.tree_util.tree_flatten(
+        shapes, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    keys = jax.random.split(key, len(flat))
+    leaves = []
+    for k, s in zip(keys, flat):
+        if s.dtype == jnp.float32 and len(s.shape) <= 2 and (
+                s.shape[-1:] and False):
+            leaves.append(jnp.ones(s.shape, s.dtype))
+        elif len(s.shape) >= 2:
+            scale = 1.0 / math.sqrt(s.shape[-2])
+            leaves.append(_dense(k, s.shape, s.dtype, scale))
+        else:
+            leaves.append(jnp.ones(s.shape, s.dtype))  # norms
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def param_specs(c: TransformerConfig, pod: bool = False,
+                scheme: str = "v2") -> dict:
+    """PartitionSpec pytree.
+
+    scheme="v1" (paper-faithful first cut, kept for §Perf baselines):
+    every projection output-sharded over 'model' — misaligned with head
+    boundaries when H or KV don't divide 16, which makes GSPMD emit huge
+    partial-sum all-reduces inside attention and the loss (measured in
+    §Perf: 51 GB/score-tensor on minitron).
+
+    scheme="v2" (default): Megatron-style hybrid —
+      * attention weights FSDP on the d_model dim only; heads stay whole,
+        attention is data-parallel (no model-axis collectives inside attn);
+      * FFN tensor-parallel on d_ff over 'model' (always divisible);
+      * embed + lm_head vocab-parallel over 'model' (loss reduces to a
+        tiny [B,S] psum instead of all-reducing full logits).
+    """
+    fsdp = ("pod", "data") if pod else ("data",)
+    tp = "model"
+    v2 = scheme == "v2"
+
+    def dense_specs(moe_layer: bool) -> dict:
+        s: dict[str, Any] = {
+            "ln_attn": P(None, None),
+            "ln_ffn": P(None, None),
+        }
+        if c.use_mla:
+            s.update({
+                "wq": P(None, fsdp, None) if v2 else P(None, fsdp, tp),
+                "wkv_a": P(None, fsdp, None),
+                "kv_ln": P(None, None),
+                "wkv_b": P(None, None, None) if v2 else P(None, fsdp, tp),
+                "wo": P(None, None, fsdp) if v2 else P(None, tp, fsdp),
+            })
+        else:
+            qkv = P(None, fsdp, None) if v2 else P(None, fsdp, tp)
+            s.update({
+                "wq": qkv,
+                "wk": qkv,
+                "wv": qkv,
+                "wo": P(None, None, fsdp) if v2 else P(None, tp, fsdp),
+            })
+        if moe_layer:
+            s["router"] = P(None, fsdp, None)
+            # Expert parallelism when the expert count divides the model
+            # axis (deepseek: 64/16); otherwise Megatron-style expert-TP on
+            # the ffn dim (mixtral: 8 experts < 16-way model axis).
+            if c.n_experts % 16 == 0:
+                s["w_gate"] = P(None, tp, fsdp, None)
+                s["w_up"] = P(None, tp, fsdp, None)
+                s["w_down"] = P(None, tp, None, fsdp)
+            else:
+                s["w_gate"] = P(None, None, fsdp, tp)
+                s["w_up"] = P(None, None, fsdp, tp)
+                s["w_down"] = P(None, None, tp, fsdp)
+            if c.n_shared_experts:
+                s["ws_gate"] = P(None, fsdp, tp)
+                s["ws_up"] = P(None, fsdp, tp)
+                s["ws_down"] = P(None, tp, fsdp)
+        else:
+            s["w_gate"] = P(None, fsdp, tp)
+            if c.gated:
+                s["w_up"] = P(None, fsdp, tp)
+            s["w_down"] = P(None, tp, fsdp)
+        return s
+
+    n_moe = c.n_layers - c.first_k_dense if c.moe else 0
+    out = {
+        "embed": P(tp, None) if v2 else P(tp, fsdp),
+        "final_ln": P(None),
+        "lm_head": P(None, tp) if v2 else P(fsdp, tp),
+    }
+    if c.n_layers - n_moe:
+        out["dense_layers"] = dense_specs(False)
+    if n_moe:
+        out["moe_layers"] = dense_specs(True)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [..., S, H, D]; positions [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freq  # [.., S, half]
+    angles = angles[..., None, :]                                # [.., S, 1, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def _softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+def _mm(x, w):
+    return jnp.einsum("...d,df->...f", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      q_offset: jax.Array, c: TransformerConfig,
+                      is_local: jax.Array, kv_len_valid: jax.Array | None,
+                      scale: float | None = None) -> jax.Array:
+    """Flash-style attention: scan over q- and kv-chunks, online softmax.
+
+    q [B, Sq, H, Dq]; k [B, Skv, KV, Dq]; v [B, Skv, KV, Dv].
+    q_offset: absolute position of q[0] (decode: cache length).
+    is_local: scalar bool — apply the sliding window (pattern-dependent).
+    kv_len_valid: [B] number of valid cache entries (decode), else None.
+    Causal masking is in absolute positions. Never materialises S².
+    """
+    b, sq, h, dq = q.shape
+    skv, kv_heads = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    groups = h // kv_heads
+    scale = scale if scale is not None else 1.0 / math.sqrt(dq)
+
+    cq = min(c.q_chunk, sq)
+    ckv = min(c.kv_chunk, skv)
+    nq, nkv = sq // cq, skv // ckv
+    assert sq % cq == 0 and skv % ckv == 0
+
+    q = q.reshape(b, nq, cq, kv_heads, groups, dq)
+    k = k.reshape(b, nkv, ckv, kv_heads, dq)
+    v = v.reshape(b, nkv, ckv, kv_heads, dv)
+
+    def q_block(qi, q_blk):
+        q_pos = q_offset + qi * cq + jnp.arange(cq)          # [cq]
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kj, (k_blk, v_blk) = inp
+            kv_pos = kj * ckv + jnp.arange(ckv)              # [ckv]
+            s = jnp.einsum("bckgd,bzkd->bkgcz", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            s = _softcap(s, c.attn_softcap)
+            causal = q_pos[:, None] >= kv_pos[None, :]       # [cq, ckv]
+            win = q_pos[:, None] - kv_pos[None, :] < c.window
+            mask = causal & jnp.where(is_local, win, True)
+            mask = mask[None, None, None, :, :]              # [1,1,1,cq,ckv]
+            if kv_len_valid is not None:
+                valid = (kv_pos[None, :]
+                         < kv_len_valid[:, None])            # [b, ckv]
+                mask = mask & valid[:, None, None, None, :]
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))      # [b,k,g,cq]
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgcz,bzkd->bkgcd", p.astype(v_blk.dtype),
+                            v_blk, preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv_heads, groups, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv_heads, groups, cq), jnp.float32)
+        a0 = jnp.zeros((b, kv_heads, groups, cq, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nkv), (jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0))))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.moveaxis(out, 3, 1).reshape(b, cq, h, dv)  # b,cq,k,g→h
+
+    outs = jax.lax.map(lambda args: q_block(*args),
+                       (jnp.arange(nq), jnp.moveaxis(q, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, dv)
+    return out.astype(jnp.bfloat16) if q.dtype == jnp.bfloat16 else out
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+def _ring_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    n_valid: jax.Array, scale: float,
+                    softcap: float | None) -> jax.Array:
+    """Decode attention over a ring-buffer window cache.
+
+    RoPE is applied at write time, and softmax is permutation-invariant, so
+    slot order inside the ring is irrelevant — only slot validity matters.
+    q [B,1,H,Dh]; k/v [B,W,KV,Dh]; n_valid: scalar count of live slots.
+    """
+    b, s, h, dh = q.shape
+    w, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qr = q.reshape(b, s, kvh, g, dh)
+    scores = jnp.einsum("bskgd,bwkd->bkgsw", qr, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = _softcap(scores, softcap)
+    mask = jnp.arange(w) < n_valid                          # [w]
+    scores = jnp.where(mask[None, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgsw,bwkd->bskgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, h, dh).astype(q.dtype)
+
+
+def _attention_block(p: dict, x: jax.Array, c: TransformerConfig,
+                     positions: jax.Array, is_local: jax.Array,
+                     cache: dict | None, cache_len: jax.Array | None,
+                     ring: bool = False):
+    """Returns (attn_out, new_cache_entries)."""
+    b, s, d = x.shape
+    if c.use_mla:
+        qk_dim = c.qk_nope_dim + c.qk_rope_dim
+        q = _mm(x, p["wq"]).reshape(b, s, c.n_heads, qk_dim)
+        q_nope, q_rope = q[..., :c.qk_nope_dim], q[..., c.qk_nope_dim:]
+        q_rope = rope(q_rope, positions, c.rope_theta)
+        kv_a = _mm(x, p["wkv_a"])
+        c_kv = rms_norm(kv_a[..., :c.kv_lora_rank], p["kv_ln"], c.norm_eps)
+        k_rope = rope(kv_a[..., None, c.kv_lora_rank:], positions,
+                      c.rope_theta)                         # [b,s,1,rope]
+        if cache is not None:
+            c_kv = jax.lax.dynamic_update_slice(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype),
+                (0, cache_len, 0))
+            k_rope = jax.lax.dynamic_update_slice(
+                cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+                (0, cache_len, 0, 0))
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+        skv = c_kv.shape[1]
+        wkv_b = p["wkv_b"].reshape(c.kv_lora_rank, c.n_heads,
+                                   c.qk_nope_dim + c.v_head_dim)
+        w_uk = wkv_b[..., :c.qk_nope_dim]                   # [r, h, nope]
+        w_uv = wkv_b[..., c.qk_nope_dim:]                   # [r, h, vdim]
+        # Absorbed MLA: score in latent space (production decode path).
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk,
+                           preferred_element_type=jnp.float32
+                           ).astype(x.dtype)                # [b,s,h,r]
+        q_eff = jnp.concatenate([q_lat, q_rope], -1)        # [b,s,h,r+rope]
+        k_eff = jnp.concatenate(
+            [c_kv[:, :, None, :], k_rope], -1)              # [b,skv,1,r+rope]
+        # Absorbed scores equal q_nope·k_nope + q_rope·k_rope, so the scale
+        # is that of the *original* head dim, not the latent dim.
+        mla_scale = 1.0 / math.sqrt(c.qk_nope_dim + c.qk_rope_dim)
+        attn_lat = chunked_attention(
+            q_eff, k_eff, c_kv[:, :, None, :],
+            cache_len if cache_len is not None else 0, c, is_local,
+            (cache_len + s) * jnp.ones((b,), jnp.int32)
+            if cache_len is not None else None,
+            scale=mla_scale)                                # [b,s,h,r]
+        out = jnp.einsum("bshr,rhv->bshv", attn_lat.astype(jnp.float32),
+                         w_uv.astype(jnp.float32))
+        out = out.reshape(b, s, c.n_heads * c.v_head_dim).astype(x.dtype)
+        return _mm(out, p["wo"]), new_cache
+
+    q = _mm(x, p["wq"]).reshape(b, s, c.n_heads, c.d_head)
+    k = _mm(x, p["wk"]).reshape(b, s, c.n_kv_heads, c.d_head)
+    v = _mm(x, p["wv"]).reshape(b, s, c.n_kv_heads, c.d_head)
+    q = rope(q, positions, c.rope_theta)
+    k = rope(k, positions, c.rope_theta)
+    if ring:
+        # ring-buffer window cache: overwrite the oldest slot
+        assert cache is not None and s == 1
+        slot = cache_len % c.window
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        n_valid = jnp.minimum(cache_len + s, c.window)
+        out = _ring_attention(q, k, v, n_valid,
+                              1.0 / math.sqrt(c.d_head), c.attn_softcap)
+        out = out.reshape(b, s, c.n_heads * c.d_head)
+        return _mm(out, p["wo"]), {"k": k, "v": v}
+    if cache is not None:
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_len, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_len, 0, 0))
+    new_cache = {"k": k, "v": v}
+    kv_valid = ((cache_len + s) * jnp.ones((b,), jnp.int32)
+                if cache_len is not None else None)
+    out = chunked_attention(q, k, v,
+                            cache_len if cache_len is not None else 0,
+                            c, is_local, kv_valid)
+    out = out.reshape(b, s, c.n_heads * c.d_head)
+    return _mm(out, p["wo"]), new_cache
+
+
+def _ffn_block(p: dict, x: jax.Array, c: TransformerConfig,
+               moe_layer: bool) -> jax.Array:
+    if moe_layer:
+        out = moe_lib.moe_ffn(p, x, c)
+        if c.n_shared_experts:
+            g = _act(_mm(x, p["ws_gate"]), c.act)
+            out = out + _mm(g * _mm(x, p["ws_up"]), p["ws_down"])
+        return out
+    g = _act(_mm(x, p["w_gate"]), c.act)
+    h = g * _mm(x, p["w_up"]) if c.gated else g
+    return _mm(h, p["w_down"])
+
+
+def _layer(p: dict, x: jax.Array, c: TransformerConfig, positions, is_local,
+           moe_layer: bool, cache=None, cache_len=None, ring: bool = False):
+    a_in = rms_norm(x, p["ln_attn"], c.norm_eps)
+    if c.attn_2d_batch and cache is None:
+        a_in = jax.lax.with_sharding_constraint(
+            a_in, P(("data", "model"), None, None))
+    a, new_cache = _attention_block(p, a_in, c, positions, is_local, cache,
+                                    cache_len, ring=ring)
+    if c.attn_2d_batch and cache is None:
+        a = jax.lax.with_sharding_constraint(a, P(("data",), None, None))
+    x = x + a
+    x = x + _ffn_block(p, rms_norm(x, p["ln_ffn"], c.norm_eps), c, moe_layer)
+    return x, new_cache
+
+
+def _is_local_flags(c: TransformerConfig, n: int, offset: int) -> jax.Array:
+    if c.attn_pattern == "swa":
+        return jnp.ones((n,), bool)
+    if c.attn_pattern == "local_global":
+        return (jnp.arange(offset, offset + n) % 2) == 0
+    return jnp.zeros((n,), bool)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def forward(params: dict, tokens: jax.Array, c: TransformerConfig,
+            return_hidden: bool = False) -> jax.Array:
+    """Training / prefill forward. tokens [B, S] → logits [B, S, vocab]
+    (or final hidden states when return_hidden)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x * jnp.asarray(math.sqrt(c.d_model), x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    n_moe = c.n_layers - c.first_k_dense if c.moe else 0
+    n_dense = c.n_layers - n_moe
+
+    def run_stack(x, stack, n, offset, moe_layer):
+        flags = _is_local_flags(c, n, offset)
+
+        def body(x, inp):
+            layer_p, flag = inp
+            out, _ = _layer(layer_p, x, c, positions, flag, moe_layer)
+            return out, None
+
+        if c.unroll_layers:
+            for i in range(n):
+                layer_p = jax.tree.map(lambda a: a[i], stack)
+                x, _ = jax.checkpoint(body)(x, (layer_p, flags[i]))
+            return x
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, (stack, flags))
+        return x
+
+    if n_dense:
+        x = run_stack(x, params["dense_layers"], n_dense, 0, False)
+    if n_moe:
+        x = run_stack(x, params["moe_layers"], n_moe, n_dense, True)
+
+    x = rms_norm(x, params["final_ln"], c.norm_eps)
+    if return_hidden:
+        return x
+    logits = _mm(x, params["lm_head"])
+    return _softcap(logits, c.final_softcap)
+
+
+def chunked_loss(params: dict, tokens: jax.Array, targets: jax.Array,
+                 c: TransformerConfig) -> jax.Array:
+    """Cross-entropy over seq chunks — avoids a [B,S,vocab] logits buffer."""
+    hidden = forward(params, tokens, c, return_hidden=True)
+    b, s, d = hidden.shape
+    ck = min(c.loss_chunk, s)
+    nchunk = s // ck
+    hidden = hidden.reshape(b, nchunk, ck, d)
+    targets = targets.reshape(b, nchunk, ck)
+
+    def step(acc, inp):
+        h, t = inp                                          # [b,ck,d],[b,ck]
+        logits = _softcap(_mm(h, params["lm_head"]), c.final_softcap)
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], -1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32),
+                            (jnp.moveaxis(hidden, 1, 0),
+                             jnp.moveaxis(targets, 1, 0)))
+    return total / (b * s)
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve) path
+# ---------------------------------------------------------------------------
+
+def cache_shapes(c: TransformerConfig, batch: int, max_len: int) -> dict:
+    """ShapeDtypeStruct pytree of the KV cache (per layer stack).
+
+    With ring_local, sliding-window layers hold `window` slots instead of
+    `max_len` (ring buffer): swa → every layer; local_global → the local
+    half of each (local, global) pair."""
+    n_moe = c.n_layers - c.first_k_dense if c.moe else 0
+    n_dense = c.n_layers - n_moe
+
+    def one(n, length):
+        if c.use_mla:
+            return {
+                "c_kv": jax.ShapeDtypeStruct(
+                    (n, batch, length, c.kv_lora_rank), c.dtype),
+                "k_rope": jax.ShapeDtypeStruct(
+                    (n, batch, length, 1, c.qk_rope_dim), c.dtype),
+            }
+        return {
+            "k": jax.ShapeDtypeStruct(
+                (n, batch, length, c.n_kv_heads, c.d_head), c.dtype),
+            "v": jax.ShapeDtypeStruct(
+                (n, batch, length, c.n_kv_heads, c.d_head), c.dtype),
+        }
+
+    if c.ring_local and c.attn_pattern == "swa":
+        w = min(c.window, max_len)
+        out = {}
+        if n_dense:
+            out["dense"] = one(n_dense, w)
+        if n_moe:
+            out["moe"] = one(n_moe, w)
+        return out
+    if (c.ring_local and c.attn_pattern == "local_global"
+            and not c.moe and c.n_layers % 2 == 0):
+        w = min(c.window, max_len)
+        return {"dense_local": one(c.n_layers // 2, w),
+                "dense_global": one(c.n_layers // 2, max_len)}
+    out = {}
+    if n_dense:
+        out["dense"] = one(n_dense, max_len)
+    if n_moe:
+        out["moe"] = one(n_moe, max_len)
+    return out
+
+
+def cache_specs(c: TransformerConfig, pod: bool = False) -> dict:
+    """KV cache sharded over sequence (flash-decoding) + kv heads."""
+    seq_ax = ("pod", "data") if pod else ("data",)
+    n_moe = c.n_layers - c.first_k_dense if c.moe else 0
+
+    def one():
+        if c.use_mla:
+            return {"c_kv": P(None, None, seq_ax, "model"),
+                    "k_rope": P(None, None, seq_ax, None, None)}
+        return {"k": P(None, None, seq_ax, "model", None),
+                "v": P(None, None, seq_ax, "model", None)}
+    out = {}
+    if c.n_layers - n_moe:
+        out["dense"] = one()
+    if n_moe:
+        out["moe"] = one()
+    return out
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array,
+                cache_len: jax.Array, c: TransformerConfig):
+    """One decode step: tokens [B, 1] → (logits [B, vocab], new cache)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x * jnp.asarray(math.sqrt(c.d_model), x.dtype)
+    positions = jnp.broadcast_to(cache_len + jnp.arange(s), (b, s))
+
+    n_moe = c.n_layers - c.first_k_dense if c.moe else 0
+    n_dense = c.n_layers - n_moe
+    new_cache = {}
+
+    ring_all = c.ring_local and c.attn_pattern == "swa"
+    paired = (c.ring_local and c.attn_pattern == "local_global"
+              and not c.moe and c.n_layers % 2 == 0)
+
+    def run_stack(x, stack, layer_cache, n, offset, moe_layer,
+                  ring: bool = False):
+        flags = _is_local_flags(c, n, offset)
+
+        def body(x, inp):
+            layer_p, flag, lc = inp
+            out, nc = _layer(layer_p, x, c, positions, flag, moe_layer,
+                             cache=lc, cache_len=cache_len, ring=ring)
+            return out, nc
+
+        if c.unroll_layers:
+            ncs = []
+            for i in range(n):
+                layer_p = jax.tree.map(lambda a: a[i], stack)
+                lc = jax.tree.map(lambda a: a[i], layer_cache)
+                x, nc_i = body(x, (layer_p, flags[i], lc))
+                ncs.append(nc_i)
+            nc = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+            return x, nc
+        return jax.lax.scan(body, x, (stack, flags, layer_cache))
+
+    if paired:
+        # (local, global) pairs: local layers use ring window caches.
+        stack = params["dense_layers"]
+        pairs = jax.tree.map(
+            lambda a: a.reshape((a.shape[0] // 2, 2) + a.shape[1:]), stack)
+        local_p = jax.tree.map(lambda a: a[:, 0], pairs)
+        global_p = jax.tree.map(lambda a: a[:, 1], pairs)
+
+        def pair_body(x, inp):
+            lp, gp, lc, gc = inp
+            x, nlc = _layer(lp, x, c, positions, jnp.asarray(True), False,
+                            cache=lc, cache_len=cache_len, ring=True)
+            x, ngc = _layer(gp, x, c, positions, jnp.asarray(False), False,
+                            cache=gc, cache_len=cache_len)
+            return x, (nlc, ngc)
+
+        if c.unroll_layers:  # analysis mode (roofline reconstruction)
+            nls, ngs = [], []
+            for i in range(c.n_layers // 2):
+                sel = lambda a: a[i]  # noqa: E731
+                x, (nlc, ngc) = pair_body(
+                    x, (jax.tree.map(sel, local_p),
+                        jax.tree.map(sel, global_p),
+                        jax.tree.map(sel, cache["dense_local"]),
+                        jax.tree.map(sel, cache["dense_global"])))
+                nls.append(nlc)
+                ngs.append(ngc)
+            nl = jax.tree.map(lambda *xs: jnp.stack(xs), *nls)
+            ng = jax.tree.map(lambda *xs: jnp.stack(xs), *ngs)
+        else:
+            x, (nl, ng) = jax.lax.scan(
+                pair_body, x,
+                (local_p, global_p, cache["dense_local"],
+                 cache["dense_global"]))
+        new_cache = {"dense_local": nl, "dense_global": ng}
+    else:
+        if n_dense:
+            x, nc = run_stack(x, params["dense_layers"], cache["dense"],
+                              n_dense, 0, False, ring=ring_all)
+            new_cache["dense"] = nc
+        if n_moe:
+            x, nc = run_stack(x, params["moe_layers"], cache["moe"],
+                              n_moe, n_dense, True, ring=ring_all)
+            new_cache["moe"] = nc
+
+    x = rms_norm(x, params["final_ln"], c.norm_eps)
+    logits = _softcap(_mm(x[:, -1], params["lm_head"]), c.final_softcap)
+    return logits, new_cache

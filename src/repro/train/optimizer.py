@@ -1,0 +1,114 @@
+"""In-house AdamW + global-norm clipping + optional gradient compression.
+
+No external optimizer deps. Optimizer state mirrors the param pytree
+(m, v in f32) and shards with the same PartitionSpecs, so FSDP-sharded
+params get FSDP-sharded optimizer state for free.
+
+Gradient compression (`compress="int8_ef"`) implements int8 quantization
+with error feedback: grads are quantized per-tensor before the (conceptual)
+cross-replica reduction and the quantization residual is carried in the
+optimizer state and added back next step — the standard bandwidth
+optimization for gradient all-reduce at multi-pod scale (1-bit Adam / EF21
+family). On a single host this is numerically identical to what runs on the
+pod, so tests validate convergence with compression enabled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    compress: str | None = None  # None | "int8_ef"
+
+
+def init_opt_state(params: Any, cfg: AdamWConfig) -> dict:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    state = {"m": zeros,
+             "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                               params),
+             "step": jnp.zeros((), jnp.int32)}
+    if cfg.compress == "int8_ef":
+        state["ef"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def opt_state_shapes(params: Any, cfg: AdamWConfig) -> dict:
+    """ShapeDtypeStruct mirror for dry-run lowering."""
+    def f32_like(p):
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    state = {"m": jax.tree.map(f32_like, params),
+             "v": jax.tree.map(f32_like, params),
+             "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.compress == "int8_ef":
+        state["ef"] = jax.tree.map(f32_like, params)
+    return state
+
+
+def _global_norm(tree: Any) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+def _quantize_int8_ef(grads: Any, ef: Any):
+    """Error-feedback int8 round-trip: returns (dequantized grads, new ef)."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return deq, gf - deq
+    pairs = jax.tree.map(one, grads, ef)
+    deq = jax.tree.map(lambda p: p[0], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree.map(lambda p: p[1], pairs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return deq, new_ef
+
+
+def adamw_update(params: Any, grads: Any, state: dict,
+                 cfg: AdamWConfig) -> tuple[Any, dict]:
+    if cfg.compress == "int8_ef":
+        grads, new_ef = _quantize_int8_ef(grads, state["ef"])
+    else:
+        new_ef = None
+
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    step = state["step"] + 1
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m_new / bc1
+        vh = v_new / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3  # noqa: E731
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
+    new_state = {
+        "m": jax.tree.map(lambda t: t[1], out, is_leaf=is3),
+        "v": jax.tree.map(lambda t: t[2], out, is_leaf=is3),
+        "step": step,
+    }
+    if new_ef is not None:
+        new_state["ef"] = new_ef
+    return new_params, new_state

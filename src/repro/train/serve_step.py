@@ -1,0 +1,64 @@
+"""Serving-step factories: prefill, decode, and a sampling generate loop.
+
+The dry-run cells lower these same paths at pod scale; this module is the
+host-facing API (used by examples and tests): build a cache, prefill the
+prompt, then step the decoder with temperature sampling.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+
+
+def make_cache(cfg, batch: int, max_len: int):
+    shapes = tfm.cache_shapes(cfg, batch, max_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def make_prefill_step(cfg) -> Callable:
+    """(params, cache, tokens[B,S]) → (last-token logits [B,V], cache)."""
+    def prefill(params, cache, tokens):
+        return tfm.decode_step(params, cache, tokens, jnp.int32(0), cfg)
+    return jax.jit(prefill)
+
+
+def make_decode_step(cfg) -> Callable:
+    """(params, cache, token[B,1], cache_len) → (logits [B,V], cache)."""
+    def decode(params, cache, token, cache_len):
+        return tfm.decode_step(params, cache, token, cache_len, cfg)
+    return jax.jit(decode)
+
+
+def generate(params, cfg, prompt: jax.Array, n_new: int,
+             temperature: float = 1.0, seed: int = 0,
+             max_len: int | None = None) -> jax.Array:
+    """Batched autoregressive sampling. prompt [B, S] → [B, S + n_new]."""
+    b, s = prompt.shape
+    max_len = max_len or (s + n_new + 8)
+    # cache length must align with the attention kv-chunking
+    max_len = -(-max_len // cfg.kv_chunk) * cfg.kv_chunk
+    cache = make_cache(cfg, b, max_len)
+    prefill = make_prefill_step(cfg)
+    decode = make_decode_step(cfg)
+
+    logits, cache = prefill(params, cache, prompt)
+    key = jax.random.PRNGKey(seed)
+    out = [prompt]
+    tok = None
+    for i in range(n_new):
+        key, sub = jax.random.split(key)
+        if temperature <= 0:
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        else:
+            tok = jax.random.categorical(
+                sub, logits.astype(jnp.float32) / temperature
+            )[:, None].astype(jnp.int32)
+        out.append(tok)
+        if i < n_new - 1:
+            logits, cache = decode(params, cache, tok, jnp.int32(s + i))
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,78 @@
+"""Train-step factories: loss → grad → clip → AdamW, with optional
+microbatch gradient accumulation (compute/comm overlap knob at scale).
+
+Every factory returns a pure function suitable for jax.jit with explicit
+in/out shardings (the launcher owns mesh placement).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import optimizer as opt_lib
+
+
+def make_lm_train_step(cfg, opt_cfg: opt_lib.AdamWConfig,
+                       microbatch: int | None = None) -> Callable:
+    """Language-model train step over {tokens, targets} [B, S] int32."""
+    from repro.models import transformer as tfm
+
+    def loss_fn(params, tokens, targets):
+        return tfm.chunked_loss(params, tokens, targets, cfg)
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        params = state["params"]
+        tokens, targets = batch["tokens"], batch["targets"]
+        if microbatch:
+            b = tokens.shape[0]
+            nm = b // microbatch
+            tk = tokens.reshape(nm, microbatch, -1)
+            tg = targets.reshape(nm, microbatch, -1)
+
+            def acc_step(carry, inp):
+                loss_acc, grad_acc = carry
+                t, g = inp
+                loss, grads = jax.value_and_grad(loss_fn)(params, t, g)
+                return (loss_acc + loss,
+                        jax.tree.map(jnp.add, grad_acc, grads)), None
+
+            zero_grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros((), jnp.float32), zero_grads), (tk, tg))
+            loss = loss / nm
+            grads = jax.tree.map(lambda g: g / nm, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, tokens,
+                                                      targets)
+        new_params, new_opt = opt_lib.adamw_update(
+            params, grads, state["opt"], opt_cfg)
+        return {"params": new_params, "opt": new_opt}, {"loss": loss}
+
+    return train_step
+
+
+def make_generic_train_step(loss_fn: Callable,
+                            opt_cfg: opt_lib.AdamWConfig) -> Callable:
+    """Train step for any (params, batch) → scalar loss function
+    (GNNs, recsys, and the BatchHL-adjacent models use this)."""
+
+    def train_step(state: dict, batch: Any) -> tuple[dict, dict]:
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        new_params, new_opt = opt_lib.adamw_update(
+            state["params"], grads, state["opt"], opt_cfg)
+        return {"params": new_params, "opt": new_opt}, {"loss": loss}
+
+    return train_step
+
+
+def init_train_state(params: Any, opt_cfg: opt_lib.AdamWConfig) -> dict:
+    return {"params": params, "opt": opt_lib.init_opt_state(params, opt_cfg)}
+
+
+def train_state_shapes(params_shapes: Any,
+                       opt_cfg: opt_lib.AdamWConfig) -> dict:
+    return {"params": params_shapes,
+            "opt": opt_lib.opt_state_shapes(params_shapes, opt_cfg)}

@@ -1,0 +1,121 @@
+"""Graph substrate: padded COO updates, samplers, segment wrappers."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.graphs import generators as gen
+from repro.graphs.coo import from_edges, make_batch, apply_batch, to_numpy_adj
+from repro.graphs.sampler import build_csr, sample_neighbors, sample_subgraph
+from repro.graphs.segment import (masked_segment_min, masked_segment_sum,
+                                  masked_segment_mean)
+from repro.core import ref
+
+SETTINGS = dict(deadline=None, max_examples=20,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000), n=st.integers(6, 40),
+       n_ins=st.integers(0, 6), n_del=st.integers(0, 6))
+def test_apply_batch_matches_set_semantics(seed, n, n_ins, n_del):
+    edges = gen.random_connected(n, extra_edges=n // 3, seed=seed)
+    g = from_edges(n, edges, edges.shape[0] + 2 * (n_ins + 1))
+    ups = gen.random_batch_updates(edges, n, n_ins=n_ins, n_del=n_del,
+                                   seed=seed + 1)
+    batch = make_batch(ups, pad_to=max(len(ups), 1))
+    g2 = apply_batch(g, batch)
+    assert to_numpy_adj(g2) == ref.apply_updates(to_numpy_adj(g), ups)
+
+
+def test_apply_batch_capacity_reuse():
+    """Freed slots from deletions are reused by later insertions."""
+    edges = np.array([[0, 1], [1, 2], [2, 3], [3, 0]], np.int32)
+    g = from_edges(4, edges, 5)  # capacity for only one extra edge
+    b1 = make_batch([(0, 1, True), (1, 2, True)], pad_to=2)
+    g = apply_batch(g, b1)
+    b2 = make_batch([(0, 2, False), (1, 3, False)], pad_to=2)
+    g = apply_batch(g, b2)  # needs the freed slots
+    assert to_numpy_adj(g) == {0: {2, 3}, 1: {3}, 2: {0, 3}, 3: {0, 1, 2}}
+
+
+def test_sampler_returns_real_neighbors():
+    rng = np.random.default_rng(0)
+    edges = gen.barabasi_albert(200, 3, seed=1)
+    csr = build_csr(200, edges)
+    adj = {}
+    for u, v in edges:
+        adj.setdefault(int(u), set()).add(int(v))
+        adj.setdefault(int(v), set()).add(int(u))
+    seeds = jnp.asarray(rng.integers(0, 200, 64), jnp.int32)
+    nbrs, mask = sample_neighbors(csr, seeds, 8, jax.random.PRNGKey(0))
+    nbrs, mask = np.asarray(nbrs), np.asarray(mask)
+    for i, s in enumerate(np.asarray(seeds)):
+        for j in range(8):
+            if mask[i, j]:
+                assert int(nbrs[i, j]) in adj.get(int(s), set())
+
+
+def test_sample_subgraph_shapes_static():
+    edges = gen.barabasi_albert(300, 3, seed=2)
+    csr = build_csr(300, edges)
+    seeds = jnp.arange(16, dtype=jnp.int32)
+    layers, (src, dst, mask) = sample_subgraph(
+        csr, seeds, (4, 3), jax.random.PRNGKey(1))
+    assert layers[1][0].shape == (16 * 4,)
+    assert layers[2][0].shape == (16 * 4 * 3,)
+    assert src.shape == dst.shape == mask.shape == (16 * 4 + 16 * 4 * 3,)
+
+
+def test_sampler_bias_prefers_high_bias_vertices():
+    # star graph: vertex 0 connected to all others
+    edges = np.array([[0, i] for i in range(1, 51)], np.int32)
+    csr = build_csr(51, edges)
+    bias = jnp.zeros(51).at[1].set(100.0)  # strongly prefer vertex 1
+    seeds = jnp.zeros(64, jnp.int32)
+    nbrs, _ = sample_neighbors(csr, seeds, 4, jax.random.PRNGKey(2),
+                               bias=bias)
+    frac_v1 = float(jnp.mean((nbrs == 1).astype(jnp.float32)))
+    nbrs0, _ = sample_neighbors(csr, seeds, 4, jax.random.PRNGKey(2))
+    frac_v1_unbiased = float(jnp.mean((nbrs0 == 1).astype(jnp.float32)))
+    assert frac_v1 > frac_v1_unbiased
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 50),
+       e=st.integers(1, 200))
+def test_segment_wrappers_vs_numpy(seed, n, e):
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 100, e).astype(np.int32)
+    seg = rng.integers(0, n, e).astype(np.int32)
+    mask = rng.random(e) < 0.6
+    fill = jnp.int32(1 << 20)
+    got = masked_segment_min(jnp.asarray(data), jnp.asarray(seg), n,
+                             jnp.asarray(mask), fill)
+    want = np.full(n, 1 << 20, np.int64)
+    for i in range(e):
+        if mask[i]:
+            want[seg[i]] = min(want[seg[i]], data[i])
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+    fdata = rng.normal(size=(e, 3)).astype(np.float32)
+    got_sum = masked_segment_sum(jnp.asarray(fdata), jnp.asarray(seg), n,
+                                 jnp.asarray(mask))
+    want_sum = np.zeros((n, 3), np.float32)
+    for i in range(e):
+        if mask[i]:
+            want_sum[seg[i]] += fdata[i]
+    np.testing.assert_allclose(np.asarray(got_sum), want_sum, rtol=1e-5,
+                               atol=1e-5)
+
+    got_mean = masked_segment_mean(jnp.asarray(fdata), jnp.asarray(seg), n,
+                                   jnp.asarray(mask))
+    cnt = np.zeros(n)
+    for i in range(e):
+        if mask[i]:
+            cnt[seg[i]] += 1
+    want_mean = want_sum / np.maximum(cnt, 1)[:, None]
+    np.testing.assert_allclose(np.asarray(got_mean), want_mean, rtol=1e-5,
+                               atol=1e-5)

@@ -1,0 +1,115 @@
+"""End-to-end behaviour of the paper's system: the distance-query service
+(construct → batch updates → exact queries → checkpoint/restore), plus a
+host-mesh sanity pass of the dry-run cell builder."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graphs import generators as gen
+from repro.graphs.coo import from_edges, make_batch, to_numpy_adj, INF_D
+from repro.core.construct import build_labelling, select_landmarks_by_degree
+from repro.core.batch import batchhl_update
+from repro.core.query import batched_query
+from repro.core import ref
+from repro.checkpoint import manager as ckpt
+from repro.core.labelling import HighwayLabelling
+
+
+def test_service_lifecycle(tmp_path):
+    """The full BatchHL serving loop on a power-law graph, verified
+    against the oracle at every tick, surviving a checkpoint restart."""
+    n = 400
+    edges = gen.barabasi_albert(n, 3, seed=0)
+    g = from_edges(n, edges, edges.shape[0] + 200)
+    landmarks = select_landmarks_by_degree(g, 8)
+    lab = build_labelling(g, landmarks)
+    size0 = int(lab.label_size())
+    assert 0 < size0 <= 8 * n
+
+    rng = np.random.default_rng(0)
+    cur_edges = edges
+    for tick in range(3):
+        ups = gen.random_batch_updates(cur_edges, n, n_ins=10, n_del=10,
+                                       seed=tick + 50)
+        batch = make_batch(ups, pad_to=20)
+        g, lab, aff = batchhl_update(g, batch, lab, improved=True)
+
+        adj = to_numpy_adj(g)
+        qs = rng.integers(0, n, 32).astype(np.int32)
+        qt = rng.integers(0, n, 32).astype(np.int32)
+        got = np.asarray(batched_query(g, lab, jnp.asarray(qs),
+                                       jnp.asarray(qt)))
+        for k in range(32):
+            want = ref.pair_distance(adj, n, int(qs[k]), int(qt[k]))
+            want = 0 if qs[k] == qt[k] else want
+            want = int(INF_D) if want == ref.INF else want
+            assert got[k] == want
+
+        # labelling minimality is preserved across ticks
+        od, oh, ohw, omask = ref.minimal_labelling(
+            adj, n, [int(x) for x in np.asarray(landmarks)])
+        assert int(lab.label_size()) == int(np.sum(omask))
+
+        adjset = {(min(a, b), max(a, b)) for a, b in cur_edges}
+        for u, v, is_del in ups:
+            key = (min(u, v), max(u, v))
+            adjset.discard(key) if is_del else adjset.add(key)
+        cur_edges = np.asarray(sorted(adjset), np.int32)
+
+    # checkpoint the labelling, restore, answer again — identical
+    d = str(tmp_path / "service")
+    ckpt.save(d, 3, {"dist": lab.dist, "hub": lab.hub,
+                     "highway": lab.highway, "landmarks": lab.landmarks})
+    like = {"dist": jnp.zeros_like(lab.dist),
+            "hub": jnp.zeros_like(lab.hub),
+            "highway": jnp.zeros_like(lab.highway),
+            "landmarks": jnp.zeros_like(lab.landmarks)}
+    restored, _ = ckpt.restore(d, like)
+    lab2 = HighwayLabelling(**restored)
+    qs = jnp.asarray(rng.integers(0, n, 16), jnp.int32)
+    qt = jnp.asarray(rng.integers(0, n, 16), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(batched_query(g, lab, qs, qt)),
+        np.asarray(batched_query(g, lab2, qs, qt)))
+
+
+def test_labelling_size_stays_bounded():
+    """Paper §7.2.2: labelling size is bounded by R·V and stays stable
+    under churn (minimality prevents monotone growth)."""
+    n = 300
+    edges = gen.barabasi_albert(n, 3, seed=1)
+    g = from_edges(n, edges, edges.shape[0] + 400)
+    landmarks = select_landmarks_by_degree(g, 6)
+    lab = build_labelling(g, landmarks)
+    sizes = [int(lab.label_size())]
+    cur_edges = edges
+    for tick in range(4):
+        ups = gen.random_batch_updates(cur_edges, n, n_ins=15, n_del=15,
+                                       seed=tick + 99)
+        g, lab, _ = batchhl_update(g, make_batch(ups, pad_to=30), lab)
+        sizes.append(int(lab.label_size()))
+        adjset = {(min(a, b), max(a, b)) for a, b in cur_edges}
+        for u, v, is_del in ups:
+            key = (min(u, v), max(u, v))
+            adjset.discard(key) if is_del else adjset.add(key)
+        cur_edges = np.asarray(sorted(adjset), np.int32)
+    assert all(s <= 6 * n for s in sizes)
+    assert max(sizes) - min(sizes) < n  # stable, no runaway growth
+
+
+def test_cell_builder_structures():
+    """Cell arg specs and sharding specs must be structurally consistent
+    for every (arch × shape) — catches registry/layout drift without
+    compiling anything."""
+    from repro.configs import common as cc
+    for arch in cc.ALL_ARCHS:
+        for shape in cc.arch_shapes(arch):
+            cell = cc.build_cell(arch, shape, pod=False)
+            assert len(cell.arg_specs) == len(cell.in_specs), (arch, shape)
+            for args, specs in zip(cell.arg_specs, cell.in_specs):
+                jax.tree.map(
+                    lambda a, s: None, args, specs,
+                    is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)
+                    or hasattr(x, "_partitions"))
