@@ -25,6 +25,14 @@ GNN / MIND cells use python-loop layers (no scan) → raw numbers are exact.
 BatchHL cells report per-wave terms; wave counts are data-dependent
 (≈ affected-region eccentricity, 3–8 on complex networks per the paper's
 Fig. 5 distance distribution) and are reported as a multiplier note.
+
+**Measured sweep throughput** (``--sweep``): besides the analytical terms,
+this tool can directly measure the BatchHL relaxation-sweep hot loop —
+one engine-dispatched wave (key2 extension, all landmark planes vmapped)
+per backend, jnp segment-min vs the tiled Pallas edge_relax kernel —
+reporting edges/s and the achieved fraction of the HBM roofline. Off-TPU
+the Pallas numbers are interpret-mode (correctness-representative, not
+speed-representative); on TPU they are the real kernel.
 """
 from __future__ import annotations
 
@@ -178,12 +186,70 @@ def build_table(dryrun_dir: str, do_lm_reconstruct: bool = True) -> list:
     return rows
 
 
+def sweep_throughput(sizes=((2_000, 3), (10_000, 4)), r_planes: int = 16,
+                     backends=("jnp", "pallas"), block_v: int = 512) -> list:
+    """Measure one engine relaxation wave per backend: edges/s + roofline %.
+
+    Bytes per wave (per landmark plane): the edge slice (src, dst/dstloc,
+    mask: 3×4 B/edge) + the key plane read and the candidate plane written
+    (2×4 B/vertex) — the memory floor the kernel docstring derives.
+    """
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.graphs import generators as gen
+    from repro.graphs.coo import from_edges
+    from repro.core.engine import RelaxEngine, relax_sweep
+    from repro.core.labelling import INF_KEY2
+    from benchmarks import common as cm
+
+    rows = []
+    for n, deg in sizes:
+        edges = gen.barabasi_albert(n, deg, seed=0)
+        g = from_edges(n, edges, edges.shape[0] + 64)
+        e_valid = int(2 * edges.shape[0])
+        rng = np.random.default_rng(0)
+        keys = jnp.asarray(
+            rng.integers(0, 2 * n, (r_planes, n)).astype(np.int32))
+        hub = jnp.asarray(rng.random((r_planes, n)) < 0.01)
+
+        for backend in backends:
+            engine = RelaxEngine(backend=backend, block_v=block_v)
+            plan = engine.prepare(g)
+
+            @jax.jit
+            def wave(ks, hb):
+                return jax.vmap(
+                    lambda k, h: relax_sweep(plan, g, k, 2, INF_KEY2,
+                                             hub=h, clear_bit=1))(ks, hb)
+
+            t = cm.timeit(lambda: wave(keys, hub))
+            edges_per_s = e_valid * r_planes / t
+            bytes_per_wave = r_planes * (e_valid * 3 * 4 + 2 * n * 4)
+            frac = (bytes_per_wave / t) / HBM_BW
+            rows.append(cm.emit(
+                f"roofline/sweep/n{n}/{backend}", t,
+                f"edges_per_s={edges_per_s:.3e};hbm_frac={frac:.4f};"
+                f"R={r_planes}"))
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun-dir", default="experiments/dryrun")
     ap.add_argument("--out", default="experiments/roofline.json")
     ap.add_argument("--no-reconstruct", action="store_true")
+    ap.add_argument("--sweep", action="store_true",
+                    help="measure jnp-vs-pallas relaxation-sweep throughput "
+                         "(no dry-run artifacts needed)")
     args = ap.parse_args()
+    if args.sweep:
+        rows = sweep_throughput()
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump([dict(zip(("name", "us_per_call", "derived"),
+                                r.split(",", 2))) for r in rows], f, indent=1)
+        return
     rows = build_table(args.dryrun_dir,
                        do_lm_reconstruct=not args.no_reconstruct)
     os.makedirs(os.path.dirname(args.out), exist_ok=True)

@@ -8,6 +8,11 @@ fixpoint equals the queue result. All landmark planes run vmapped in
 lockstep (the paper's landmark parallelism, §6) and the vertex axis is
 shardable across the mesh `data` axis.
 
+Every sweep routes through the relaxation engine (`core/engine.py`,
+DESIGN.md §3): pass a `RelaxPlan` (from `RelaxEngine.prepare`) to run the
+tiled Pallas `edge_relax` kernel; the default `plan=None` runs the pure-jnp
+segment-min reference — both backends produce identical results.
+
 Variants (paper §7 naming):
   BHL   = basic batch search (Algo 2) + batch repair (Algo 4)
   BHL+  = improved batch search (Algo 3) + batch repair (Algo 4)
@@ -22,10 +27,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.graphs.coo import Graph, BatchUpdate, INF_D, apply_batch
-from repro.graphs.segment import masked_segment_min
+from repro.core.engine import RelaxEngine, RelaxPlan, relax_sweep
 from repro.core.labelling import (
     HighwayLabelling, INF_KEY2, INF_KEY4,
-    key2_dist, key2_hub, key2_extend,
+    key2_dist, key2_hub,
     key4_from_key2, key4_extend, key4_beta,
     landmark_onehot,
 )
@@ -61,7 +66,8 @@ def _fixpoint(body_fn, init: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def batch_search_basic(g_old: Graph, g_new: Graph, batch: BatchUpdate,
-                       labelling: HighwayLabelling) -> jax.Array:
+                       labelling: HighwayLabelling,
+                       plan: RelaxPlan | None = None) -> jax.Array:
     """Returns aff[R, V] bool — the CP-affected supersets, per landmark."""
     n = g_old.n
     dist_g = labelling.dist                                   # [R, V]
@@ -84,9 +90,7 @@ def batch_search_basic(g_old: Graph, g_new: Graph, batch: BatchUpdate,
 
     def plane_fix(seed_p, dist_p):
         def sweep(best):
-            cand = masked_segment_min(
-                jnp.minimum(best[g_new.src] + 1, INF_D), g_new.dst, n,
-                g_new.valid, INF_D)
+            cand = relax_sweep(plan, g_new, best, 1, INF_D)
             accept = cand <= dist_p                           # Algo2 line 12
             cand = jnp.where(accept, cand, INF_D)
             return jnp.minimum(best, jnp.minimum(cand, seed_p))
@@ -101,7 +105,8 @@ def batch_search_basic(g_old: Graph, g_new: Graph, batch: BatchUpdate,
 # ---------------------------------------------------------------------------
 
 def batch_search_improved(g_old: Graph, g_new: Graph, batch: BatchUpdate,
-                          labelling: HighwayLabelling) -> jax.Array:
+                          labelling: HighwayLabelling,
+                          plan: RelaxPlan | None = None) -> jax.Array:
     """Returns aff[R, V] bool ⊇ LD-affected vertices, per landmark."""
     n = g_old.n
     dist_g = labelling.dist
@@ -129,12 +134,10 @@ def batch_search_improved(g_old: Graph, g_new: Graph, batch: BatchUpdate,
     seeded = seed < INF_KEY4
 
     def plane_fix(seed_p, beta_p, hub_p):
-        dst_hub = hub_p[g_new.dst]
-
         def sweep(best):
-            cand = key4_extend(best[g_new.src], dst_hub)
-            cand = masked_segment_min(cand, g_new.dst, n, g_new.valid,
-                                      INF_KEY4)
+            # key4_extend per edge: +4, clamp, clear the l-bit at hub dsts.
+            cand = relax_sweep(plan, g_new, best, 4, INF_KEY4,
+                               hub=hub_p, clear_bit=2)
             accept = cand <= beta_p                           # Algo3 line 14
             cand = jnp.where(accept, cand, INF_KEY4)
             return jnp.minimum(best, jnp.minimum(cand, seed_p))
@@ -149,7 +152,8 @@ def batch_search_improved(g_old: Graph, g_new: Graph, batch: BatchUpdate,
 # ---------------------------------------------------------------------------
 
 def batch_repair(g_new: Graph, aff: jax.Array,
-                 labelling: HighwayLabelling) -> HighwayLabelling:
+                 labelling: HighwayLabelling,
+                 plan: RelaxPlan | None = None) -> HighwayLabelling:
     """Settle d^L_{G'} on the affected sets and rewrite labels minimally.
 
     The paper's ascending-distance wavefront (settle V_min, relax neighbors)
@@ -162,21 +166,18 @@ def batch_repair(g_new: Graph, aff: jax.Array,
     r_count = labelling.num_landmarks
 
     def plane_repair(aff_p, key2_p, hub_p):
-        dst_hub = hub_p[g_new.dst]
         # Landmark-distance bounds from *unaffected* neighbours (line 3).
         bou_mask = g_new.valid & ~aff_p[g_new.src] & aff_p[g_new.dst]
-        base = masked_segment_min(
-            key2_extend(key2_p[g_new.src], dst_hub), g_new.dst, n,
-            bou_mask, INF_KEY2)
+        base = relax_sweep(plan, g_new, key2_p, 2, INF_KEY2,
+                           hub=hub_p, clear_bit=1, edge_mask=bou_mask)
         base = jnp.where(aff_p, base, INF_KEY2)
 
         # Interior relaxation (lines 5-15 wavefront → fixpoint).
         int_mask = g_new.valid & aff_p[g_new.src] & aff_p[g_new.dst]
 
         def sweep(cur):
-            cand = masked_segment_min(
-                key2_extend(cur[g_new.src], dst_hub), g_new.dst, n,
-                int_mask, INF_KEY2)
+            cand = relax_sweep(plan, g_new, cur, 2, INF_KEY2,
+                               hub=hub_p, clear_bit=1, edge_mask=int_mask)
             return jnp.minimum(cur, cand)
 
         settled = _fixpoint(sweep, base)
@@ -196,37 +197,65 @@ def batch_repair(g_new: Graph, aff: jax.Array,
 
 @partial(jax.jit, static_argnames=("improved",))
 def batchhl_update(g_old: Graph, batch: BatchUpdate,
-                   labelling: HighwayLabelling, improved: bool = True
+                   labelling: HighwayLabelling, improved: bool = True,
+                   plan: RelaxPlan | None = None
                    ) -> tuple[Graph, HighwayLabelling, jax.Array]:
-    """One BatchHL step: apply B, search, repair. Returns (G', Γ', aff)."""
+    """One BatchHL step: apply B, search, repair. Returns (G', Γ', aff).
+
+    `plan` selects the sweep backend (engine.RelaxEngine.prepare); it must
+    be prepared from the *post-update* snapshot G' = apply_batch(g_old,
+    batch) so the tiling covers edges the batch inserts (launch/serve.py
+    shows the amortized pattern). plan=None runs the jnp reference.
+    """
     g_new = apply_batch(g_old, batch)
     search = batch_search_improved if improved else batch_search_basic
-    aff = search(g_old, g_new, batch, labelling)
-    new_labelling = batch_repair(g_new, aff, labelling)
+    aff = search(g_old, g_new, batch, labelling, plan)
+    new_labelling = batch_repair(g_new, aff, labelling, plan)
     return g_new, new_labelling, aff
 
 
 def batchhl_update_split(g_old: Graph, batch: BatchUpdate,
-                         labelling: HighwayLabelling, improved: bool = True):
-    """BHL^s: insertions and deletions as two sequential sub-batches."""
+                         labelling: HighwayLabelling, improved: bool = True,
+                         engine: RelaxEngine | None = None):
+    """BHL^s: insertions and deletions as two sequential sub-batches.
+
+    Takes the `RelaxEngine` (not a plan): the tiling must cover the
+    intermediate insertion-applied snapshot, and the deletion sub-batch then
+    reuses it unchanged (deletions never move topology slots).
+    """
     ins = BatchUpdate(batch.src, batch.dst, batch.is_del,
                       batch.valid & ~batch.is_del)
     dele = BatchUpdate(batch.src, batch.dst, batch.is_del,
                        batch.valid & batch.is_del)
-    g1, lab1, aff1 = batchhl_update(g_old, ins, labelling, improved)
-    g2, lab2, aff2 = batchhl_update(g1, dele, lab1, improved)
+    plan = None
+    if engine is not None:
+        plan = engine.prepare(apply_batch(g_old, ins))
+    g1, lab1, aff1 = batchhl_update(g_old, ins, labelling, improved, plan)
+    if engine is not None:
+        plan = engine.prepare(g1, topology_changed=False)
+    g2, lab2, aff2 = batchhl_update(g1, dele, lab1, improved, plan)
     return g2, lab2, aff1 | aff2
 
 
 def uhl_update(g_old: Graph, batch: BatchUpdate,
-               labelling: HighwayLabelling, improved: bool = True):
-    """UHL+: the single-update baseline — one BatchHL call per update."""
+               labelling: HighwayLabelling, improved: bool = True,
+               engine: RelaxEngine | None = None):
+    """UHL+: the single-update baseline — one BatchHL call per update.
+
+    With an engine, re-tiles only on insertion steps (deletions reuse the
+    cached tiling) — the per-update amortization the engine contract allows.
+    """
     g, lab = g_old, labelling
     total_aff = jnp.zeros_like(labelling.hub)
     u = batch.src.shape[0]
     for i in range(u):
         single = BatchUpdate(batch.src[i:i + 1], batch.dst[i:i + 1],
                              batch.is_del[i:i + 1], batch.valid[i:i + 1])
-        g, lab, aff = batchhl_update(g, single, lab, improved)
+        plan = None
+        if engine is not None:
+            is_ins = bool(~batch.is_del[i] & batch.valid[i])
+            plan = engine.prepare(apply_batch(g, single),
+                                  topology_changed=is_ins)
+        g, lab, aff = batchhl_update(g, single, lab, improved, plan)
         total_aff = total_aff | aff
     return g, lab, total_aff

@@ -3,7 +3,10 @@
 The paper builds the labelling with |R| BFSs in O(|R|·|V|). On TPU each BFS
 becomes a frontier-synchronous fixpoint of dense edge-relaxation sweeps over
 the padded COO arrays; the landmark axis is vmapped (the paper's landmark
-parallelism, §6), so all R planes advance in lockstep on the VPU.
+parallelism, §6), so all R planes advance in lockstep on the VPU. Sweeps
+route through the relaxation engine (`core/engine.py`): pass a `RelaxPlan`
+to run the tiled Pallas `edge_relax` kernel, default `plan=None` runs the
+jnp segment-min reference.
 """
 from __future__ import annotations
 
@@ -13,15 +16,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.graphs.coo import Graph, INF_D
-from repro.graphs.segment import edge_relax_sweep
+from repro.core.engine import RelaxPlan, relax_sweep
 from repro.core.labelling import (
-    HighwayLabelling, INF_KEY2, key2_dist, key2_hub, key2_extend,
+    HighwayLabelling, INF_KEY2, key2_dist, key2_hub,
     landmark_onehot,
 )
 
 
 def build_labelling(g: Graph, landmarks: jax.Array,
-                    max_iters: int | None = None) -> HighwayLabelling:
+                    max_iters: int | None = None,
+                    plan: RelaxPlan | None = None) -> HighwayLabelling:
     """Construct the minimal highway-cover labelling for G."""
     r_count = landmarks.shape[0]
     n = g.n
@@ -39,8 +43,9 @@ def build_labelling(g: Graph, landmarks: jax.Array,
     # vmapped fixpoint with per-plane hub masks.
     def _fix(k0, hub_mask):
         def sweep(k):
-            ext = edge_relax_sweep(k, g.src, g.dst, g.valid, 2, g.n, INF_KEY2)
-            ext = jnp.where(hub_mask, ext & ~jnp.int32(1), ext)
+            # key2_extend per edge: +2, clamp, clear the l-bit at hub dsts.
+            ext = relax_sweep(plan, g, k, 2, INF_KEY2,
+                              hub=hub_mask, clear_bit=1)
             return jnp.minimum(k, ext)
 
         def cond(state):

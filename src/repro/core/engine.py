@@ -1,0 +1,126 @@
+"""The relaxation engine: one backend-dispatch seam for every sweep.
+
+Every edge-relaxation wave in the system — offline construction
+(`core/construct.py`), batch search Algos 2–3 and batch repair Algo 4
+(`core/batch.py`), and the bounded-BiBFS frontier expansion
+(`core/query.py`) — is an instance of one primitive:
+
+    cand[v] = min over valid edges (u, v) of extend(keys[u], v)
+    extend(k, v) = min(k + step, inf), with `clear_bit` cleared when v is
+                   a hub landmark (the ⊕ operator on key2/key4 encodings,
+                   see DESIGN.md §1–§2)
+
+`relax_sweep` below routes that primitive through either the pure-jnp
+segment-min reference (XLA scatter-min) or the tiled Pallas `edge_relax`
+kernel, selected by the `RelaxPlan`'s static backend tag — the same
+dispatch shape as `query_upper_bound(use_kernel=...)` → the minplus kernel.
+
+The Pallas path needs a destination-block tiling of the edge list
+(`BlockedGraph`).  Tiling is a host-side O(E log E) sort, so `RelaxEngine`
+caches it per graph snapshot and rebuilds only when topology slots change:
+deletions merely flip validity bits (re-tiled on device each sweep through
+the stored slot permutation), while insertions rewrite src/dst slots and
+invalidate the tiling (see DESIGN.md §3 for the full contract).
+`launch/serve.py` holds one engine for the serving loop so the tiling is
+amortized across all waves of a tick and across deletion-only ticks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.coo import Graph
+from repro.graphs.segment import masked_segment_min
+from repro.kernels.edge_relax import ops as er_ops
+from repro.kernels.edge_relax.ops import BlockedGraph
+
+BACKENDS = ("jnp", "pallas")
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("tiles",), meta_fields=("backend",))
+@dataclasses.dataclass(frozen=True)
+class RelaxPlan:
+    """How to run sweeps on one graph snapshot.
+
+    A pytree: `tiles` (the BlockedGraph, or None on the jnp backend) flows
+    through jit as data; `backend` is metadata, so dispatch below is
+    resolved at trace time — each backend gets its own executable, with no
+    runtime branching inside the compiled sweep loops.
+    """
+    tiles: BlockedGraph | None
+    backend: str
+
+
+#: Default plan: the pure-jnp reference path, no tiling required.
+JNP_PLAN = RelaxPlan(tiles=None, backend="jnp")
+
+
+def relax_sweep(plan: RelaxPlan | None, g: Graph, keys: jax.Array,
+                step, inf, *, hub: jax.Array | None = None,
+                clear_bit: int = 0,
+                edge_mask: jax.Array | None = None) -> jax.Array:
+    """One relaxation wave of `keys` [V] over the edges of `g`.
+
+    plan=None (or backend "jnp") runs the segment-min reference on the COO
+    arrays; backend "pallas" runs the tiled kernel (interpret-mode off-TPU,
+    so results are bit-identical across backends — the parity tests assert
+    this). `edge_mask` defaults to g.valid and is always in original
+    edge-slot order; `hub`/`clear_bit` realize key2/key4 path extension.
+    """
+    mask = g.valid if edge_mask is None else edge_mask
+    if plan is None or plan.backend == "jnp":
+        cand = jnp.minimum(keys[g.src] + step, inf)
+        if hub is not None and clear_bit:
+            cand = jnp.where(hub[g.dst], cand & ~jnp.int32(clear_bit), cand)
+        return masked_segment_min(cand, g.dst, g.n, mask, inf)
+    if plan.backend == "pallas":
+        return er_ops.relax_sweep(keys, plan.tiles, mask, step, inf,
+                                  clear_bit=clear_bit, hub=hub)
+    raise ValueError(f"unknown backend {plan.backend!r}; pick from {BACKENDS}")
+
+
+class RelaxEngine:
+    """Host-side owner of the backend choice and the tiling cache.
+
+    backend:  "jnp"    — segment-min reference everywhere (the default off
+                         TPU; zero host syncs, zero tiling cost),
+              "pallas" — tiled kernel (compiled on TPU, interpret-mode
+                         elsewhere; parity-tested against jnp),
+              "auto"   — "pallas" on TPU, "jnp" otherwise.
+    block_v:  destination-block size for the tiling (kernel output tile).
+    """
+
+    def __init__(self, backend: str = "auto", block_v: int = 512):
+        if backend == "auto":
+            backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+        if backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {backend!r}; pick from {BACKENDS + ('auto',)}")
+        self.backend = backend
+        self.block_v = block_v
+        self._tiles: BlockedGraph | None = None
+        self.retile_count = 0  # observability: serve/benchmarks report this
+
+    def prepare(self, g: Graph, topology_changed: bool = True) -> RelaxPlan:
+        """Plan sweeps for snapshot `g`, reusing the cached tiling when the
+        caller can vouch that no topology slot changed since the last
+        prepare (deletion-only batches flip validity bits only).
+
+        On the jnp backend this is free — no tiling, no host sync.
+        """
+        if self.backend == "jnp":
+            return JNP_PLAN
+        if self._tiles is None or topology_changed:
+            # Host sync: pull the slot arrays once per topology change and
+            # tile only the occupied slots (free slots get src/dst rewritten
+            # by the insertion that occupies them, forcing a re-prepare).
+            self._tiles = er_ops.prepare_topology(
+                np.asarray(g.src), np.asarray(g.dst), np.asarray(g.valid),
+                g.n, self.block_v)
+            self.retile_count += 1
+        return RelaxPlan(tiles=self._tiles, backend="pallas")

@@ -3,9 +3,13 @@
 Queries are processed in batches (the serving reality at scale). The upper
 bound over a batch is a min-plus (tropical) product
     d⊤[q] = min_{i,j}  L[i, s_q] + H[i, j] + L[j, t_q]
-computed by the Pallas `minplus` kernel when available (falls back to a pure
-jnp contraction). The bounded bidirectional BFS runs all queries in lockstep
-as masked frontier waves with a global early-exit.
+dispatched by `use_kernel`: the Pallas `minplus` kernel when True, a pure
+jnp contraction when False (the default everywhere off-TPU). The bounded
+bidirectional BFS runs all queries in lockstep as masked frontier waves
+with a global early-exit; each wave is an edge-relaxation sweep routed
+through the relaxation engine (`core/engine.py`), so passing a `RelaxPlan`
+runs the tiled Pallas `edge_relax` kernel while the default `plan=None`
+runs the jnp segment-min reference — see DESIGN.md §3.
 """
 from __future__ import annotations
 
@@ -15,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.graphs.coo import Graph, INF_D
+from repro.core.engine import RelaxPlan, relax_sweep
 from repro.core.labelling import HighwayLabelling, landmark_onehot
 
 
@@ -42,7 +47,12 @@ def _minplus_bound(s_lab: jax.Array, highway: jax.Array,
 
 def query_upper_bound(labelling: HighwayLabelling, s: jax.Array,
                       t: jax.Array, use_kernel: bool = False) -> jax.Array:
-    """d⊤ for query pairs (s[q], t[q]) — Eq. 3."""
+    """d⊤ for query pairs (s[q], t[q]) — Eq. 3.
+
+    use_kernel=False (the default) runs the jnp tropical contraction;
+    use_kernel=True dispatches to the Pallas `minplus` kernel (compiled on
+    TPU, interpret-mode elsewhere).
+    """
     lab = effective_labels(labelling)
     s_lab = lab[:, s].T  # [B, R]
     t_lab = lab[:, t].T
@@ -56,11 +66,14 @@ def query_upper_bound(labelling: HighwayLabelling, s: jax.Array,
 
 @partial(jax.jit, static_argnames=("max_steps",))
 def bounded_bibfs(g: Graph, landmarks: jax.Array, s: jax.Array, t: jax.Array,
-                  bound: jax.Array, max_steps: int = 64) -> jax.Array:
+                  bound: jax.Array, max_steps: int = 64,
+                  plan: RelaxPlan | None = None) -> jax.Array:
     """Distance-bounded bidirectional BFS on G[V\\R], batched over queries.
 
     Returns d_{G[V\\R]}(s,t) clamped at `bound` (if the sparsified distance
     is >= bound the return is >= bound, which is all the caller needs).
+    Frontier expansion is an engine-dispatched relaxation sweep vmapped
+    over the query batch; `plan` selects the backend (None = jnp).
     """
     n = g.n
     b = s.shape[0]
@@ -76,12 +89,17 @@ def bounded_bibfs(g: Graph, landmarks: jax.Array, s: jax.Array, t: jax.Array,
     dist_t = jnp.where(t_ok[:, None], dist_t, inf)
 
     def expand(dist_x, level):
-        """One BFS level from frontier {v: dist_x[v] == level}."""
-        frontier = dist_x == level                            # [B, V]
-        msg = frontier[:, g.src] & g.valid[None, :]
-        reached = jax.vmap(
-            lambda m: jax.ops.segment_max(m, g.dst, num_segments=n))(msg)
-        newly = reached & (dist_x == inf) & ~blocked[None, :]
+        """One BFS level from frontier {v: dist_x[v] == level}.
+
+        The frontier is lifted to a key plane (level on frontier vertices,
+        INF elsewhere) so one relaxation sweep computes level+1 exactly at
+        vertices with a frontier in-neighbour — the same sweep primitive
+        (and the same kernel) as the update-side searches.
+        """
+        frontier_keys = jnp.where(dist_x == level, level, inf)  # [B, V]
+        cand = jax.vmap(
+            lambda k: relax_sweep(plan, g, k, 1, inf))(frontier_keys)
+        newly = (cand < inf) & (dist_x == inf) & ~blocked[None, :]
         return jnp.where(newly, level + 1, dist_x)
 
     def best_meet(ds, dt):
@@ -123,9 +141,16 @@ def bounded_bibfs(g: Graph, landmarks: jax.Array, s: jax.Array, t: jax.Array,
 
 def batched_query(g: Graph, labelling: HighwayLabelling, s: jax.Array,
                   t: jax.Array, max_steps: int = 64,
-                  use_kernel: bool = False) -> jax.Array:
-    """Exact distances Q(s,t) = min(d_{G[V\\R]}(s,t), d⊤) — paper §4."""
+                  use_kernel: bool = False,
+                  plan: RelaxPlan | None = None) -> jax.Array:
+    """Exact distances Q(s,t) = min(d_{G[V\\R]}(s,t), d⊤) — paper §4.
+
+    `use_kernel` dispatches the upper bound to the minplus kernel; `plan`
+    dispatches the BiBFS sweeps to the edge_relax kernel (both default to
+    the jnp reference paths).
+    """
     d_top = query_upper_bound(labelling, s, t, use_kernel=use_kernel)
-    d_sparse = bounded_bibfs(g, labelling.landmarks, s, t, d_top, max_steps)
+    d_sparse = bounded_bibfs(g, labelling.landmarks, s, t, d_top, max_steps,
+                             plan)
     out = jnp.minimum(d_sparse, d_top)
     return jnp.where(out >= INF_D, INF_D, out)

@@ -1,8 +1,9 @@
 """Masked segment-op wrappers: the message-passing substrate.
 
-Both BatchHL's relaxation sweeps and the GNN models route through these, so
-the Pallas `edge_relax` kernel can be swapped in at one seam
-(`use_kernel=True` routes to kernels.edge_relax.ops when shapes allow).
+The GNN models route through these directly. BatchHL's relaxation sweeps
+route through `core/engine.py`, whose jnp backend lowers to
+`masked_segment_min` here and whose pallas backend dispatches to the tiled
+`kernels.edge_relax` kernel — one seam for every sweep (DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -51,8 +52,10 @@ def edge_relax_sweep(keys: jax.Array, src: jax.Array, dst: jax.Array,
                      n: int, inf: jax.Array) -> jax.Array:
     """One relaxation wave: cand[v] = min over valid edges (u,v) of keys[u]+step.
 
-    The hot loop of construction / batch search / batch repair. `keys` may be
-    [V] or batched [..., V] (vmapped by callers).
+    Kept as the minimal reference form of the sweep; the BatchHL hot paths
+    now call `core.engine.relax_sweep`, which generalizes this with the
+    hub bit-clear extension and backend dispatch. `keys` may be [V] or
+    batched [..., V] (vmapped by callers).
     """
     gathered = keys[src]
     cand = jnp.minimum(gathered + step, inf)

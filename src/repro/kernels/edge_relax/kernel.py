@@ -1,17 +1,27 @@
 """Blocked edge-relaxation kernel: the BatchHL wave hot loop.
 
-    cand[v] = min over edges (u, v)   keys[u] + step        (then min w/ keys)
+    cand[v] = min over edges (u, v)   extend(keys[u])         (then min w/ keys)
+
+where extend is the paper's path-extension operator on encoded keys
+(see core/labelling.py): add `step`, clamp at `inf`, and clear `clear_bit`
+when the destination is a landmark hub. With clear_bit=0 this degenerates to
+plain min-plus relaxation (BFS / Algo-2 waves); with (step=2, clear_bit=1)
+it is key2_extend (construction / Algo-4 repair) and with (step=4,
+clear_bit=2) it is key4_extend (Algo-3 improved search).
 
 TPU adaptation of the paper's adjacency-list traversal: edges are pre-tiled
-by destination block (CSR-style reordering done once per graph, amortized
-over all waves of all batches), so each grid step owns a disjoint slice of
-the output vertices — no cross-block write races, no atomics. Within a
-block the kernel gathers source keys from the VMEM-resident key plane
-(per-device vertex shard: V_local ≤ ~1M keys = 4 MB, fits VMEM) and
-scatter-mins into the local [BV] output tile.
+by destination block (CSR-style reordering done once per graph topology,
+amortized over all waves of all batches), so each grid step owns a disjoint
+slice of the output vertices — no cross-block write races, no atomics.
+Within a block the kernel gathers source keys from the VMEM-resident key
+plane (per-device vertex shard: V_local ≤ ~1M keys = 4 MB, fits VMEM) and
+scatter-mins into the local [BV] output tile. The per-edge validity mask is
+re-derived on device every sweep (validity churns with every batch update),
+while the src/dstloc tiling itself is rebuilt only when topology slots
+change — the contract `core/engine.py` enforces.
 
 Working set per grid step: keys (full shard) + BE·3·4 B edge slice +
-BV·4 B out tile. For BV=512, BE=4096: ≈ 64 KB on top of the key plane.
+2·BV·4 B hub/out tiles. For BV=512, BE=4096: ≈ 64 KB on top of the keys.
 
 This kernel regime is the sparse/SpMM family (kernel_taxonomy §B.3/§B.11):
 gather → elementwise → segment-reduce. The MXU is idle; the roofline is
@@ -44,30 +54,73 @@ def _relax_kernel(keys_ref, src_ref, dstloc_ref, valid_ref, step_ref, o_ref):
     o_ref[...] = out[None, :]
 
 
-def block_edges(src: np.ndarray, dst: np.ndarray, valid: np.ndarray,
-                n: int, block_v: int, block_e: int | None = None):
-    """Host-side tiling: group edges by destination block of size block_v.
+def _relax_sweep_kernel(keys_ref, hub_ref, src_ref, dstloc_ref, mask_ref,
+                        params_ref, o_ref):
+    """Generalized sweep: extend (step / inf-clamp / hub bit-clear) + mask."""
+    keys = keys_ref[...]          # [V] int32 (full shard)
+    hub = hub_ref[...]            # [1, BV] int32: dst-block hub flags
+    src = src_ref[...]            # [1, BE]
+    dstloc = dstloc_ref[...]      # [1, BE] local dst in [0, BV)
+    mask = mask_ref[...]          # [1, BE] int32: per-sweep edge validity
+    step = params_ref[0]
+    inf = params_ref[1]
+    clear = params_ref[2]
 
-    Returns (src_t [NB, BE], dstloc_t [NB, BE], valid_t [NB, BE], block_v).
-    Done once per graph topology; validity churn from batch updates only
-    rewrites the valid plane.
+    gathered = jnp.take(keys, src[0], axis=0)
+    cand = jnp.minimum(gathered + step, inf)
+    hub_e = jnp.take(hub[0], dstloc[0], axis=0)
+    cand = jnp.where(hub_e != 0, cand & ~clear, cand)
+    cand = jnp.where(mask[0] != 0, cand, inf)
+    out = jnp.full((o_ref.shape[-1],), inf, jnp.int32)
+    out = out.at[dstloc[0]].min(cand)
+    o_ref[...] = out[None, :]
+
+
+def block_edges_topology(src: np.ndarray, dst: np.ndarray, keep: np.ndarray,
+                         n: int, block_v: int, block_e: int | None = None):
+    """Host-side tiling: group the kept edge slots by destination block.
+
+    Returns (src_t [NB, BE], dstloc_t [NB, BE], perm_t [NB, BE],
+    slot_t [NB, BE], block_v). `perm_t` maps each tile slot back to its
+    original edge index so per-sweep masks (validity churn, repair
+    boundary/interior masks) can be re-tiled on device with one gather;
+    `slot_t` is 0 on padding slots. Done once per graph topology.
     """
+    keep = np.asarray(keep, bool)
+    idx = np.flatnonzero(keep).astype(np.int64)
+    src_k, dst_k = src[idx], dst[idx]
     nb = -(-n // block_v)
-    order = np.argsort(dst // block_v, kind="stable")
-    src, dst, valid = src[order], dst[order], valid[order]
-    counts = np.bincount(dst // block_v, minlength=nb)
-    be = block_e or max(int(counts.max()), 8)
+    order = np.argsort(dst_k // block_v, kind="stable")
+    src_k, dst_k, idx = src_k[order], dst_k[order], idx[order]
+    counts = np.bincount(dst_k // block_v, minlength=nb)
+    be = block_e or max(int(counts.max() if counts.size else 0), 8)
     src_t = np.zeros((nb, be), np.int32)
     dst_t = np.zeros((nb, be), np.int32)
-    val_t = np.zeros((nb, be), np.int32)
+    perm_t = np.zeros((nb, be), np.int32)
+    slot_t = np.zeros((nb, be), np.int32)
     starts = np.concatenate([[0], np.cumsum(counts)])
     for b in range(nb):
         lo, hi = starts[b], starts[b + 1]
         m = min(hi - lo, be)
-        src_t[b, :m] = src[lo:lo + m]
-        dst_t[b, :m] = dst[lo:lo + m] - b * block_v
-        val_t[b, :m] = valid[lo:lo + m]
-    return src_t, dst_t, val_t, block_v
+        src_t[b, :m] = src_k[lo:lo + m]
+        dst_t[b, :m] = dst_k[lo:lo + m] - b * block_v
+        perm_t[b, :m] = idx[lo:lo + m]
+        slot_t[b, :m] = 1
+    return src_t, dst_t, perm_t, slot_t, block_v
+
+
+def block_edges(src: np.ndarray, dst: np.ndarray, valid: np.ndarray,
+                n: int, block_v: int, block_e: int | None = None):
+    """Legacy tiling of *all* edge slots with validity baked into val_t.
+
+    Returns (src_t [NB, BE], dstloc_t [NB, BE], valid_t [NB, BE], block_v).
+    """
+    keep = np.ones(len(src), bool)
+    src_t, dst_t, perm_t, slot_t, bv = block_edges_topology(
+        np.asarray(src), np.asarray(dst), keep, n, block_v, block_e)
+    val_t = np.where(slot_t != 0,
+                     np.asarray(valid, bool)[perm_t].astype(np.int32), 0)
+    return src_t, dst_t, val_t.astype(np.int32), bv
 
 
 @functools.partial(jax.jit, static_argnames=("n", "block_v", "interpret"))
@@ -93,4 +146,39 @@ def edge_relax_pallas(keys: jax.Array, src_t: jax.Array, dstloc_t: jax.Array,
         out_shape=jax.ShapeDtypeStruct((nb, block_v), jnp.int32),
         interpret=interpret,
     )(keys, src_t, dstloc_t, valid_t, step_arr)
+    return out.reshape(npad)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block_v", "interpret"))
+def relax_sweep_pallas(keys: jax.Array, hub_t: jax.Array, src_t: jax.Array,
+                       dstloc_t: jax.Array, mask_t: jax.Array,
+                       step: jax.Array, inf: jax.Array, clear_bit: jax.Array,
+                       n: int, block_v: int,
+                       interpret: bool = True) -> jax.Array:
+    """Generalized sweep: keys [V] + hub tiles [NB, BV] + tiled edges → [V].
+
+    cand[v] = min over masked edges (u, v) of
+        clear_hub_bit_if_hub(v, min(keys[u] + step, inf));  `inf` if none.
+    """
+    nb, be = src_t.shape
+    npad = nb * block_v
+    params = jnp.stack([jnp.asarray(step, jnp.int32),
+                        jnp.asarray(inf, jnp.int32),
+                        jnp.asarray(clear_bit, jnp.int32)])
+
+    out = pl.pallas_call(
+        _relax_sweep_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec(keys.shape, lambda i: (0,) * keys.ndim),
+            pl.BlockSpec((1, block_v), lambda i: (i, 0)),
+            pl.BlockSpec((1, be), lambda i: (i, 0)),
+            pl.BlockSpec((1, be), lambda i: (i, 0)),
+            pl.BlockSpec((1, be), lambda i: (i, 0)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, block_v), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block_v), jnp.int32),
+        interpret=interpret,
+    )(keys, hub_t, src_t, dstloc_t, mask_t, params)
     return out.reshape(npad)[:n]

@@ -1,7 +1,12 @@
-"""Jit'd wrapper: tiled Pallas edge relaxation with jnp fallback.
+"""Jit'd wrappers: tiled Pallas edge relaxation with jnp fallback.
 
-`BlockedGraph` carries the one-off destination-block tiling; re-tiling is
-needed only when topology slots change (insertions), not per wave.
+`BlockedGraph` carries the one-off destination-block tiling. The tiling is
+purely topological (src / local-dst / original-slot permutation): per-sweep
+edge validity — which churns with every batch update and with the repair
+boundary/interior masks — is re-tiled on device with a single gather
+through `perm_t`, so re-tiling on host is needed only when topology slots
+change (insertions rewrite src/dst), not per wave and not per deletion.
+`core/engine.py` owns that cache; this module owns the kernel launch.
 """
 from __future__ import annotations
 
@@ -16,22 +21,63 @@ from repro.kernels.edge_relax import kernel, ref
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=("src_t", "dstloc_t", "valid_t"),
+         data_fields=("src_t", "dstloc_t", "valid_t", "perm_t", "slot_t"),
          meta_fields=("n", "block_v"))
 @dataclasses.dataclass(frozen=True)
 class BlockedGraph:
-    src_t: jax.Array
-    dstloc_t: jax.Array
-    valid_t: jax.Array
+    src_t: jax.Array     # int32[NB, BE] source vertex per tile slot
+    dstloc_t: jax.Array  # int32[NB, BE] destination local to the block
+    valid_t: jax.Array   # int32[NB, BE] validity baked at prepare time
+    perm_t: jax.Array    # int32[NB, BE] original edge-slot index
+    slot_t: jax.Array    # int32[NB, BE] 1 on real slots, 0 on padding
     n: int
     block_v: int
 
+    def tile_mask(self, edge_mask: jax.Array) -> jax.Array:
+        """Re-tile a per-edge mask (original slot order) on device."""
+        return jnp.where(self.slot_t != 0,
+                         edge_mask[self.perm_t], False).astype(jnp.int32)
+
+    def tile_plane(self, plane: jax.Array, fill) -> jax.Array:
+        """Pad + reshape a per-vertex plane [V] to dst tiles [NB, BV]."""
+        nb = self.src_t.shape[0]
+        npad = nb * self.block_v
+        padded = jnp.full((npad,), fill, plane.dtype).at[:self.n].set(plane)
+        return padded.reshape(nb, self.block_v)
+
 
 def prepare(src, dst, valid, n: int, block_v: int = 512) -> BlockedGraph:
-    src_t, dstloc_t, valid_t, bv = kernel.block_edges(
-        np.asarray(src), np.asarray(dst), np.asarray(valid), n, block_v)
+    """Tile every edge slot; bake `valid` into valid_t (legacy entry)."""
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    valid = np.asarray(valid, bool)
+    src_t, dstloc_t, perm_t, slot_t, bv = kernel.block_edges_topology(
+        src, dst, np.ones(len(src), bool), n, block_v)
+    valid_t = np.where(slot_t != 0, valid[perm_t].astype(np.int32), 0)
     return BlockedGraph(jnp.asarray(src_t), jnp.asarray(dstloc_t),
-                        jnp.asarray(valid_t), n, bv)
+                        jnp.asarray(valid_t.astype(np.int32)),
+                        jnp.asarray(perm_t), jnp.asarray(slot_t), n, bv)
+
+
+def prepare_topology(src, dst, keep, n: int, block_v: int = 512
+                     ) -> BlockedGraph:
+    """Tile only the `keep` slots (host sync; amortized by core/engine.py).
+
+    `keep` should be the currently-occupied slots: future deletions only
+    flip validity (handled per sweep via `tile_mask`), while insertions
+    rewrite src/dst and therefore force a fresh prepare anyway.
+
+    The returned tiling sets `valid_t` to slot *occupancy*, not edge
+    validity — it must only be consumed through `relax_sweep`, which
+    re-tiles the caller's current per-edge mask via `perm_t` every wave.
+    Feeding it to the legacy `edge_relax` (which trusts `valid_t`) would
+    treat edges deleted after prepare time as still present.
+    """
+    src_t, dstloc_t, perm_t, slot_t, bv = kernel.block_edges_topology(
+        np.asarray(src), np.asarray(dst), np.asarray(keep, bool), n, block_v)
+    return BlockedGraph(jnp.asarray(src_t), jnp.asarray(dstloc_t),
+                        jnp.asarray(slot_t), jnp.asarray(perm_t),
+                        jnp.asarray(slot_t), n, bv)
 
 
 def edge_relax(keys: jax.Array, bg: BlockedGraph, step,
@@ -49,3 +95,28 @@ def edge_relax(keys: jax.Array, bg: BlockedGraph, step,
     return ref.edge_relax(keys, bg.src_t.reshape(-1), flat_dst.reshape(-1),
                           bg.valid_t.reshape(-1) != 0, step,
                           bg.src_t.shape[0] * bg.block_v)[:bg.n]
+
+
+def relax_sweep(keys: jax.Array, bg: BlockedGraph, edge_mask: jax.Array,
+                step, inf, clear_bit=0,
+                hub: jax.Array | None = None) -> jax.Array:
+    """Generalized relaxation sweep on the tiled graph (Pallas path).
+
+    cand[v] = min over edges (u, v) with edge_mask of
+        extend(keys[u]) = clear_bit-cleared-if-hub[v] min(keys[u]+step, inf)
+
+    `edge_mask` is in original edge-slot order (length = edge capacity);
+    `hub` is a per-vertex bool plane [V] (or None for plain relaxation).
+    Runs interpret-mode Pallas off-TPU so parity tests exercise the same
+    kernel that runs compiled on TPU.
+    """
+    mask_t = bg.tile_mask(edge_mask)
+    if hub is None:
+        nb = bg.src_t.shape[0]
+        hub_t = jnp.zeros((nb, bg.block_v), jnp.int32)
+    else:
+        hub_t = bg.tile_plane(hub.astype(jnp.int32), 0)
+    interpret = jax.default_backend() != "tpu"
+    return kernel.relax_sweep_pallas(keys, hub_t, bg.src_t, bg.dstloc_t,
+                                     mask_t, step, inf, clear_bit,
+                                     bg.n, bg.block_v, interpret=interpret)

@@ -6,6 +6,12 @@ Loop per tick: ingest a batch of edge updates (insert+delete mix), run
 BatchHL (batch search + batch repair), answer a query batch, report
 latencies and labelling size. Optionally verifies every answer against a
 BFS oracle (--verify), and checkpoints the labelling for restart.
+
+Sweep backend: ``--backend {auto,jnp,pallas}`` selects the relaxation
+engine backend (DESIGN.md §3). The loop owns one `RelaxEngine`, so the
+Pallas destination-block tiling is prepared once per tick — and reused
+outright across deletion-only ticks — then amortized over every wave of
+batch search, batch repair, and the query-side BiBFS in that tick.
 """
 from __future__ import annotations
 
@@ -17,9 +23,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graphs import generators as gen
-from repro.graphs.coo import from_edges, make_batch, to_numpy_adj
+from repro.graphs.coo import apply_batch, from_edges, make_batch, to_numpy_adj
 from repro.core.construct import build_labelling, select_landmarks_by_degree
 from repro.core.batch import batchhl_update
+from repro.core.engine import RelaxEngine
 from repro.core.query import batched_query
 from repro.core import ref
 from repro.checkpoint import manager as ckpt
@@ -33,6 +40,15 @@ def main() -> None:
     ap.add_argument("--batches", type=int, default=5)
     ap.add_argument("--batch-size", type=int, default=100)
     ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "jnp", "pallas"),
+                    help="relaxation-engine backend for every sweep "
+                         "(auto = pallas on TPU, jnp elsewhere)")
+    ap.add_argument("--block-v", type=int, default=512,
+                    help="destination-block size for the pallas tiling")
+    ap.add_argument("--use-minplus-kernel", action="store_true",
+                    help="route the Eq.-3 upper bound through the Pallas "
+                         "minplus kernel")
     ap.add_argument("--verify", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
@@ -42,12 +58,16 @@ def main() -> None:
     g = from_edges(args.n, edges, cap)
     landmarks = select_landmarks_by_degree(g, args.landmarks)
 
+    engine = RelaxEngine(backend=args.backend, block_v=args.block_v)
+    plan = engine.prepare(g)
+
     t0 = time.time()
-    lab = build_labelling(g, landmarks)
+    lab = build_labelling(g, landmarks, plan=plan)
     jax.block_until_ready(lab.dist)
     print(f"constructed labelling: {args.n} vertices, "
           f"{edges.shape[0]} edges, R={args.landmarks}, "
-          f"size={int(lab.label_size())}, {time.time() - t0:.2f}s")
+          f"size={int(lab.label_size())}, {time.time() - t0:.2f}s "
+          f"[backend={engine.backend}]")
 
     cur_edges = edges.copy()
     rng = np.random.default_rng(7)
@@ -57,14 +77,25 @@ def main() -> None:
             n_del=args.batch_size // 2, seed=100 + tick)
         batch = make_batch(ups, pad_to=args.batch_size)
         t0 = time.time()
-        g, lab, aff = batchhl_update(g, batch, lab, improved=True)
+        # One tiling per tick, prepared from the post-update snapshot so it
+        # covers inserted edges; deletion-only ticks reuse the cached tiles.
+        # Counted inside the update time: it is real per-tick work on the
+        # pallas backend. The jnp backend skips the snapshot entirely.
+        if engine.backend == "jnp":
+            plan = engine.prepare(g)
+        else:
+            has_ins = any(not is_del for (_, _, is_del) in ups)
+            plan = engine.prepare(apply_batch(g, batch),
+                                  topology_changed=has_ins)
+        g, lab, aff = batchhl_update(g, batch, lab, improved=True, plan=plan)
         jax.block_until_ready(lab.dist)
         t_upd = time.time() - t0
 
         qs = jnp.asarray(rng.integers(0, args.n, args.queries), jnp.int32)
         qt = jnp.asarray(rng.integers(0, args.n, args.queries), jnp.int32)
         t0 = time.time()
-        dist = batched_query(g, lab, qs, qt)
+        dist = batched_query(g, lab, qs, qt,
+                             use_kernel=args.use_minplus_kernel, plan=plan)
         jax.block_until_ready(dist)
         t_q = time.time() - t0
 
@@ -100,7 +131,8 @@ def main() -> None:
             ckpt.save(args.ckpt_dir, tick + 1,
                       {"dist": lab.dist, "hub": lab.hub,
                        "highway": lab.highway, "landmarks": lab.landmarks})
-    print("serve loop done")
+    print(f"serve loop done [backend={engine.backend}, "
+          f"retiles={engine.retile_count}/{args.batches + 1} prepares]")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,8 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests only; optional dep
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.graphs import generators as gen

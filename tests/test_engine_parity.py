@@ -1,0 +1,259 @@
+"""Relaxation-engine dispatch parity: jnp and Pallas backends must be
+bit-identical on every sweep shape the system uses (DESIGN.md §3).
+
+Deterministic (no hypothesis dependency — this file is the bare-checkout
+coverage for the hot paths): random graphs across small V, V not divisible
+by block_v, and sparse/dense regimes; the Pallas path runs interpret-mode
+off-TPU, i.e. the same kernel that compiles on TPU.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.graphs import generators as gen
+from repro.graphs.coo import (INF_D, apply_batch, from_edges, make_batch,
+                              to_numpy_adj)
+from repro.core.construct import build_labelling, select_landmarks_by_degree
+from repro.core.batch import (batch_repair, batch_search_basic,
+                              batch_search_improved, batchhl_update,
+                              batchhl_update_split, uhl_update)
+from repro.core.engine import JNP_PLAN, RelaxEngine, RelaxPlan, relax_sweep
+from repro.core.labelling import INF_KEY2, INF_KEY4
+from repro.core.query import batched_query, bounded_bibfs
+from repro.core import ref
+
+# (n, extra_edges, block_v): small-V, non-divisible-by-block, tiny-block.
+SHAPES = [(9, 4, 8), (30, 15, 16), (57, 30, 16), (64, 40, 32)]
+
+
+def _instance(seed: int, n: int, extra: int, r: int = 3):
+    edges = gen.random_connected(n, extra_edges=extra, seed=seed)
+    g = from_edges(n, edges, edges.shape[0] + 32)
+    landmarks = select_landmarks_by_degree(g, r)
+    lab = build_labelling(g, landmarks)
+    return edges, g, landmarks, lab
+
+
+def _plan(g, block_v) -> RelaxPlan:
+    return RelaxEngine(backend="pallas", block_v=block_v).prepare(g)
+
+
+# --- raw sweep primitive ----------------------------------------------------
+
+@pytest.mark.parametrize("n,extra,bv", SHAPES)
+@pytest.mark.parametrize("step,inf,clear", [
+    (1, int(INF_D), 0),          # Algo-2 / BiBFS waves
+    (2, int(INF_KEY2), 1),       # key2: construction / Algo-4 repair
+    (4, int(INF_KEY4), 2),       # key4: Algo-3 improved search
+])
+def test_sweep_parity(n, extra, bv, step, inf, clear):
+    edges, g, _, _ = _instance(n + extra, n, extra)
+    plan = _plan(g, bv)
+    rng = np.random.default_rng(n * 7 + step)
+    keys = jnp.asarray(rng.integers(0, inf, n, endpoint=True)
+                       .astype(np.int32))
+    hub = jnp.asarray(rng.random(n) < 0.3)
+    mask = jnp.asarray(rng.random(g.src.shape[0]) < 0.7) & g.valid
+    want = relax_sweep(JNP_PLAN, g, keys, step, inf,
+                       hub=hub, clear_bit=clear, edge_mask=mask)
+    got = relax_sweep(plan, g, keys, step, inf,
+                      hub=hub, clear_bit=clear, edge_mask=mask)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sweep_parity_vmapped_planes():
+    """The hot paths vmap sweeps over landmark planes; parity must hold
+    with keys, hub, and edge masks all batched."""
+    n, extra, bv, r = 41, 25, 16, 4
+    edges, g, _, _ = _instance(11, n, extra)
+    plan = _plan(g, bv)
+    rng = np.random.default_rng(11)
+    keys = jnp.asarray(rng.integers(0, 200, (r, n)).astype(np.int32))
+    hub = jnp.asarray(rng.random((r, n)) < 0.2)
+    mask = jnp.asarray(rng.random((r, g.src.shape[0])) < 0.8) & g.valid
+
+    def run(plan):
+        return jax.vmap(
+            lambda k, h, m: relax_sweep(plan, g, k, 2, jnp.int32(INF_KEY2),
+                                        hub=h, clear_bit=1, edge_mask=m)
+        )(keys, hub, mask)
+
+    np.testing.assert_array_equal(np.asarray(run(plan)),
+                                  np.asarray(run(JNP_PLAN)))
+
+
+# --- the four sweep call-sites ---------------------------------------------
+
+@pytest.mark.parametrize("n,extra,bv", SHAPES)
+def test_search_and_repair_parity(n, extra, bv):
+    edges, g, landmarks, lab = _instance(n, n, extra)
+    ups = gen.random_batch_updates(edges, n, n_ins=3, n_del=3, seed=n + 1)
+    batch = make_batch(ups, pad_to=6)
+    g2 = apply_batch(g, batch)
+    plan = _plan(g2, bv)
+
+    aff_b_j = batch_search_basic(g, g2, batch, lab)
+    aff_b_p = batch_search_basic(g, g2, batch, lab, plan)
+    np.testing.assert_array_equal(np.asarray(aff_b_p), np.asarray(aff_b_j))
+
+    aff_i_j = batch_search_improved(g, g2, batch, lab)
+    aff_i_p = batch_search_improved(g, g2, batch, lab, plan)
+    np.testing.assert_array_equal(np.asarray(aff_i_p), np.asarray(aff_i_j))
+
+    lab_j = batch_repair(g2, aff_i_j, lab)
+    lab_p = batch_repair(g2, aff_i_j, lab, plan)
+    for f in ("dist", "hub", "highway"):
+        np.testing.assert_array_equal(np.asarray(getattr(lab_p, f)),
+                                      np.asarray(getattr(lab_j, f)))
+
+
+@pytest.mark.parametrize("n,extra,bv", SHAPES)
+@pytest.mark.parametrize("improved", [False, True])
+def test_batchhl_update_parity(n, extra, bv, improved):
+    """End-to-end: identical aff sets, repaired labellings, and query
+    answers on both backends."""
+    edges, g, landmarks, lab = _instance(n * 2 + 1, n, extra)
+    ups = gen.random_batch_updates(edges, n, n_ins=4, n_del=4, seed=n + 2)
+    batch = make_batch(ups, pad_to=8)
+    plan = _plan(apply_batch(g, batch), bv)
+
+    gj, labj, affj = batchhl_update(g, batch, lab, improved=improved)
+    gp, labp, affp = batchhl_update(g, batch, lab, improved=improved,
+                                    plan=plan)
+    np.testing.assert_array_equal(np.asarray(affp), np.asarray(affj))
+    for f in ("dist", "hub", "highway"):
+        np.testing.assert_array_equal(np.asarray(getattr(labp, f)),
+                                      np.asarray(getattr(labj, f)))
+
+    rng = np.random.default_rng(n)
+    qs = jnp.asarray(rng.integers(0, n, 12), jnp.int32)
+    qt = jnp.asarray(rng.integers(0, n, 12), jnp.int32)
+    dj = batched_query(gj, labj, qs, qt)
+    dp = batched_query(gp, labp, qs, qt, plan=plan)
+    np.testing.assert_array_equal(np.asarray(dp), np.asarray(dj))
+
+
+def test_pallas_update_matches_oracle():
+    """Not just parity: the Pallas path agrees with the from-scratch BFS
+    oracle on the repaired labelling and on exact query answers."""
+    n = 34
+    edges, g, landmarks, lab = _instance(21, n, 17)
+    ups = gen.random_batch_updates(edges, n, n_ins=3, n_del=3, seed=5)
+    batch = make_batch(ups, pad_to=6)
+    plan = _plan(apply_batch(g, batch), 16)
+    g2, lab2, _ = batchhl_update(g, batch, lab, improved=True, plan=plan)
+
+    adj2 = to_numpy_adj(g2)
+    od, oh, ohw, omask = ref.minimal_labelling(
+        adj2, n, [int(x) for x in np.asarray(landmarks)])
+    jd = np.asarray(lab2.dist)
+    for i in range(len(np.asarray(landmarks))):
+        for v in range(n):
+            want = od[i][v] if od[i][v] != ref.INF else int(INF_D)
+            assert jd[i, v] == want, (i, v)
+
+    rng = np.random.default_rng(3)
+    qs = rng.integers(0, n, 16).astype(np.int32)
+    qt = rng.integers(0, n, 16).astype(np.int32)
+    got = np.asarray(batched_query(g2, lab2, jnp.asarray(qs),
+                                   jnp.asarray(qt), plan=plan))
+    for k in range(16):
+        want = ref.pair_distance(adj2, n, int(qs[k]), int(qt[k]))
+        want = 0 if qs[k] == qt[k] else want
+        want = int(INF_D) if want == ref.INF else want
+        assert got[k] == want
+
+
+@pytest.mark.parametrize("n,extra,bv", SHAPES)
+def test_bibfs_parity(n, extra, bv):
+    edges, g, landmarks, lab = _instance(n + 5, n, extra)
+    plan = _plan(g, bv)
+    rng = np.random.default_rng(n)
+    s = jnp.asarray(rng.integers(0, n, 10), jnp.int32)
+    t = jnp.asarray(rng.integers(0, n, 10), jnp.int32)
+    bound = jnp.full((10,), INF_D, jnp.int32)
+    dj = bounded_bibfs(g, lab.landmarks, s, t, bound, 32)
+    dp = bounded_bibfs(g, lab.landmarks, s, t, bound, 32, plan)
+    np.testing.assert_array_equal(np.asarray(dp), np.asarray(dj))
+
+
+@pytest.mark.parametrize("n,extra,bv", SHAPES)
+def test_construction_parity(n, extra, bv):
+    edges, g, landmarks, _ = _instance(n + 9, n, extra)
+    plan = _plan(g, bv)
+    lab_j = build_labelling(g, landmarks)
+    lab_p = build_labelling(g, landmarks, plan=plan)
+    for f in ("dist", "hub", "highway"):
+        np.testing.assert_array_equal(np.asarray(getattr(lab_p, f)),
+                                      np.asarray(getattr(lab_j, f)))
+
+
+def test_split_and_unit_variants_parity():
+    """BHL^s and UHL+ take the engine (per-sub-batch tiling) — their
+    results must match the jnp reference exactly."""
+    n = 28
+    edges, g, landmarks, lab = _instance(13, n, 14)
+    ups = gen.random_batch_updates(edges, n, n_ins=3, n_del=3, seed=17)
+    batch = make_batch(ups, pad_to=6)
+    engine = RelaxEngine(backend="pallas", block_v=16)
+
+    _, lab_sj, aff_sj = batchhl_update_split(g, batch, lab)
+    _, lab_sp, aff_sp = batchhl_update_split(g, batch, lab, engine=engine)
+    np.testing.assert_array_equal(np.asarray(aff_sp), np.asarray(aff_sj))
+    np.testing.assert_array_equal(np.asarray(lab_sp.dist),
+                                  np.asarray(lab_sj.dist))
+
+    _, lab_uj, _ = uhl_update(g, batch, lab)
+    _, lab_up, _ = uhl_update(g, batch, lab, engine=engine)
+    np.testing.assert_array_equal(np.asarray(lab_up.dist),
+                                  np.asarray(lab_uj.dist))
+    np.testing.assert_array_equal(np.asarray(lab_up.hub),
+                                  np.asarray(lab_uj.hub))
+
+
+# --- tiling-cache contract --------------------------------------------------
+
+def test_engine_retile_cache():
+    """Deletion-only ticks reuse the tiling; insertions force a rebuild;
+    the jnp backend never tiles (no host syncs)."""
+    n = 26
+    edges, g, landmarks, lab = _instance(19, n, 13)
+    engine = RelaxEngine(backend="pallas", block_v=16)
+    plan0 = engine.prepare(g)
+    assert engine.retile_count == 1
+
+    # deletion-only: cache hit, tiles object unchanged
+    dele = make_batch([(int(edges[0][0]), int(edges[0][1]), True)], pad_to=1)
+    g2 = apply_batch(g, dele)
+    plan1 = engine.prepare(g2, topology_changed=False)
+    assert engine.retile_count == 1
+    assert plan1.tiles is plan0.tiles
+    # ...and the reused tiling still gives correct (jnp-identical) results
+    gj, labj, affj = batchhl_update(g, dele, lab)
+    gp, labp, affp = batchhl_update(g, dele, lab, plan=plan1)
+    np.testing.assert_array_equal(np.asarray(affp), np.asarray(affj))
+    np.testing.assert_array_equal(np.asarray(labp.dist),
+                                  np.asarray(labj.dist))
+
+    # insertion: topology slots rewritten → retile
+    ins = make_batch([(0, n - 1, False)], pad_to=1)
+    g3 = apply_batch(g2, ins)
+    plan2 = engine.prepare(g3, topology_changed=True)
+    assert engine.retile_count == 2
+    assert plan2.tiles is not plan0.tiles
+
+    jnp_engine = RelaxEngine(backend="jnp")
+    assert jnp_engine.prepare(g).tiles is None
+    assert jnp_engine.retile_count == 0
+
+
+def test_engine_backend_validation():
+    with pytest.raises(ValueError):
+        RelaxEngine(backend="cuda")
+    edges, g, _, _ = _instance(2, 12, 6)
+    bad = RelaxPlan(tiles=None, backend="nope")
+    with pytest.raises(ValueError):
+        relax_sweep(bad, g, jnp.zeros(12, jnp.int32), 1, int(INF_D))

@@ -5,6 +5,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests only; optional dep
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.kernels.minplus import kernel as mpk, ref as mpr
