@@ -25,24 +25,23 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.graphs.coo import Graph, BatchUpdate, INF_D, apply_batch
 from repro.core.engine import RelaxEngine, RelaxPlan, relax_sweep
 from repro.core.labelling import (
     HighwayLabelling, INF_KEY2, INF_KEY4,
-    key2_dist, key2_hub,
+    key2_dist, key2_hub, key2_make,
     key4_from_key2, key4_extend, key4_beta,
-    landmark_onehot,
+    per_plane_hub_mask,
 )
 
 _MAX_WAVES_CAP = 1 << 20  # safety valve; loops exit on fixpoint far earlier
 
 
 def _per_plane_hub_mask(labelling: HighwayLabelling, n: int) -> jax.Array:
-    """[R, V] True where vertex is a landmark *other than* the plane's own."""
-    is_hub_v = landmark_onehot(labelling.landmarks, n)
-    own = jax.nn.one_hot(labelling.landmarks, n, dtype=bool)
-    return jnp.broadcast_to(is_hub_v, own.shape) & ~own
+    """[R, V] hub mask over the full plane set of a labelling."""
+    return per_plane_hub_mask(labelling.landmarks, labelling.landmarks, n)
 
 
 def _fixpoint(body_fn, init: jax.Array) -> jax.Array:
@@ -65,14 +64,16 @@ def _fixpoint(body_fn, init: jax.Array) -> jax.Array:
 # Batch Search — Algorithm 2 (basic, returns CP-affected superset)
 # ---------------------------------------------------------------------------
 
-def batch_search_basic(g_old: Graph, g_new: Graph, batch: BatchUpdate,
-                       labelling: HighwayLabelling,
-                       plan: RelaxPlan | None = None) -> jax.Array:
-    """Returns aff[R, V] bool — the CP-affected supersets, per landmark."""
-    n = g_old.n
-    dist_g = labelling.dist                                   # [R, V]
+def search_basic_planes(g_new: Graph, batch: BatchUpdate, dist_g: jax.Array,
+                        plan: RelaxPlan | None = None) -> jax.Array:
+    """Algo-2 search over an arbitrary plane slice `dist_g` [P, V].
 
-    da = dist_g[:, batch.src]                                 # [R, U]
+    Entirely per-plane (the paper's landmark parallelism): `core/shard.py`
+    runs this on each shard's local planes with no cross-shard traffic.
+    """
+    n = g_new.n
+
+    da = dist_g[:, batch.src]                                 # [P, U]
     db = dist_g[:, batch.dst]
     nontrivial = (da != db) & batch.valid[None, :]
     anchor = jnp.where(da < db, batch.dst[None, :], batch.src[None, :])
@@ -100,19 +101,28 @@ def batch_search_basic(g_old: Graph, g_new: Graph, batch: BatchUpdate,
     return seeded | (best < INF_D)
 
 
+def batch_search_basic(g_old: Graph, g_new: Graph, batch: BatchUpdate,
+                       labelling: HighwayLabelling,
+                       plan: RelaxPlan | None = None) -> jax.Array:
+    """Returns aff[R, V] bool — the CP-affected supersets, per landmark."""
+    return search_basic_planes(g_new, batch, labelling.dist, plan)
+
+
 # ---------------------------------------------------------------------------
 # Batch Search — Algorithm 3 (improved, extended landmark lengths)
 # ---------------------------------------------------------------------------
 
-def batch_search_improved(g_old: Graph, g_new: Graph, batch: BatchUpdate,
-                          labelling: HighwayLabelling,
-                          plan: RelaxPlan | None = None) -> jax.Array:
-    """Returns aff[R, V] bool ⊇ LD-affected vertices, per landmark."""
-    n = g_old.n
-    dist_g = labelling.dist
-    key2_g = labelling.key2()                                 # [R, V]
-    beta = key4_beta(key2_g)                                  # [R, V]
-    hub_mask = _per_plane_hub_mask(labelling, n)              # [R, V]
+def search_improved_planes(g_new: Graph, batch: BatchUpdate,
+                           dist_g: jax.Array, hub_g: jax.Array,
+                           hub_mask: jax.Array,
+                           plan: RelaxPlan | None = None) -> jax.Array:
+    """Algo-3 search over an arbitrary plane slice (dist/hub/hub_mask [P, V]).
+
+    Entirely per-plane; `core/shard.py` runs it on shard-local planes.
+    """
+    n = g_new.n
+    key2_g = key2_make(dist_g, hub_g)                         # [P, V]
+    beta = key4_beta(key2_g)                                  # [P, V]
 
     da = dist_g[:, batch.src]
     db = dist_g[:, batch.dst]
@@ -147,23 +157,29 @@ def batch_search_improved(g_old: Graph, g_new: Graph, batch: BatchUpdate,
     return seeded | (best < INF_KEY4)
 
 
+def batch_search_improved(g_old: Graph, g_new: Graph, batch: BatchUpdate,
+                          labelling: HighwayLabelling,
+                          plan: RelaxPlan | None = None) -> jax.Array:
+    """Returns aff[R, V] bool ⊇ LD-affected vertices, per landmark."""
+    hub_mask = _per_plane_hub_mask(labelling, g_new.n)
+    return search_improved_planes(g_new, batch, labelling.dist, labelling.hub,
+                                  hub_mask, plan)
+
+
 # ---------------------------------------------------------------------------
 # Batch Repair — Algorithm 4
 # ---------------------------------------------------------------------------
 
-def batch_repair(g_new: Graph, aff: jax.Array,
-                 labelling: HighwayLabelling,
-                 plan: RelaxPlan | None = None) -> HighwayLabelling:
-    """Settle d^L_{G'} on the affected sets and rewrite labels minimally.
+def repair_planes(g_new: Graph, aff: jax.Array, key2_g: jax.Array,
+                  hub_mask: jax.Array,
+                  plan: RelaxPlan | None = None) -> jax.Array:
+    """Algo-4 repair over an arbitrary plane slice; returns new key2 [P, V].
 
     The paper's ascending-distance wavefront (settle V_min, relax neighbors)
     is realized as a boundary-seeded relaxation fixpoint: identical final
-    values by Lemma 5.20 + monotonicity.
+    values by Lemma 5.20 + monotonicity. Entirely per-plane, so
+    `core/shard.py` runs it on shard-local planes.
     """
-    n = g_new.n
-    key2_g = labelling.key2()
-    hub_mask = _per_plane_hub_mask(labelling, n)
-    r_count = labelling.num_landmarks
 
     def plane_repair(aff_p, key2_p, hub_p):
         # Landmark-distance bounds from *unaffected* neighbours (line 3).
@@ -183,10 +199,18 @@ def batch_repair(g_new: Graph, aff: jax.Array,
         settled = _fixpoint(sweep, base)
         return jnp.where(aff_p, settled, key2_p)
 
-    new_key2 = jax.vmap(plane_repair)(aff, key2_g, hub_mask)
+    return jax.vmap(plane_repair)(aff, key2_g, hub_mask)
+
+
+def batch_repair(g_new: Graph, aff: jax.Array,
+                 labelling: HighwayLabelling,
+                 plan: RelaxPlan | None = None) -> HighwayLabelling:
+    """Settle d^L_{G'} on the affected sets and rewrite labels minimally."""
+    hub_mask = _per_plane_hub_mask(labelling, g_new.n)
+    new_key2 = repair_planes(g_new, aff, labelling.key2(), hub_mask, plan)
     dist = jnp.minimum(key2_dist(new_key2), INF_D)
     hub = key2_hub(new_key2) & (dist < INF_D)
-    highway = dist[jnp.arange(r_count)[:, None],
+    highway = dist[jnp.arange(labelling.num_landmarks)[:, None],
                    labelling.landmarks[None, :]]
     return HighwayLabelling(labelling.landmarks, dist, hub, highway)
 
@@ -198,7 +222,8 @@ def batch_repair(g_new: Graph, aff: jax.Array,
 @partial(jax.jit, static_argnames=("improved",))
 def batchhl_update(g_old: Graph, batch: BatchUpdate,
                    labelling: HighwayLabelling, improved: bool = True,
-                   plan: RelaxPlan | None = None
+                   plan: RelaxPlan | None = None,
+                   g_new: Graph | None = None
                    ) -> tuple[Graph, HighwayLabelling, jax.Array]:
     """One BatchHL step: apply B, search, repair. Returns (G', Γ', aff).
 
@@ -206,8 +231,12 @@ def batchhl_update(g_old: Graph, batch: BatchUpdate,
     be prepared from the *post-update* snapshot G' = apply_batch(g_old,
     batch) so the tiling covers edges the batch inserts (launch/serve.py
     shows the amortized pattern). plan=None runs the jnp reference.
+    Callers that already materialized G' (typically for that prepare) can
+    pass it as `g_new` to skip the recompute; it must equal
+    apply_batch(g_old, batch).
     """
-    g_new = apply_batch(g_old, batch)
+    if g_new is None:
+        g_new = apply_batch(g_old, batch)
     search = batch_search_improved if improved else batch_search_basic
     aff = search(g_old, g_new, batch, labelling, plan)
     new_labelling = batch_repair(g_new, aff, labelling, plan)
@@ -228,11 +257,16 @@ def batchhl_update_split(g_old: Graph, batch: BatchUpdate,
     dele = BatchUpdate(batch.src, batch.dst, batch.is_del,
                        batch.valid & batch.is_del)
     plan = None
+    g_ins = None
     if engine is not None:
-        plan = engine.prepare(apply_batch(g_old, ins))
-    g1, lab1, aff1 = batchhl_update(g_old, ins, labelling, improved, plan)
+        g_ins = apply_batch(g_old, ins)
+        plan = engine.prepare(g_ins)
+    g1, lab1, aff1 = batchhl_update(g_old, ins, labelling, improved, plan,
+                                    g_new=g_ins)
     if engine is not None:
-        plan = engine.prepare(g1, topology_changed=False)
+        # The deletion sub-batch only flips validity bits of the snapshot
+        # just tiled — structurally safe, skip the fingerprint sync.
+        plan = engine.prepare(g1, topology_changed=False, verify_cache=False)
     g2, lab2, aff2 = batchhl_update(g1, dele, lab1, improved, plan)
     return g2, lab2, aff1 | aff2
 
@@ -248,14 +282,24 @@ def uhl_update(g_old: Graph, batch: BatchUpdate,
     g, lab = g_old, labelling
     total_aff = jnp.zeros_like(labelling.hub)
     u = batch.src.shape[0]
+    # One device→host pull for the whole loop: indexing the device arrays
+    # inside it (bool(~batch.is_del[i] & ...)) would force a blocking sync
+    # per update, serializing the unit-update baseline on transfer latency.
+    is_del_h = np.asarray(batch.is_del)
+    valid_h = np.asarray(batch.valid)
     for i in range(u):
         single = BatchUpdate(batch.src[i:i + 1], batch.dst[i:i + 1],
                              batch.is_del[i:i + 1], batch.valid[i:i + 1])
-        plan = None
+        plan, g_next = None, None
         if engine is not None:
-            is_ins = bool(~batch.is_del[i] & batch.valid[i])
-            plan = engine.prepare(apply_batch(g, single),
-                                  topology_changed=is_ins)
-        g, lab, aff = batchhl_update(g, single, lab, improved, plan)
+            is_ins = bool(~is_del_h[i] & valid_h[i])
+            g_next = apply_batch(g, single)
+            # Deletion steps only flip validity bits of the snapshot the
+            # engine last tiled — structurally safe, so skip the
+            # fingerprint's per-step host sync (see engine.prepare).
+            plan = engine.prepare(g_next, topology_changed=is_ins,
+                                  verify_cache=False)
+        g, lab, aff = batchhl_update(g, single, lab, improved, plan,
+                                     g_new=g_next)
         total_aff = total_aff | aff
     return g, lab, total_aff

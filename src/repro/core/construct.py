@@ -19,26 +19,30 @@ from repro.graphs.coo import Graph, INF_D
 from repro.core.engine import RelaxPlan, relax_sweep
 from repro.core.labelling import (
     HighwayLabelling, INF_KEY2, key2_dist, key2_hub,
-    landmark_onehot,
+    per_plane_hub_mask,
 )
 
 
-def build_labelling(g: Graph, landmarks: jax.Array,
-                    max_iters: int | None = None,
-                    plan: RelaxPlan | None = None) -> HighwayLabelling:
-    """Construct the minimal highway-cover labelling for G."""
-    r_count = landmarks.shape[0]
+def construct_key2_planes(g: Graph, own: jax.Array,
+                          landmarks_full: jax.Array,
+                          max_iters: int | None = None,
+                          plan: RelaxPlan | None = None) -> jax.Array:
+    """Pruned-BFS fixpoints for a plane slice; returns key2 [P, V].
+
+    `own` is the owning landmark of each plane in the slice [P];
+    `landmarks_full` is the complete landmark set [R] (the hub flags must
+    see every landmark, not just the slice's). Entirely per-plane, so
+    `core/shard.py` runs it on shard-local planes.
+    """
+    p_count = own.shape[0]
     n = g.n
-    is_hub_v = landmark_onehot(landmarks, n)      # bool[V]
     # Flag semantics are per-plane ("landmark other than r"): landmark r's own
     # plane must not set the flag at r. Handled by seeding r with (0, False)
     # and masking the hub-force at each plane's own landmark.
-    dst_is_hub = jnp.broadcast_to(is_hub_v, (r_count, n))
-    own = jax.nn.one_hot(landmarks, n, dtype=bool)
-    dst_is_hub = dst_is_hub & ~own
+    dst_is_hub = per_plane_hub_mask(landmarks_full, own, n)
 
-    key2_0 = jnp.full((r_count, n), INF_KEY2, jnp.int32)
-    key2_0 = key2_0.at[jnp.arange(r_count), landmarks].set(1)  # (d=0, l=False)
+    key2_0 = jnp.full((p_count, n), INF_KEY2, jnp.int32)
+    key2_0 = key2_0.at[jnp.arange(p_count), own].set(1)  # (d=0, l=False)
 
     # vmapped fixpoint with per-plane hub masks.
     def _fix(k0, hub_mask):
@@ -62,7 +66,15 @@ def build_labelling(g: Graph, landmarks: jax.Array,
             cond, body, (k0, jnp.asarray(True), jnp.asarray(0)))
         return k
 
-    key2 = jax.vmap(_fix)(key2_0, dst_is_hub)
+    return jax.vmap(_fix)(key2_0, dst_is_hub)
+
+
+def build_labelling(g: Graph, landmarks: jax.Array,
+                    max_iters: int | None = None,
+                    plan: RelaxPlan | None = None) -> HighwayLabelling:
+    """Construct the minimal highway-cover labelling for G."""
+    r_count = landmarks.shape[0]
+    key2 = construct_key2_planes(g, landmarks, landmarks, max_iters, plan)
 
     dist = jnp.minimum(key2_dist(key2), INF_D)
     hub = key2_hub(key2) & (dist < INF_D)

@@ -60,6 +60,23 @@ class RelaxPlan:
 JNP_PLAN = RelaxPlan(tiles=None, backend="jnp")
 
 
+def shard_gate(plan: RelaxPlan | None) -> RelaxPlan | None:
+    """Downgrade a plan to one usable inside a `shard_map` body.
+
+    The jnp backend is shard-transparent (pure gather/segment-min on
+    replicated COO arrays), so it passes through. The Pallas tiling is not
+    yet shard-aware: `BlockedGraph` tiles the full vertex range and the
+    kernel assumes it owns every destination block, which double-relaxes
+    under a sharded mesh. TODO(pallas-shard): tile per vertex shard
+    (block_v-aligned V splits) and launch the kernel per shard; until then
+    sharded sweeps run the jnp reference per shard (bit-identical results —
+    the parity suite pins pallas ≡ jnp on every call-site).
+    """
+    if plan is not None and plan.backend == "pallas":
+        return JNP_PLAN
+    return plan
+
+
 def relax_sweep(plan: RelaxPlan | None, g: Graph, keys: jax.Array,
                 step, inf, *, hub: jax.Array | None = None,
                 clear_bit: int = 0,
@@ -104,17 +121,62 @@ class RelaxEngine:
         self.backend = backend
         self.block_v = block_v
         self._tiles: BlockedGraph | None = None
+        self._fingerprint: tuple | None = None
         self.retile_count = 0  # observability: serve/benchmarks report this
+        self.stale_cache_retiles = 0  # fingerprint mismatches caught below
 
-    def prepare(self, g: Graph, topology_changed: bool = True) -> RelaxPlan:
+    @staticmethod
+    def _snapshot_fingerprint(g: Graph) -> tuple:
+        """Cheap identity of a snapshot's topology slots.
+
+        (n, capacity, occupied-slot count, all-slot src/dst checksum). The
+        checksum covers *every* slot — free slots included — because
+        insertions rewrite free slots (changing it) while deletions only
+        flip validity bits (leaving it untouched). Two tiny device
+        reductions + one host sync; negligible next to the O(E log E)
+        retile it guards.
+        """
+        occupied = int(jnp.sum(g.valid))
+        chk = int(jnp.sum(g.src.astype(jnp.uint32) * jnp.uint32(2654435761)
+                          + g.dst.astype(jnp.uint32) * jnp.uint32(40503)))
+        return (g.n, g.src.shape[0], occupied, chk)
+
+    def _cache_is_stale(self, g: Graph) -> bool:
+        """True when `g`'s topology slots don't match the cached tiling.
+
+        Legitimate reuse (deletion-only churn since tiling) keeps n,
+        capacity, and the all-slot checksum fixed and can only *shrink* the
+        occupied count; anything else — an insertion the caller forgot to
+        flag, or a different graph entirely — mismatches.
+        """
+        n, cap, occupied, chk = self._fingerprint
+        n2, cap2, occupied2, chk2 = self._snapshot_fingerprint(g)
+        return (n2, cap2, chk2) != (n, cap, chk) or occupied2 > occupied
+
+    def prepare(self, g: Graph, topology_changed: bool = True,
+                verify_cache: bool = True) -> RelaxPlan:
         """Plan sweeps for snapshot `g`, reusing the cached tiling when the
         caller can vouch that no topology slot changed since the last
         prepare (deletion-only batches flip validity bits only).
+
+        The vouch is verified: a snapshot fingerprint recorded at tiling
+        time is re-checked on every cache hit, and a mismatch (slots
+        changed, or a different graph entirely) forces a retile instead of
+        silently serving stale tiles (counted in `stale_cache_retiles`).
+        The check costs two small device reductions + a host sync;
+        `verify_cache=False` skips it for tight inner loops whose snapshot
+        is *derived* from the tiled one by deletions alone (the engine's
+        own variant drivers, `uhl_update`/`batchhl_update_split`, where a
+        per-step sync would serialize the loop on transfer latency).
 
         On the jnp backend this is free — no tiling, no host sync.
         """
         if self.backend == "jnp":
             return JNP_PLAN
+        if (self._tiles is not None and not topology_changed
+                and verify_cache and self._cache_is_stale(g)):
+            self.stale_cache_retiles += 1
+            topology_changed = True
         if self._tiles is None or topology_changed:
             # Host sync: pull the slot arrays once per topology change and
             # tile only the occupied slots (free slots get src/dst rewritten
@@ -122,5 +184,6 @@ class RelaxEngine:
             self._tiles = er_ops.prepare_topology(
                 np.asarray(g.src), np.asarray(g.dst), np.asarray(g.valid),
                 g.n, self.block_v)
+            self._fingerprint = self._snapshot_fingerprint(g)
             self.retile_count += 1
         return RelaxPlan(tiles=self._tiles, backend="pallas")

@@ -118,3 +118,18 @@ def landmark_onehot(landmarks: jax.Array, n: int) -> jax.Array:
     """bool[V]: vertex is a landmark."""
     v_ids = jnp.arange(n)
     return jnp.any(v_ids[None, :] == landmarks[:, None], axis=0)
+
+
+def per_plane_hub_mask(landmarks_full: jax.Array, own: jax.Array,
+                       n: int) -> jax.Array:
+    """[P, V] True where vertex is a landmark *other than* the plane's own.
+
+    The hub-flag rule of the ⊕ operator, shared by construction, search,
+    and repair. `landmarks_full` is the complete landmark set [R]; `own`
+    is the owning landmark of each plane in this (possibly sharded) plane
+    slice [P] — the split lets `core/shard.py` evaluate the mask on a
+    local slice of planes while still flagging every global landmark.
+    """
+    is_hub_v = landmark_onehot(landmarks_full, n)
+    own_oh = jax.nn.one_hot(own, n, dtype=bool)
+    return jnp.broadcast_to(is_hub_v, own_oh.shape) & ~own_oh

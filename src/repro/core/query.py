@@ -23,6 +23,25 @@ from repro.core.engine import RelaxPlan, relax_sweep
 from repro.core.labelling import HighwayLabelling, landmark_onehot
 
 
+def effective_label_planes(dist: jax.Array, hub: jax.Array, own: jax.Array,
+                           landmarks_full: jax.Array) -> jax.Array:
+    """[P, V] effective label values for a plane slice (dist/hub [P, V]).
+
+    `own` [P] is each plane's landmark id, `landmarks_full` [R] the complete
+    landmark set. Entirely per-plane, so `core/shard.py` evaluates it on
+    shard-local planes; `effective_labels` below is the full-plane wrapper.
+    """
+    v_ids = jnp.arange(dist.shape[1])
+    is_landmark_v = jnp.any(v_ids[None, :] == landmarks_full[:, None], axis=0)
+    mask = (dist < INF_D) & ~hub & ~is_landmark_v[None, :]
+    vals = jnp.where(mask, dist, INF_D)
+    # Landmark columns get the trivial (own, 0) one-hot entry.
+    onehot = jnp.where(own[:, None] == landmarks_full[None, :],
+                       0, INF_D).astype(jnp.int32)
+    cols = landmarks_full
+    return vals.at[:, cols].set(jnp.minimum(vals[:, cols], onehot))
+
+
 def effective_labels(labelling: HighwayLabelling) -> jax.Array:
     """[R, V] label values with landmark columns replaced by highway one-hots.
 
@@ -30,11 +49,8 @@ def effective_labels(labelling: HighwayLabelling) -> jax.Array:
     Eq.-3 role is played by the trivial entry (r_k, 0), which composes with
     the highway to give exact landmark distances (Def. 3.3).
     """
-    vals = labelling.label_values()
-    r_count = labelling.num_landmarks
-    cols = labelling.landmarks
-    onehot = jnp.where(jnp.eye(r_count, dtype=bool), 0, INF_D).astype(jnp.int32)
-    return vals.at[:, cols].set(jnp.minimum(vals[:, cols], onehot))
+    return effective_label_planes(labelling.dist, labelling.hub,
+                                  labelling.landmarks, labelling.landmarks)
 
 
 def _minplus_bound(s_lab: jax.Array, highway: jax.Array,

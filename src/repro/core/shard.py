@@ -1,0 +1,316 @@
+"""Mesh-sharded BatchHL: construction, batch update, and queries under
+`shard_map` (DESIGN.md §4).
+
+The paper's §6 parallelism is landmark-plane parallelism: every search,
+repair, and construction fixpoint is independent per landmark plane, and
+Farhan et al.'s incremental follow-up confirms the independence survives
+updates. The unsharded code realizes it as a single-device `vmap` over the
+R axis; this module lifts the same per-plane functions onto a device mesh
+(`launch/mesh.py`: `data` × `model`):
+
+* **Maintenance** (``shard_build_labelling`` / ``shard_batchhl_update``):
+  landmark planes are sharded over the ``model`` axis and — since no
+  queries run mid-update — over the idle ``data`` axis too (the combined
+  ``("model", "data")`` spec). Each shard runs the stock plane-slice
+  fixpoints (`construct_key2_planes`, `search_*_planes`, `repair_planes`)
+  on its local planes with the graph replicated: all-local, zero
+  cross-shard traffic inside the wave loops. Only the highway rows leave
+  the shard, assembled row-sharded by the out-spec (the "highway gather"
+  happens lazily as an all-gather when a consumer needs it replicated).
+
+* **Queries** (``shard_batched_query``): landmark planes over ``model``,
+  the query batch over ``data``. The Eq.-3 min-contraction reduces over
+  the sharded landmark axes through collectives (one `all_gather` of the
+  target labels + one `pmin`); the bounded BiBFS runs all-local per query
+  shard. Query batches are padded to the data-axis size and sliced back.
+
+* **Cross-plane reductions** (``affected_vertices``): the per-plane `aff`
+  planes OR-merge into one affected-vertex mask through a `pmax`.
+
+Bit-parity: per-plane values are exact int32 fixpoints independent of
+iteration count, and min/OR reductions are associative — sharded outputs
+are bit-identical to the unsharded `vmap` path on any mesh shape
+(`tests/test_shard.py` pins it on 1-device and forced-8-device meshes).
+
+Sweep backends: plans pass through `engine.shard_gate` — the jnp backend
+is shard-transparent; the Pallas tiling is gated to per-shard jnp until it
+learns vertex-shard-local tiles (TODO in `core/engine.py`).
+
+Requirements: R must divide evenly over the plane-sharding axes (data ×
+model for maintenance, model for queries). Query batches are padded
+automatically; landmark counts are validated with a clear error.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.graphs.coo import Graph, BatchUpdate, INF_D, apply_batch
+from repro.core.batch import (repair_planes, search_basic_planes,
+                              search_improved_planes)
+from repro.core.construct import construct_key2_planes
+from repro.core.engine import RelaxPlan, shard_gate
+from repro.core.labelling import (HighwayLabelling, key2_dist, key2_hub,
+                                  key2_make, per_plane_hub_mask)
+from repro.core.query import bounded_bibfs, effective_label_planes
+
+#: Plane-sharding spec during maintenance: landmark planes over the whole
+#: grid (`model` major, `data` minor — the data axis is idle while the
+#: labelling is being rewritten, so it contributes landmark parallelism).
+MAINT_AXES = ("model", "data")
+
+
+def _check_planes(r: int, size: int, what: str) -> None:
+    if r % size:
+        raise ValueError(
+            f"landmark count {r} must be divisible by the {what} "
+            f"sharding size {size}; pick R as a multiple (or a smaller "
+            f"--shards / mesh)")
+
+
+def _maint_size(mesh) -> int:
+    return mesh.shape["model"] * mesh.shape["data"]
+
+
+# ---------------------------------------------------------------------------
+# Construction
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("mesh", "max_iters"))
+def shard_build_labelling(mesh, g: Graph, landmarks: jax.Array,
+                          max_iters: int | None = None,
+                          plan: RelaxPlan | None = None) -> HighwayLabelling:
+    """`build_labelling` under shard_map; bit-identical outputs.
+
+    Returns a labelling whose dist/hub planes are sharded over
+    ``("model", "data")`` on the R axis and whose highway is row-sharded;
+    consumers reshard transparently.
+    """
+    _check_planes(landmarks.shape[0], _maint_size(mesh), "maintenance")
+    plan = shard_gate(plan)
+
+    def body(g, own, landmarks_full):
+        key2 = construct_key2_planes(g, own, landmarks_full, max_iters, plan)
+        dist = jnp.minimum(key2_dist(key2), INF_D)
+        hub = key2_hub(key2) & (dist < INF_D)
+        highway = dist[:, landmarks_full]    # local rows [P, R]
+        return dist, hub, highway
+
+    rv = P(MAINT_AXES, None)
+    dist, hub, highway = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(MAINT_AXES), P()),
+        out_specs=(rv, rv, rv),
+        # jax 0.4.37 has no replication rule for while_loop (the fixpoint
+        # sweeps); every output is fully plane-sharded anyway.
+        check_rep=False)(g, landmarks, landmarks)
+    return HighwayLabelling(landmarks.astype(jnp.int32), dist, hub, highway)
+
+
+# ---------------------------------------------------------------------------
+# Batch update
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("mesh", "improved"))
+def shard_batchhl_update(mesh, g_old: Graph, batch: BatchUpdate,
+                         labelling: HighwayLabelling, improved: bool = True,
+                         plan: RelaxPlan | None = None
+                         ) -> tuple[Graph, HighwayLabelling, jax.Array]:
+    """`batchhl_update` under shard_map; bit-identical (G', Γ', aff).
+
+    Per-plane search + repair run all-local on each shard's plane slice;
+    the batch and both graph snapshots are replicated. aff and the new
+    planes come back sharded over ``("model", "data")`` on the R axis.
+    """
+    _check_planes(labelling.num_landmarks, _maint_size(mesh), "maintenance")
+    plan = shard_gate(plan)
+    g_new = apply_batch(g_old, batch)
+
+    def body(g_new, batch, dist, hub, own, landmarks_full):
+        hub_mask = per_plane_hub_mask(landmarks_full, own, g_new.n)
+        if improved:
+            aff = search_improved_planes(g_new, batch, dist, hub, hub_mask,
+                                         plan)
+        else:
+            aff = search_basic_planes(g_new, batch, dist, plan)
+        new_key2 = repair_planes(g_new, aff, key2_make(dist, hub), hub_mask,
+                                 plan)
+        ndist = jnp.minimum(key2_dist(new_key2), INF_D)
+        nhub = key2_hub(new_key2) & (ndist < INF_D)
+        highway = ndist[:, landmarks_full]   # local rows [P, R]
+        return ndist, nhub, highway, aff
+
+    rv = P(MAINT_AXES, None)
+    ndist, nhub, highway, aff = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), rv, rv, P(MAINT_AXES), P()),
+        out_specs=(rv, rv, rv, rv),
+        # No replication rule for while_loop on this jax pin; outputs are
+        # fully plane-sharded anyway.
+        check_rep=False)(
+            g_new, batch, labelling.dist, labelling.hub,
+            labelling.landmarks, labelling.landmarks)
+    new_labelling = HighwayLabelling(labelling.landmarks, ndist, nhub,
+                                     highway)
+    return g_new, new_labelling, aff
+
+
+@partial(jax.jit, static_argnames=("mesh",))
+def affected_vertices(mesh, aff: jax.Array) -> jax.Array:
+    """OR-merge the per-plane affected sets into one bool[V] vertex mask.
+
+    The cross-plane reduction of DESIGN.md §4: each shard ORs its local
+    planes, then a `pmax` over the plane-sharding axes merges the shards.
+    """
+    def body(aff_loc):
+        any_loc = jnp.any(aff_loc, axis=0).astype(jnp.int32)
+        return jax.lax.pmax(any_loc, MAINT_AXES) > 0
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(MAINT_AXES, None),),
+                     out_specs=P(None))(aff)
+
+
+# ---------------------------------------------------------------------------
+# Queries
+# ---------------------------------------------------------------------------
+
+def shard_batched_query(mesh, g: Graph, labelling: HighwayLabelling,
+                        s: jax.Array, t: jax.Array, max_steps: int = 64,
+                        use_kernel: bool = False,
+                        plan: RelaxPlan | None = None) -> jax.Array:
+    """`batched_query` under shard_map; bit-identical exact distances.
+
+    Landmark planes shard over ``model``; the query batch shards over
+    ``data`` (padded to a multiple of the data-axis size, sliced back).
+    The Eq.-3 upper bound reduces over the sharded landmark axis with one
+    `all_gather` (target labels) + one `pmin`; the BiBFS expands each
+    query shard all-local against the replicated graph. Within a data
+    shard the BiBFS batch composition differs from the unsharded run, but
+    the returned min(d_sparse, d⊤) is composition-independent: BFS levels
+    are exact, so d_sparse is exact whenever it undercuts d⊤ and is
+    dominated by d⊤ otherwise.
+    """
+    # The pad/slice stays *outside* the jitted core: on the pinned jax,
+    # GSPMD mis-reshards a concatenate produced inside the same jit as a
+    # multi-axis shard_map consuming it with P("data") — lanes interleave
+    # across devices. The padded path is locked in by the B=37 sweep over
+    # data>1 meshes in `_selftest` below (run as
+    # tests/test_shard.py::test_multidevice_parity_selftest).
+    b = s.shape[0]
+    pad = (-b) % mesh.shape["data"]
+    if pad:
+        s = jnp.concatenate([s, jnp.zeros((pad,), s.dtype)])
+        t = jnp.concatenate([t, jnp.zeros((pad,), t.dtype)])
+    out = _shard_query_core(mesh, g, labelling, s, t, max_steps, use_kernel,
+                            plan)
+    return out[:b]
+
+
+@partial(jax.jit, static_argnames=("mesh", "max_steps", "use_kernel"))
+def _shard_query_core(mesh, g: Graph, labelling: HighwayLabelling,
+                      s: jax.Array, t: jax.Array, max_steps: int,
+                      use_kernel: bool,
+                      plan: RelaxPlan | None) -> jax.Array:
+    _check_planes(labelling.num_landmarks, mesh.shape["model"], "model")
+    plan = shard_gate(plan)
+    if use_kernel:
+        # TODO(pallas-shard): the minplus kernel contracts the full [R, R]
+        # highway; under a model-sharded R axis it needs a per-shard launch
+        # + pmin epilogue. Until then the sharded bound runs the jnp
+        # contraction (bit-identical — see tests/test_kernels.py parity).
+        use_kernel = False
+
+    def body(g, dist, hub, own, landmarks_full, highway_rows, s, t):
+        # Eq. 3 — tropical contraction with the landmark axis sharded.
+        vals = effective_label_planes(dist, hub, own, landmarks_full)
+        s_lab = jnp.minimum(vals[:, s].T, INF_D)      # [B_loc, P]
+        t_lab = jnp.minimum(vals[:, t].T, INF_D)      # [B_loc, P]
+        t_all = jax.lax.all_gather(t_lab, "model", axis=1, tiled=True)
+        # mid[b, j] = min over local i of s_lab[b, i] + H[i, j]
+        mid = jnp.min(s_lab[:, :, None] + highway_rows[None, :, :], axis=1)
+        partial_bound = jnp.min(mid + t_all, axis=1)  # [B_loc]
+        d_top = jnp.minimum(jax.lax.pmin(partial_bound, "model"), INF_D)
+
+        # Bounded BiBFS on the local query shard (replicated over model).
+        d_sparse = bounded_bibfs(g, landmarks_full, s, t, d_top, max_steps,
+                                 plan)
+        out = jnp.minimum(d_sparse, d_top)
+        return jnp.where(out >= INF_D, INF_D, out)
+
+    qv = P("model", None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), qv, qv, P("model"), P(), qv, P("data"), P("data")),
+        out_specs=P("data"),
+        # check_rep can't see through the BiBFS while_loop; replication
+        # over `model` holds by construction (all body inputs are either
+        # replicated or pmin-merged before the loop).
+        check_rep=False)(
+            g, labelling.dist, labelling.hub, labelling.landmarks,
+            labelling.landmarks, labelling.highway, s, t)
+
+
+# ---------------------------------------------------------------------------
+# Self-test (runnable under a forced multi-device host platform)
+# ---------------------------------------------------------------------------
+
+def _selftest() -> None:
+    """Sharded-vs-unsharded bit-parity on every host-mesh factorization.
+
+    Run with a forced device count to exercise real multi-device meshes:
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+            PYTHONPATH=src python -m repro.core.shard
+    """
+    import numpy as np
+    from repro.graphs import generators as gen
+    from repro.graphs.coo import from_edges, make_batch
+    from repro.core.construct import build_labelling, \
+        select_landmarks_by_degree
+    from repro.core.batch import batchhl_update
+    from repro.core.query import batched_query
+    from repro.launch.mesh import make_host_mesh
+
+    n_dev = len(jax.devices())
+    n, r = 120, 8
+    edges = gen.random_connected(n, extra_edges=150, seed=3)
+    g = from_edges(n, edges, edges.shape[0] + 64)
+    landmarks = select_landmarks_by_degree(g, r)
+    ups = gen.random_batch_updates(edges, n, n_ins=6, n_del=6, seed=9)
+    batch = make_batch(ups, pad_to=12)
+    rng = np.random.default_rng(0)
+    qs = jnp.asarray(rng.integers(0, n, 37), jnp.int32)   # odd B → padding
+    qt = jnp.asarray(rng.integers(0, n, 37), jnp.int32)
+
+    lab0 = build_labelling(g, landmarks)
+    g1, lab1, aff1 = batchhl_update(g, batch, lab0, improved=True)
+    d1 = batched_query(g1, lab1, qs, qt)
+
+    for model in [m for m in (1, 2, 4, 8) if n_dev % m == 0]:
+        mesh = make_host_mesh(model=model)
+        slab0 = shard_build_labelling(mesh, g, landmarks)
+        for f in ("dist", "hub", "highway"):
+            np.testing.assert_array_equal(np.asarray(getattr(slab0, f)),
+                                          np.asarray(getattr(lab0, f)))
+        sg1, slab1, saff1 = shard_batchhl_update(mesh, g, batch, slab0)
+        np.testing.assert_array_equal(np.asarray(saff1), np.asarray(aff1))
+        for f in ("dist", "hub", "highway"):
+            np.testing.assert_array_equal(np.asarray(getattr(slab1, f)),
+                                          np.asarray(getattr(lab1, f)))
+        sd1 = shard_batched_query(mesh, sg1, slab1, qs, qt)
+        np.testing.assert_array_equal(np.asarray(sd1), np.asarray(d1))
+        affv = affected_vertices(mesh, saff1)
+        np.testing.assert_array_equal(
+            np.asarray(affv), np.asarray(jnp.any(aff1, axis=0)))
+        print(f"mesh (data={mesh.shape['data']}, model={model}): "
+              f"construction/update/query bit-parity OK")
+    print(f"selftest OK on {n_dev} device(s)")
+
+
+if __name__ == "__main__":
+    _selftest()

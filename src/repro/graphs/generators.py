@@ -69,11 +69,18 @@ def molecule_batch(n_mols: int, atoms_per_mol: int, seed: int = 0
 
 
 def random_batch_updates(edges: np.ndarray, n: int, n_ins: int, n_del: int,
-                         seed: int = 0) -> list[tuple[int, int, bool]]:
+                         seed: int = 0,
+                         existing=None) -> list[tuple[int, int, bool]]:
     """Valid updates: deletions sampled from existing edges, insertions are
-    fresh non-edges (paper §3: invalid updates are ignored)."""
+    fresh non-edges (paper §3: invalid updates are ignored).
+
+    `existing` optionally passes a prebuilt membership set/dict of
+    canonical (min, max) edge keys, sparing the O(E) rebuild per call for
+    callers that maintain one incrementally (launch/serve.py).
+    """
     rng = np.random.default_rng(seed)
-    existing = {(min(u, v), max(u, v)) for u, v in edges}
+    if existing is None:
+        existing = {(min(u, v), max(u, v)) for u, v in edges}
     out: list[tuple[int, int, bool]] = []
     if n_del:
         sel = rng.choice(len(edges), size=min(n_del, len(edges)),

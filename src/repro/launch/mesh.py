@@ -19,7 +19,19 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh():
-    """Degenerate mesh for CPU tests: all axes size 1 except data."""
+def make_host_mesh(model: int = 1):
+    """Host-device mesh for CPU runs: (data = n_devices // model, model).
+
+    With the default `model=1` every local device lands on the `data` axis
+    (the historical degenerate shape). Pass `model>1` to split off a
+    landmark-parallel axis — e.g. under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``, `model=4`
+    yields a (data=2, model=4) mesh. `core/shard.py` runs the BatchHL
+    stack on this mesh; `launch/serve.py --mesh host --shards M` wires it
+    into the serving loop.
+    """
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"))
+    if model < 1 or n % model:
+        raise ValueError(
+            f"model-axis size {model} must divide the {n} local devices")
+    return jax.make_mesh((n // model, model), ("data", "model"))

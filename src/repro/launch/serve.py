@@ -9,9 +9,18 @@ BFS oracle (--verify), and checkpoints the labelling for restart.
 
 Sweep backend: ``--backend {auto,jnp,pallas}`` selects the relaxation
 engine backend (DESIGN.md §3). The loop owns one `RelaxEngine`, so the
-Pallas destination-block tiling is prepared once per tick — and reused
-outright across deletion-only ticks — then amortized over every wave of
-batch search, batch repair, and the query-side BiBFS in that tick.
+Pallas destination-block tiling is prepared once per tick — from the
+*post-update* snapshot, so it covers the tick's inserted edges — and
+reused outright across deletion-only ticks, then amortized over every
+wave of batch search, batch repair, and the query-side BiBFS in that
+tick.
+
+Mesh sharding: ``--mesh host`` runs construction, updates, and queries
+through `core/shard.py` on a `make_host_mesh` over the local devices;
+``--shards M`` sets the model-axis size (landmark-plane parallelism), the
+remaining devices form the data axis (query parallelism). Force a
+multi-device CPU host with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``. See DESIGN.md §4.
 """
 from __future__ import annotations
 
@@ -28,8 +37,11 @@ from repro.core.construct import build_labelling, select_landmarks_by_degree
 from repro.core.batch import batchhl_update
 from repro.core.engine import RelaxEngine
 from repro.core.query import batched_query
+from repro.core.shard import (shard_batched_query, shard_batchhl_update,
+                              shard_build_labelling)
 from repro.core import ref
 from repro.checkpoint import manager as ckpt
+from repro.launch.mesh import make_host_mesh
 
 
 def main() -> None:
@@ -49,9 +61,24 @@ def main() -> None:
     ap.add_argument("--use-minplus-kernel", action="store_true",
                     help="route the Eq.-3 upper bound through the Pallas "
                          "minplus kernel")
+    ap.add_argument("--mesh", default="none", choices=("none", "host"),
+                    help="run the BatchHL stack sharded over a device mesh "
+                         "(host = make_host_mesh over the local devices)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="model-axis size of the host mesh: landmark planes "
+                         "shard over it, the other devices form the data "
+                         "(query) axis; must divide the device count")
     ap.add_argument("--verify", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh == "host":
+        mesh = make_host_mesh(model=args.shards)
+        n_dev = len(jax.devices())
+        if args.landmarks % n_dev:
+            ap.error(f"--landmarks {args.landmarks} must be divisible by "
+                     f"the {n_dev} mesh devices (plane sharding)")
 
     edges = gen.barabasi_albert(args.n, args.deg, seed=0)
     cap = edges.shape[0] + args.batches * args.batch_size + 64
@@ -59,43 +86,69 @@ def main() -> None:
     landmarks = select_landmarks_by_degree(g, args.landmarks)
 
     engine = RelaxEngine(backend=args.backend, block_v=args.block_v)
-    plan = engine.prepare(g)
+    # Sharded sweeps run the per-shard jnp reference for now (the tiling is
+    # not shard-aware — engine.shard_gate); skip the host-side tiling cost.
+    plan = None if mesh is not None else engine.prepare(g)
 
     t0 = time.time()
-    lab = build_labelling(g, landmarks, plan=plan)
+    if mesh is not None:
+        lab = shard_build_labelling(mesh, g, landmarks, plan=plan)
+    else:
+        lab = build_labelling(g, landmarks, plan=plan)
     jax.block_until_ready(lab.dist)
+    mesh_desc = ("unsharded" if mesh is None else
+                 f"mesh data={mesh.shape['data']} model={mesh.shape['model']}")
+    # Under a mesh the engine is bypassed: sharded sweeps run per-shard jnp
+    # regardless of --backend (engine.shard_gate) — report what actually ran.
+    eff_backend = engine.backend if mesh is None else "jnp (shard-gated)"
     print(f"constructed labelling: {args.n} vertices, "
           f"{edges.shape[0]} edges, R={args.landmarks}, "
           f"size={int(lab.label_size())}, {time.time() - t0:.2f}s "
-          f"[backend={engine.backend}]")
+          f"[backend={eff_backend}, {mesh_desc}]")
 
-    cur_edges = edges.copy()
+    # Host-side current edge set, maintained incrementally: a swap-remove
+    # list + position map keeps each tick O(batch) instead of rebuilding
+    # (and sorting) the full O(E log E) adjacency set every tick.
+    edge_list: list[tuple[int, int]] = [
+        (int(min(a, b)), int(max(a, b))) for a, b in edges]
+    edge_pos = {e: i for i, e in enumerate(edge_list)}
+
     rng = np.random.default_rng(7)
     for tick in range(args.batches):
+        cur_edges = np.asarray(edge_list, np.int32)
         ups = gen.random_batch_updates(
             cur_edges, args.n, n_ins=args.batch_size // 2,
-            n_del=args.batch_size // 2, seed=100 + tick)
+            n_del=args.batch_size // 2, seed=100 + tick, existing=edge_pos)
         batch = make_batch(ups, pad_to=args.batch_size)
         t0 = time.time()
         # One tiling per tick, prepared from the post-update snapshot so it
-        # covers inserted edges; deletion-only ticks reuse the cached tiles.
-        # Counted inside the update time: it is real per-tick work on the
-        # pallas backend. The jnp backend skips the snapshot entirely.
-        if engine.backend == "jnp":
-            plan = engine.prepare(g)
+        # covers inserted edges (the documented engine contract — both
+        # backends); deletion-only ticks reuse the cached tiles. Counted
+        # inside the update time: it is real per-tick work on the pallas
+        # backend.
+        has_ins = any(not is_del for (_, _, is_del) in ups)
+        if mesh is None:
+            g_next = apply_batch(g, batch)
+            plan = engine.prepare(g_next, topology_changed=has_ins)
+            g, lab, aff = batchhl_update(g, batch, lab, improved=True,
+                                         plan=plan, g_new=g_next)
         else:
-            has_ins = any(not is_del for (_, _, is_del) in ups)
-            plan = engine.prepare(apply_batch(g, batch),
-                                  topology_changed=has_ins)
-        g, lab, aff = batchhl_update(g, batch, lab, improved=True, plan=plan)
+            g, lab, aff = shard_batchhl_update(mesh, g, batch, lab,
+                                               improved=True, plan=plan)
         jax.block_until_ready(lab.dist)
         t_upd = time.time() - t0
 
         qs = jnp.asarray(rng.integers(0, args.n, args.queries), jnp.int32)
         qt = jnp.asarray(rng.integers(0, args.n, args.queries), jnp.int32)
         t0 = time.time()
-        dist = batched_query(g, lab, qs, qt,
-                             use_kernel=args.use_minplus_kernel, plan=plan)
+        if mesh is None:
+            dist = batched_query(g, lab, qs, qt,
+                                 use_kernel=args.use_minplus_kernel,
+                                 plan=plan)
+        else:
+            dist = shard_batched_query(mesh, g, lab, qs, qt,
+                                       use_kernel=args.use_minplus_kernel,
+                                       plan=plan)
         jax.block_until_ready(dist)
         t_q = time.time() - t0
 
@@ -105,34 +158,43 @@ def main() -> None:
               f"({t_q / args.queries * 1e6:.0f}us/q) | "
               f"label size {int(lab.label_size())}")
 
-        # maintain host-side edge list for the next update generator
-        adjset = {(min(a, b), max(a, b)) for a, b in cur_edges}
+        # Fold the tick's updates into the incremental edge set.
         for u, v, is_del in ups:
             k = (min(u, v), max(u, v))
             if is_del:
-                adjset.discard(k)
-            else:
-                adjset.add(k)
-        cur_edges = np.asarray(sorted(adjset), np.int32)
+                i = edge_pos.pop(k, None)
+                if i is not None:
+                    last = edge_list.pop()
+                    if i < len(edge_list):
+                        edge_list[i] = last
+                        edge_pos[last] = i
+            elif k not in edge_pos:
+                edge_pos[k] = len(edge_list)
+                edge_list.append(k)
 
         if args.verify:
             adj = to_numpy_adj(g)
             wrong = 0
-            for i in range(min(64, args.queries)):
+            n_check = min(64, args.queries)
+            for i in range(n_check):
                 o = ref.pair_distance(adj, args.n, int(qs[i]), int(qt[i]))
                 got = float(dist[i])
                 o = got if (o == ref.INF and got >= 1e8) else o
                 if int(qs[i]) == int(qt[i]):
                     o = 0
                 wrong += int(got != o)
-            print(f"  verify: {wrong}/64 mismatches")
+            print(f"  verify: {wrong}/{n_check} mismatches")
 
         if args.ckpt_dir:
             ckpt.save(args.ckpt_dir, tick + 1,
                       {"dist": lab.dist, "hub": lab.hub,
                        "highway": lab.highway, "landmarks": lab.landmarks})
-    print(f"serve loop done [backend={engine.backend}, "
-          f"retiles={engine.retile_count}/{args.batches + 1} prepares]")
+    engine_desc = ("" if mesh is not None else
+                   f"retiles={engine.retile_count}/{args.batches + 1} "
+                   f"prepares, {engine.stale_cache_retiles} stale-cache "
+                   f"catches, ")
+    print(f"serve loop done [backend={eff_backend}, "
+          f"{engine_desc}{mesh_desc}]")
 
 
 if __name__ == "__main__":

@@ -25,6 +25,10 @@ from repro.core.labelling import INF_KEY2, INF_KEY4
 from repro.core.query import batched_query, bounded_bibfs
 from repro.core import ref
 
+# Heavy parity matrix (interpret-mode Pallas on every call-site): the fast
+# CI job skips it; the full job and tier-1 run it all.
+pytestmark = pytest.mark.slow
+
 # (n, extra_edges, block_v): small-V, non-divisible-by-block, tiny-block.
 SHAPES = [(9, 4, 8), (30, 15, 16), (57, 30, 16), (64, 40, 32)]
 
@@ -191,27 +195,56 @@ def test_construction_parity(n, extra, bv):
                                       np.asarray(getattr(lab_j, f)))
 
 
-def test_split_and_unit_variants_parity():
+def _assert_labelling_matches_oracle(g2, landmarks, lab2):
+    """Repaired dist planes must equal the from-scratch BFS oracle's."""
+    adj2 = to_numpy_adj(g2)
+    n = g2.n
+    od, _, _, _ = ref.minimal_labelling(
+        adj2, n, [int(x) for x in np.asarray(landmarks)])
+    jd = np.asarray(lab2.dist)
+    for i in range(len(np.asarray(landmarks))):
+        for v in range(n):
+            want = od[i][v] if od[i][v] != ref.INF else int(INF_D)
+            assert jd[i, v] == want, (i, v)
+
+
+@pytest.mark.parametrize("variant", ["split", "unit"])
+def test_split_and_unit_variants_parity(variant):
     """BHL^s and UHL+ take the engine (per-sub-batch tiling) — their
-    results must match the jnp reference exactly."""
+    results must match the jnp reference bit-for-bit on every labelling
+    field AND the from-scratch BFS oracle on the final snapshot."""
     n = 28
     edges, g, landmarks, lab = _instance(13, n, 14)
     ups = gen.random_batch_updates(edges, n, n_ins=3, n_del=3, seed=17)
     batch = make_batch(ups, pad_to=6)
     engine = RelaxEngine(backend="pallas", block_v=16)
+    update = batchhl_update_split if variant == "split" else uhl_update
 
-    _, lab_sj, aff_sj = batchhl_update_split(g, batch, lab)
-    _, lab_sp, aff_sp = batchhl_update_split(g, batch, lab, engine=engine)
-    np.testing.assert_array_equal(np.asarray(aff_sp), np.asarray(aff_sj))
-    np.testing.assert_array_equal(np.asarray(lab_sp.dist),
-                                  np.asarray(lab_sj.dist))
+    g_j, lab_j, aff_j = update(g, batch, lab)
+    g_p, lab_p, aff_p = update(g, batch, lab, engine=engine)
+    np.testing.assert_array_equal(np.asarray(aff_p), np.asarray(aff_j))
+    for f in ("dist", "hub", "highway"):
+        np.testing.assert_array_equal(np.asarray(getattr(lab_p, f)),
+                                      np.asarray(getattr(lab_j, f)))
+    np.testing.assert_array_equal(np.asarray(g_p.valid),
+                                  np.asarray(g_j.valid))
+    # Oracle correctness (not just backend parity) for both variants, on
+    # both backends (they were just asserted identical).
+    _assert_labelling_matches_oracle(g_j, landmarks, lab_j)
 
-    _, lab_uj, _ = uhl_update(g, batch, lab)
-    _, lab_up, _ = uhl_update(g, batch, lab, engine=engine)
-    np.testing.assert_array_equal(np.asarray(lab_up.dist),
-                                  np.asarray(lab_uj.dist))
-    np.testing.assert_array_equal(np.asarray(lab_up.hub),
-                                  np.asarray(lab_uj.hub))
+    # ...and exact query answers from the engine-driven labelling.
+    rng = np.random.default_rng(n)
+    qs = rng.integers(0, n, 12).astype(np.int32)
+    qt = rng.integers(0, n, 12).astype(np.int32)
+    plan = engine.prepare(g_p, topology_changed=False)
+    got = np.asarray(batched_query(g_p, lab_p, jnp.asarray(qs),
+                                   jnp.asarray(qt), plan=plan))
+    adj2 = to_numpy_adj(g_j)
+    for k in range(12):
+        want = ref.pair_distance(adj2, n, int(qs[k]), int(qt[k]))
+        want = 0 if qs[k] == qt[k] else want
+        want = int(INF_D) if want == ref.INF else want
+        assert got[k] == want
 
 
 # --- tiling-cache contract --------------------------------------------------
@@ -248,6 +281,41 @@ def test_engine_retile_cache():
     jnp_engine = RelaxEngine(backend="jnp")
     assert jnp_engine.prepare(g).tiles is None
     assert jnp_engine.retile_count == 0
+
+
+def test_engine_prepare_catches_stale_cache():
+    """prepare(topology_changed=False) after slots actually changed (or on
+    a different graph entirely) must retile, not silently serve stale
+    tiles — the snapshot fingerprint recorded at tiling time catches it."""
+    n = 26
+    edges, g, landmarks, lab = _instance(19, n, 13)
+    engine = RelaxEngine(backend="pallas", block_v=16)
+    engine.prepare(g)
+    assert engine.retile_count == 1
+
+    # An insertion rewrites topology slots; the caller *lies* about it.
+    ins = make_batch([(0, n - 1, False), (1, n - 2, False)], pad_to=2)
+    g2 = apply_batch(g, ins)
+    plan = engine.prepare(g2, topology_changed=False)
+    assert engine.retile_count == 2, "stale tiling served for new topology"
+    assert engine.stale_cache_retiles == 1
+    # ...and the (re)tiled plan gives correct distances on the new graph.
+    lab_j = build_labelling(g2, landmarks)
+    lab_p = build_labelling(g2, landmarks, plan=plan)
+    np.testing.assert_array_equal(np.asarray(lab_p.dist),
+                                  np.asarray(lab_j.dist))
+
+    # A different graph entirely (same n/capacity) also mismatches.
+    other = gen.random_connected(n, extra_edges=13, seed=99)
+    g_other = from_edges(n, other, g.capacity)
+    engine.prepare(g_other, topology_changed=False)
+    assert engine.stale_cache_retiles == 2
+
+    # Legitimate deletion-only reuse still hits the cache.
+    dele = make_batch([(int(other[0][0]), int(other[0][1]), True)], pad_to=1)
+    engine.prepare(apply_batch(g_other, dele), topology_changed=False)
+    assert engine.retile_count == 3  # unchanged by the deletion-only call
+    assert engine.stale_cache_retiles == 2
 
 
 def test_engine_backend_validation():

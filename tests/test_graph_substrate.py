@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import pytest
 
 pytest.importorskip("hypothesis")  # property tests only; optional dep
+pytestmark = pytest.mark.slow  # property tests: full CI job only
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.graphs import generators as gen

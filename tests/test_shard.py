@@ -1,0 +1,165 @@
+"""Mesh-sharded BatchHL (core/shard.py): sharded-vs-unsharded bit-parity.
+
+In-process tests run on the degenerate 1-device host mesh (conftest keeps
+the real device topology — no XLA_FLAGS here). The real multi-device
+coverage runs in subprocesses that force an 8-device CPU host platform
+(`--xla_force_host_platform_device_count`, the launch/dryrun.py idiom):
+the shard selftest sweeps every (data, model) factorization of 8 — with a
+non-divisible query batch, exercising the pad/slice path — and the
+serving loop runs end-to-end on a (4, 2) mesh against the BFS oracle.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.graphs import generators as gen
+from repro.graphs.coo import from_edges, make_batch
+from repro.core.construct import build_labelling, select_landmarks_by_degree
+from repro.core.batch import batchhl_update
+from repro.core.engine import JNP_PLAN, RelaxPlan, shard_gate
+from repro.core.query import batched_query
+from repro.core.shard import (_check_planes, affected_vertices,
+                              shard_batched_query, shard_batchhl_update,
+                              shard_build_labelling)
+from repro.launch.mesh import make_host_mesh
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _env_8dev():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    return env
+
+
+def _instance(n=60, extra=70, r=4, seed=5):
+    edges = gen.random_connected(n, extra_edges=extra, seed=seed)
+    g = from_edges(n, edges, edges.shape[0] + 32)
+    landmarks = select_landmarks_by_degree(g, r)
+    return edges, g, landmarks
+
+
+# --- 1-device mesh: the sharded code path must already be bit-exact -------
+
+def test_build_update_query_parity_one_device_mesh():
+    mesh = make_host_mesh()
+    edges, g, landmarks = _instance()
+    n = g.n
+
+    lab = build_labelling(g, landmarks)
+    slab = shard_build_labelling(mesh, g, landmarks)
+    for f in ("dist", "hub", "highway"):
+        np.testing.assert_array_equal(np.asarray(getattr(slab, f)),
+                                      np.asarray(getattr(lab, f)))
+
+    ups = gen.random_batch_updates(edges, n, n_ins=4, n_del=4, seed=2)
+    batch = make_batch(ups, pad_to=8)
+    g1, lab1, aff1 = batchhl_update(g, batch, lab, improved=True)
+    sg1, slab1, saff1 = shard_batchhl_update(mesh, g, batch, slab)
+    np.testing.assert_array_equal(np.asarray(saff1), np.asarray(aff1))
+    for f in ("dist", "hub", "highway"):
+        np.testing.assert_array_equal(np.asarray(getattr(slab1, f)),
+                                      np.asarray(getattr(lab1, f)))
+    np.testing.assert_array_equal(np.asarray(sg1.valid), np.asarray(g1.valid))
+
+    rng = np.random.default_rng(0)
+    qs = jnp.asarray(rng.integers(0, n, 23), jnp.int32)
+    qt = jnp.asarray(rng.integers(0, n, 23), jnp.int32)
+    want = batched_query(g1, lab1, qs, qt)
+    got = shard_batched_query(mesh, sg1, slab1, qs, qt)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_basic_search_variant_parity_one_device_mesh():
+    mesh = make_host_mesh()
+    edges, g, landmarks = _instance(seed=8)
+    lab = build_labelling(g, landmarks)
+    ups = gen.random_batch_updates(edges, g.n, n_ins=3, n_del=3, seed=4)
+    batch = make_batch(ups, pad_to=6)
+    _, lab1, aff1 = batchhl_update(g, batch, lab, improved=False)
+    _, slab1, saff1 = shard_batchhl_update(mesh, g, batch, lab,
+                                           improved=False)
+    np.testing.assert_array_equal(np.asarray(saff1), np.asarray(aff1))
+    np.testing.assert_array_equal(np.asarray(slab1.dist),
+                                  np.asarray(lab1.dist))
+
+
+def test_affected_vertices_or_merge():
+    mesh = make_host_mesh()
+    edges, g, landmarks = _instance()
+    lab = build_labelling(g, landmarks)
+    ups = gen.random_batch_updates(edges, g.n, n_ins=4, n_del=4, seed=3)
+    batch = make_batch(ups, pad_to=8)
+    _, _, aff = shard_batchhl_update(mesh, g, batch, lab)
+    got = affected_vertices(mesh, aff)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(jnp.any(aff, axis=0)))
+
+
+def test_plane_divisibility_validation():
+    with pytest.raises(ValueError, match="divisible"):
+        _check_planes(3, 2, "model")
+    _check_planes(4, 2, "model")  # divides: no raise
+    with pytest.raises(ValueError, match="divide"):
+        make_host_mesh(model=3)   # 1 CPU device can't split a model axis
+
+
+def test_shard_gate_downgrades_pallas_plans():
+    assert shard_gate(None) is None
+    assert shard_gate(JNP_PLAN) is JNP_PLAN
+    gated = shard_gate(RelaxPlan(tiles=None, backend="pallas"))
+    assert gated.backend == "jnp"
+
+
+def test_sharded_update_accepts_engine_plan():
+    """Passing a pallas plan through the sharded path must not change
+    results (the gate swaps in the jnp reference per shard)."""
+    mesh = make_host_mesh()
+    edges, g, landmarks = _instance(seed=12)
+    lab = build_labelling(g, landmarks)
+    ups = gen.random_batch_updates(edges, g.n, n_ins=3, n_del=3, seed=6)
+    batch = make_batch(ups, pad_to=6)
+    plan = RelaxPlan(tiles=None, backend="pallas")
+    _, lab_a, aff_a = shard_batchhl_update(mesh, g, batch, lab)
+    _, lab_b, aff_b = shard_batchhl_update(mesh, g, batch, lab, plan=plan)
+    np.testing.assert_array_equal(np.asarray(aff_b), np.asarray(aff_a))
+    np.testing.assert_array_equal(np.asarray(lab_b.dist),
+                                  np.asarray(lab_a.dist))
+
+
+# --- forced multi-device coverage (subprocess; see module docstring) ------
+
+@pytest.mark.slow
+def test_multidevice_parity_selftest():
+    """Bit-parity on every (data, model) factorization of an 8-device CPU
+    mesh, including the padded-query path (B=37)."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.core.shard"],
+        env=_env_8dev(), cwd=REPO, capture_output=True, text=True,
+        timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "selftest OK on 8 device(s)" in out.stdout, out.stdout
+
+
+@pytest.mark.slow
+def test_serve_mesh_host_multidevice():
+    """The full serving tick loop on a (data=4, model=2) mesh, verified
+    against the BFS oracle each tick."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--n", "300", "--batches", "2", "--batch-size", "30",
+         "--queries", "48", "--landmarks", "8",
+         "--mesh", "host", "--shards", "2", "--verify"],
+        env=_env_8dev(), cwd=REPO, capture_output=True, text=True,
+        timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "serve loop done" in out.stdout, out.stdout
+    assert out.stdout.count("verify: 0/48 mismatches") == 2, out.stdout

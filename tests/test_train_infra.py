@@ -58,7 +58,22 @@ def test_error_feedback_accumulates_residual():
 
 
 def test_microbatch_equals_full_batch():
-    """Gradient accumulation must match the monolithic step (same loss)."""
+    """Gradient accumulation must match the monolithic step.
+
+    The accumulated gradient equals the monolithic one only up to f32
+    reduction-order noise (~1e-9 absolute here), so the assertions target
+    quantities with bounded sensitivity to that noise:
+
+    * loss and the Adam moments m, v are (at step 1) linear/quadratic in
+      the gradient — compared tightly in absolute terms;
+    * the parameters go through Adam's normalized step m̂/(√v̂+eps), which
+      amplifies a sub-noise gradient sign flip into a full ±lr move — so
+      they are compared against the 2·lr amplification bound, not against
+      a noise-scale atol. (The old atol=2e-5 params-only check was the
+      recorded order-dependent flake: any run whose compiled reduction
+      order flipped a near-zero gradient's sign moved some parameter by
+      ~2e-3.) All state is seeded locally; nothing global is consulted.
+    """
     from repro.configs import common as cc
     from repro.models import transformer as tfm
     cfg = cc.get_arch("granite-8b").reduced_config()
@@ -76,11 +91,20 @@ def test_microbatch_equals_full_batch():
     s_micro, aux_m = micro(s_micro, batch)
     np.testing.assert_allclose(float(aux_f["loss"]), float(aux_m["loss"]),
                                rtol=1e-5)
+    # Accumulation equivalence proper: first-step moments are clip·(1-b1)·g
+    # and (1-b2)·g² — linear/quadratic in the gradient, no amplification.
+    for key, atol in (("m", 1e-7), ("v", 1e-9)):
+        for a, b in zip(jax.tree_util.tree_leaves(s_full["opt"][key]),
+                        jax.tree_util.tree_leaves(s_micro["opt"][key])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-3, atol=atol)
+    # Parameters: bounded by Adam's worst-case step disagreement (≈ 2·lr
+    # when a near-zero gradient component flips sign under accumulation).
     flat_f = jax.tree_util.tree_leaves(s_full["params"])
     flat_m = jax.tree_util.tree_leaves(s_micro["params"])
     for a, b in zip(flat_f, flat_m):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
-                                   atol=2e-5)
+                                   atol=2.5 * opt.lr)
 
 
 def test_checkpoint_roundtrip(tmp_path):
