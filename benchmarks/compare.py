@@ -1,0 +1,137 @@
+"""Bench-trajectory regression gate (the CI `bench` job's teeth).
+
+    python -m benchmarks.compare benchmarks/baseline.json BENCH_pr3.json \\
+        --max-regression 0.25
+
+Compares candidate rows against the committed baseline by name and fails
+(exit 1) when any gated latency regresses more than --max-regression, or
+when a baseline row vanished from the candidate (coverage loss counts as
+a regression). Only rows matching --prefix (default ``ticks/``), above
+--min-us, and not ending in --skip-suffix (default ``/construct`` —
+one-shot measurements dominated by trace/compile variance) are gated:
+sub-millisecond rows on shared CI runners are noise, and the paper-table
+modules are trajectory telemetry, not gates. New candidate rows pass
+freely — that is how the trajectory grows.
+
+Shared runners are noisy, and not uniformly so: the sub-second jnp tick
+rows are scheduler-sensitive (2× swings under transient load) while the
+compute-bound interpret-mode pallas rows hold within ~10% run-to-run —
+which is why the CI job gates with ``--min-us 500000`` (pallas tick rows
+only, jnp rows reported ungated) at the issue-specified 25% budget, on
+the min-over-steady-ticks statistic `benchmarks/ticks.py` emits. Two
+escape hatches for other topologies: ``--calibrate ROW`` divides every
+ratio by a reference row's ratio (gating the relative trajectory when a
+runner-*class* change shifts all rows together — pair it with the
+uncalibrated ``--max-regression-abs`` backstop, since calibration alone
+would also cancel a real across-the-board regression), and the bench
+job's artifact is a ready-made replacement baseline: commit it as
+`benchmarks/baseline.json` whenever a PR (or a runner-class shift)
+legitimately moves the trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("schema") != "repro-bench/v1":
+        raise SystemExit(f"{path}: unknown schema {payload.get('schema')!r}"
+                         " (expected repro-bench/v1)")
+    return {r["name"]: r for r in payload["rows"]}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("candidate")
+    ap.add_argument("--max-regression", type=float, default=0.25,
+                    help="fail when cand/base - 1 exceeds this (default .25)")
+    ap.add_argument("--prefix", default="ticks/",
+                    help="gate only rows whose name starts with this")
+    ap.add_argument("--skip-suffix", default="/construct",
+                    help="report but never gate rows ending in this: "
+                         "one-shot construct measurements are dominated "
+                         "by trace/compile variance ('' disables)")
+    ap.add_argument("--min-us", type=float, default=2000.0,
+                    help="gate only rows with baseline latency >= this "
+                         "(microseconds); smaller rows are reported but "
+                         "not enforced")
+    ap.add_argument("--calibrate", default=None, metavar="ROW",
+                    help="divide each ratio by this reference row's ratio "
+                         "before gating — cancels uniform runner-speed "
+                         "shifts so only the relative trajectory is gated "
+                         "(the reference row itself is exempt from the "
+                         "calibrated check)")
+    ap.add_argument("--max-regression-abs", type=float, default=None,
+                    metavar="X",
+                    help="uncalibrated backstop: additionally fail any "
+                         "gated row (calibration row included) whose raw "
+                         "ratio exceeds 1+X. Catches uniform regressions "
+                         "that calibration would cancel; set it looser "
+                         "than --max-regression to absorb runner-class "
+                         "spread")
+    args = ap.parse_args()
+
+    base = load_rows(args.baseline)
+    cand = load_rows(args.candidate)
+
+    cal = 1.0
+    if args.calibrate:
+        if args.calibrate not in base or args.calibrate not in cand:
+            raise SystemExit(f"--calibrate row {args.calibrate!r} missing "
+                             f"from baseline or candidate")
+        cal = (cand[args.calibrate]["us_per_call"]
+               / base[args.calibrate]["us_per_call"])
+        print(f"calibration: {args.calibrate} ratio {cal:.2f} "
+              f"(divided out below)")
+
+    failures: list[str] = []
+    print(f"{'row':56s} {'base_us':>12s} {'cand_us':>12s} {'ratio':>7s}")
+    for name in sorted(base):
+        if not name.startswith(args.prefix):
+            continue
+        b = base[name]["us_per_call"]
+        if name not in cand:
+            print(f"{name:56s} {b:12.1f} {'MISSING':>12s} {'—':>7s}")
+            failures.append(f"{name}: missing from candidate")
+            continue
+        c = cand[name]["us_per_call"]
+        raw_ratio = c / b if b else float("inf")
+        ratio = raw_ratio / cal
+        big = b >= args.min_us and not (
+            args.skip_suffix and name.endswith(args.skip_suffix))
+        flag = ""
+        if big and name != args.calibrate \
+                and ratio > 1.0 + args.max_regression:
+            flag = "  << REGRESSION"
+            failures.append(f"{name}: {b:.0f}us -> {c:.0f}us "
+                            f"({(ratio - 1) * 100:+.0f}% calibrated)")
+        elif big and args.max_regression_abs is not None \
+                and raw_ratio > 1.0 + args.max_regression_abs:
+            flag = "  << ABSOLUTE REGRESSION"
+            failures.append(f"{name}: {b:.0f}us -> {c:.0f}us "
+                            f"({(raw_ratio - 1) * 100:+.0f}% raw, backstop "
+                            f"{args.max_regression_abs:.0%})")
+        elif not big:
+            flag = "  (not gated)"
+        print(f"{name:56s} {b:12.1f} {c:12.1f} {ratio:7.2f}{flag}")
+    for name in sorted(set(cand) - set(base)):
+        if name.startswith(args.prefix):
+            print(f"{name:56s} {'—':>12s} "
+                  f"{cand[name]['us_per_call']:12.1f} {'new':>7s}")
+
+    if failures:
+        print(f"\n{len(failures)} regression(s) beyond "
+              f"{args.max_regression:.0%}:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"\nOK: no gated row regressed beyond {args.max_regression:.0%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Serving-tick latency trajectory: backend × mesh, the CI bench preset.
+
+The scale story of this repo lives or dies on two numbers per tick — the
+batch-update latency and the query-batch latency — across the four
+backend × mesh configurations that PRs 1–3 built:
+
+    ticks/<dataset>/<backend>/<mesh>/construct   (one-off, seconds→us)
+    ticks/<dataset>/<backend>/<mesh>/update      (median per-tick)
+    ticks/<dataset>/<backend>/<mesh>/query       (median per-tick)
+
+Rows follow the ``name,us_per_call,derived`` contract of benchmarks/run.py;
+``python -m benchmarks.run --preset quick --json BENCH_pr3.json`` persists
+them in the bench-trajectory JSON format that `benchmarks/compare.py`
+gates against the committed `benchmarks/baseline.json` (>25% tick-latency
+regressions fail the CI `bench` job).
+
+The quick preset is sized for shared CI runners: one small dataset, a few
+ticks, the degenerate host mesh on however many devices the runner
+exposes. The point is the *trajectory* (same shapes every PR), not
+absolute hardware truth.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import DATASETS, emit
+from repro.graphs import generators as gen
+from repro.graphs.coo import apply_batch, from_edges, make_batch
+from repro.core.batch import batchhl_update
+from repro.core.construct import build_labelling, select_landmarks_by_degree
+from repro.core.engine import RelaxEngine
+from repro.core.query import batched_query
+from repro.core.shard import (shard_batched_query, shard_batchhl_update,
+                              shard_build_labelling)
+from repro.launch.mesh import make_host_mesh
+
+
+def _tick_loop(name: str, g0, landmarks, edges, backend: str, mesh,
+               ticks: int, batch_size: int, queries: int,
+               block_v: int, tile_shards: int) -> list[str]:
+    n = g0.n
+    engine = RelaxEngine(backend=backend, block_v=block_v,
+                         shards=tile_shards)
+    plan = engine.prepare(g0)
+
+    t0 = time.time()
+    if mesh is None:
+        lab = build_labelling(g0, landmarks, plan=plan)
+    else:
+        lab = shard_build_labelling(mesh, g0, landmarks, plan=plan)
+    jax.block_until_ready(lab.dist)
+    rows = [emit(f"{name}/construct", time.time() - t0, f"R={len(landmarks)}")]
+
+    rng = np.random.default_rng(11)
+    g, cur_edges = g0, edges
+    t_upd, t_q = [], []
+    for tick in range(ticks):
+        ups = gen.random_batch_updates(cur_edges, n, n_ins=batch_size // 2,
+                                       n_del=batch_size // 2,
+                                       seed=500 + tick)
+        batch = make_batch(ups, pad_to=batch_size)
+        has_ins = any(not d for (_, _, d) in ups)
+        t0 = time.time()
+        g_next = apply_batch(g, batch)
+        plan = engine.prepare(g_next, topology_changed=has_ins)
+        if mesh is None:
+            g, lab, aff = batchhl_update(g, batch, lab, improved=True,
+                                         plan=plan, g_new=g_next)
+        else:
+            g, lab, aff = shard_batchhl_update(mesh, g, batch, lab,
+                                               improved=True, plan=plan,
+                                               g_new=g_next)
+        jax.block_until_ready(lab.dist)
+        t_upd.append(time.time() - t0)
+
+        qs = jnp.asarray(rng.integers(0, n, queries), jnp.int32)
+        qt = jnp.asarray(rng.integers(0, n, queries), jnp.int32)
+        t0 = time.time()
+        if mesh is None:
+            d = batched_query(g, lab, qs, qt, plan=plan)
+        else:
+            d = shard_batched_query(mesh, g, lab, qs, qt, plan=plan)
+        jax.block_until_ready(d)
+        t_q.append(time.time() - t0)
+
+        # Fold this tick's updates into the edge set for the next one.
+        es = {(int(min(u, v)), int(max(u, v))) for u, v in cur_edges}
+        for u, v, is_del in ups:
+            k = (min(u, v), max(u, v))
+            es.discard(k) if is_del else es.add(k)
+        cur_edges = np.asarray(sorted(es), np.int32)
+
+    # Min of the steady-state ticks: tick 0 pays compilation and tick 1
+    # can pay a second trace (the labelling comes back mesh-sharded after
+    # the first update), so both are warmup; min (not median) because a
+    # transient load burst on a shared runner inflates several consecutive
+    # ticks at once, and the fastest tick is the best estimate of the
+    # unloaded latency the gate should track.
+    warm = 2 if ticks > 2 else 1 if ticks > 1 else 0
+    steady_upd = t_upd[warm:]
+    steady_q = t_q[warm:]
+    rows.append(emit(f"{name}/update", float(np.min(steady_upd)),
+                     f"stat=min;ticks={ticks};batch={batch_size}"))
+    rows.append(emit(f"{name}/query", float(np.min(steady_q)),
+                     f"stat=min;ticks={ticks};B={queries}"))
+    return rows
+
+
+def run(datasets=("ba_2k",), backends=("jnp", "pallas"),
+        meshes=("none", "host"), ticks: int = 6, batch_size: int = 64,
+        queries: int = 128, landmarks: int = 16, block_v: int = 256,
+        tile_shards: int = 2) -> list[str]:
+    rows = []
+    for ds in datasets:
+        edges = DATASETS[ds]()
+        n = int(edges.max()) + 1
+        cap = edges.shape[0] + ticks * batch_size + 64
+        g0 = from_edges(n, edges, cap)
+        lms = select_landmarks_by_degree(g0, landmarks)
+        for backend in backends:
+            for mesh_name in meshes:
+                mesh = make_host_mesh() if mesh_name == "host" else None
+                rows += _tick_loop(f"ticks/{ds}/{backend}/{mesh_name}",
+                                   g0, lms, edges, backend, mesh, ticks,
+                                   batch_size, queries, block_v, tile_shards)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

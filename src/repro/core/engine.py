@@ -23,6 +23,14 @@ the stored slot permutation), while insertions rewrite src/dst slots and
 invalidate the tiling (see DESIGN.md §3 for the full contract).
 `launch/serve.py` holds one engine for the serving loop so the tiling is
 amortized across all waves of a tick and across deletion-only ticks.
+
+Plans are mesh-transparent: the tiling is organized as `shards` contiguous
+block_v-aligned vertex shards (the leading tile axis, bit-identical for
+every shard count), and `core/shard.py` passes the whole plan into its
+`shard_map` bodies as replicated leaves — every device launches the same
+kernel over its local landmark planes. One prepared plan therefore serves
+sharded and unsharded call-sites alike; a mesh→no-mesh round trip keeps
+the cache (DESIGN.md §4).
 """
 from __future__ import annotations
 
@@ -60,23 +68,6 @@ class RelaxPlan:
 JNP_PLAN = RelaxPlan(tiles=None, backend="jnp")
 
 
-def shard_gate(plan: RelaxPlan | None) -> RelaxPlan | None:
-    """Downgrade a plan to one usable inside a `shard_map` body.
-
-    The jnp backend is shard-transparent (pure gather/segment-min on
-    replicated COO arrays), so it passes through. The Pallas tiling is not
-    yet shard-aware: `BlockedGraph` tiles the full vertex range and the
-    kernel assumes it owns every destination block, which double-relaxes
-    under a sharded mesh. TODO(pallas-shard): tile per vertex shard
-    (block_v-aligned V splits) and launch the kernel per shard; until then
-    sharded sweeps run the jnp reference per shard (bit-identical results —
-    the parity suite pins pallas ≡ jnp on every call-site).
-    """
-    if plan is not None and plan.backend == "pallas":
-        return JNP_PLAN
-    return plan
-
-
 def relax_sweep(plan: RelaxPlan | None, g: Graph, keys: jax.Array,
                 step, inf, *, hub: jax.Array | None = None,
                 clear_bit: int = 0,
@@ -110,16 +101,25 @@ class RelaxEngine:
                          elsewhere; parity-tested against jnp),
               "auto"   — "pallas" on TPU, "jnp" otherwise.
     block_v:  destination-block size for the tiling (kernel output tile).
+    shards:   vertex-shard count of the tiling (leading tile axis; the
+              kernel grid walks (shard, block)). Bit-identical for every
+              value — a launch-structure knob that lets the plan compose
+              with `shard_map` meshes (`core/shard.py`) and, at scale,
+              lets each device own one slice.
     """
 
-    def __init__(self, backend: str = "auto", block_v: int = 512):
+    def __init__(self, backend: str = "auto", block_v: int = 512,
+                 shards: int = 1):
         if backend == "auto":
             backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
         if backend not in BACKENDS:
             raise ValueError(
                 f"unknown backend {backend!r}; pick from {BACKENDS + ('auto',)}")
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
         self.backend = backend
         self.block_v = block_v
+        self.shards = shards
         self._tiles: BlockedGraph | None = None
         self._fingerprint: tuple | None = None
         self.retile_count = 0  # observability: serve/benchmarks report this
@@ -183,7 +183,7 @@ class RelaxEngine:
             # by the insertion that occupies them, forcing a re-prepare).
             self._tiles = er_ops.prepare_topology(
                 np.asarray(g.src), np.asarray(g.dst), np.asarray(g.valid),
-                g.n, self.block_v)
+                g.n, self.block_v, self.shards)
             self._fingerprint = self._snapshot_fingerprint(g)
             self.retile_count += 1
         return RelaxPlan(tiles=self._tiles, backend="pallas")

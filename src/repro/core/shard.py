@@ -32,9 +32,18 @@ iteration count, and min/OR reductions are associative — sharded outputs
 are bit-identical to the unsharded `vmap` path on any mesh shape
 (`tests/test_shard.py` pins it on 1-device and forced-8-device meshes).
 
-Sweep backends: plans pass through `engine.shard_gate` — the jnp backend
-is shard-transparent; the Pallas tiling is gated to per-shard jnp until it
-learns vertex-shard-local tiles (TODO in `core/engine.py`).
+Sweep backends: both engine backends run *inside* the shard bodies. The
+`RelaxPlan` rides into every `shard_map` as an ordinary replicated
+argument (in_spec `P()` over its pytree leaves — the plan pytree may be
+None, the tile-less jnp plan, or a full Pallas tiling), so each device
+launches the tiled `edge_relax` kernel on its local planes; the
+shard-aware tiling (`kernels/edge_relax`, leading vertex-shard axis on
+`BlockedGraph`) is bit-identical for every shard count, and the tiling is
+prepared once by the host-side `RelaxEngine` and reused by sharded and
+unsharded call-sites alike (DESIGN.md §3–§4). With `use_kernel=True` the
+query bound runs the `minplus` kernel per shard on its local highway rows
+([P, R] rectangular contraction) and a `pmin` over the model axis
+finishes the reduction — no [R, R] plane product is materialized.
 
 Requirements: R must divide evenly over the plane-sharding axes (data ×
 model for maintenance, model for queries). Query batches are padded
@@ -53,7 +62,7 @@ from repro.graphs.coo import Graph, BatchUpdate, INF_D, apply_batch
 from repro.core.batch import (repair_planes, search_basic_planes,
                               search_improved_planes)
 from repro.core.construct import construct_key2_planes
-from repro.core.engine import RelaxPlan, shard_gate
+from repro.core.engine import RelaxPlan
 from repro.core.labelling import (HighwayLabelling, key2_dist, key2_hub,
                                   key2_make, per_plane_hub_mask)
 from repro.core.query import bounded_bibfs, effective_label_planes
@@ -88,12 +97,13 @@ def shard_build_labelling(mesh, g: Graph, landmarks: jax.Array,
 
     Returns a labelling whose dist/hub planes are sharded over
     ``("model", "data")`` on the R axis and whose highway is row-sharded;
-    consumers reshard transparently.
+    consumers reshard transparently. `plan` (replicated into every shard)
+    selects the sweep backend — Pallas plans launch the tiled kernel on
+    each shard's local planes.
     """
     _check_planes(landmarks.shape[0], _maint_size(mesh), "maintenance")
-    plan = shard_gate(plan)
 
-    def body(g, own, landmarks_full):
+    def body(g, own, landmarks_full, plan):
         key2 = construct_key2_planes(g, own, landmarks_full, max_iters, plan)
         dist = jnp.minimum(key2_dist(key2), INF_D)
         hub = key2_hub(key2) & (dist < INF_D)
@@ -103,11 +113,11 @@ def shard_build_labelling(mesh, g: Graph, landmarks: jax.Array,
     rv = P(MAINT_AXES, None)
     dist, hub, highway = shard_map(
         body, mesh=mesh,
-        in_specs=(P(), P(MAINT_AXES), P()),
+        in_specs=(P(), P(MAINT_AXES), P(), P()),
         out_specs=(rv, rv, rv),
         # jax 0.4.37 has no replication rule for while_loop (the fixpoint
         # sweeps); every output is fully plane-sharded anyway.
-        check_rep=False)(g, landmarks, landmarks)
+        check_rep=False)(g, landmarks, landmarks, plan)
     return HighwayLabelling(landmarks.astype(jnp.int32), dist, hub, highway)
 
 
@@ -118,19 +128,23 @@ def shard_build_labelling(mesh, g: Graph, landmarks: jax.Array,
 @partial(jax.jit, static_argnames=("mesh", "improved"))
 def shard_batchhl_update(mesh, g_old: Graph, batch: BatchUpdate,
                          labelling: HighwayLabelling, improved: bool = True,
-                         plan: RelaxPlan | None = None
+                         plan: RelaxPlan | None = None,
+                         g_new: Graph | None = None
                          ) -> tuple[Graph, HighwayLabelling, jax.Array]:
     """`batchhl_update` under shard_map; bit-identical (G', Γ', aff).
 
     Per-plane search + repair run all-local on each shard's plane slice;
-    the batch and both graph snapshots are replicated. aff and the new
-    planes come back sharded over ``("model", "data")`` on the R axis.
+    the batch, both graph snapshots, and the plan are replicated. aff and
+    the new planes come back sharded over ``("model", "data")`` on the R
+    axis. Like `batchhl_update`, a Pallas `plan` must be prepared from the
+    *post-update* snapshot; callers that already materialized it (for that
+    prepare) can pass it as `g_new` to skip the recompute.
     """
     _check_planes(labelling.num_landmarks, _maint_size(mesh), "maintenance")
-    plan = shard_gate(plan)
-    g_new = apply_batch(g_old, batch)
+    if g_new is None:
+        g_new = apply_batch(g_old, batch)
 
-    def body(g_new, batch, dist, hub, own, landmarks_full):
+    def body(g_new, batch, dist, hub, own, landmarks_full, plan):
         hub_mask = per_plane_hub_mask(landmarks_full, own, g_new.n)
         if improved:
             aff = search_improved_planes(g_new, batch, dist, hub, hub_mask,
@@ -147,13 +161,13 @@ def shard_batchhl_update(mesh, g_old: Graph, batch: BatchUpdate,
     rv = P(MAINT_AXES, None)
     ndist, nhub, highway, aff = shard_map(
         body, mesh=mesh,
-        in_specs=(P(), P(), rv, rv, P(MAINT_AXES), P()),
+        in_specs=(P(), P(), rv, rv, P(MAINT_AXES), P(), P()),
         out_specs=(rv, rv, rv, rv),
         # No replication rule for while_loop on this jax pin; outputs are
         # fully plane-sharded anyway.
         check_rep=False)(
             g_new, batch, labelling.dist, labelling.hub,
-            labelling.landmarks, labelling.landmarks)
+            labelling.landmarks, labelling.landmarks, plan)
     new_labelling = HighwayLabelling(labelling.landmarks, ndist, nhub,
                                      highway)
     return g_new, new_labelling, aff
@@ -217,23 +231,31 @@ def _shard_query_core(mesh, g: Graph, labelling: HighwayLabelling,
                       use_kernel: bool,
                       plan: RelaxPlan | None) -> jax.Array:
     _check_planes(labelling.num_landmarks, mesh.shape["model"], "model")
-    plan = shard_gate(plan)
-    if use_kernel:
-        # TODO(pallas-shard): the minplus kernel contracts the full [R, R]
-        # highway; under a model-sharded R axis it needs a per-shard launch
-        # + pmin epilogue. Until then the sharded bound runs the jnp
-        # contraction (bit-identical — see tests/test_kernels.py parity).
-        use_kernel = False
 
-    def body(g, dist, hub, own, landmarks_full, highway_rows, s, t):
-        # Eq. 3 — tropical contraction with the landmark axis sharded.
+    def body(g, dist, hub, own, landmarks_full, highway_rows, s, t, plan):
+        # Eq. 3 — tropical contraction with the landmark axis sharded:
+        # each shard contracts its local highway rows [P, R] against the
+        # all-gathered target labels; a pmin over `model` finishes the
+        # reduction. No [R, R] plane product is ever materialized.
         vals = effective_label_planes(dist, hub, own, landmarks_full)
         s_lab = jnp.minimum(vals[:, s].T, INF_D)      # [B_loc, P]
         t_lab = jnp.minimum(vals[:, t].T, INF_D)      # [B_loc, P]
         t_all = jax.lax.all_gather(t_lab, "model", axis=1, tiled=True)
-        # mid[b, j] = min over local i of s_lab[b, i] + H[i, j]
-        mid = jnp.min(s_lab[:, :, None] + highway_rows[None, :, :], axis=1)
-        partial_bound = jnp.min(mid + t_all, axis=1)  # [B_loc]
+        if use_kernel:
+            # Per-shard minplus launch on the rectangular [P, R]
+            # highway-row slice. Same auto-dispatch as the unsharded
+            # query_upper_bound: the Pallas kernel on TPU, the jnp oracle
+            # elsewhere — so --use-minplus-kernel costs the same with and
+            # without a mesh (tests/test_shard_tiling.py pins the
+            # interpret-mode kernel inside shard_map separately).
+            from repro.kernels.minplus import ops as minplus_ops
+            partial_bound = minplus_ops.minplus_bound(
+                s_lab, highway_rows, t_all)
+        else:
+            # mid[b, j] = min over local i of s_lab[b, i] + H[i, j]
+            mid = jnp.min(s_lab[:, :, None] + highway_rows[None, :, :],
+                          axis=1)
+            partial_bound = jnp.min(mid + t_all, axis=1)  # [B_loc]
         d_top = jnp.minimum(jax.lax.pmin(partial_bound, "model"), INF_D)
 
         # Bounded BiBFS on the local query shard (replicated over model).
@@ -245,14 +267,15 @@ def _shard_query_core(mesh, g: Graph, labelling: HighwayLabelling,
     qv = P("model", None)
     return shard_map(
         body, mesh=mesh,
-        in_specs=(P(), qv, qv, P("model"), P(), qv, P("data"), P("data")),
+        in_specs=(P(), qv, qv, P("model"), P(), qv, P("data"), P("data"),
+                  P()),
         out_specs=P("data"),
         # check_rep can't see through the BiBFS while_loop; replication
         # over `model` holds by construction (all body inputs are either
         # replicated or pmin-merged before the loop).
         check_rep=False)(
             g, labelling.dist, labelling.hub, labelling.landmarks,
-            labelling.landmarks, labelling.highway, s, t)
+            labelling.landmarks, labelling.highway, s, t, plan)
 
 
 # ---------------------------------------------------------------------------
@@ -260,7 +283,9 @@ def _shard_query_core(mesh, g: Graph, labelling: HighwayLabelling,
 # ---------------------------------------------------------------------------
 
 def _selftest() -> None:
-    """Sharded-vs-unsharded bit-parity on every host-mesh factorization.
+    """Sharded-vs-unsharded bit-parity on every host-mesh factorization,
+    on both sweep backends (jnp reference and the shard-aware Pallas
+    tiling, incl. the per-shard minplus kernel bound).
 
     Run with a forced device count to exercise real multi-device meshes:
 
@@ -269,10 +294,11 @@ def _selftest() -> None:
     """
     import numpy as np
     from repro.graphs import generators as gen
-    from repro.graphs.coo import from_edges, make_batch
+    from repro.graphs.coo import apply_batch, from_edges, make_batch
     from repro.core.construct import build_labelling, \
         select_landmarks_by_degree
     from repro.core.batch import batchhl_update
+    from repro.core.engine import RelaxEngine
     from repro.core.query import batched_query
     from repro.launch.mesh import make_host_mesh
 
@@ -291,24 +317,39 @@ def _selftest() -> None:
     g1, lab1, aff1 = batchhl_update(g, batch, lab0, improved=True)
     d1 = batched_query(g1, lab1, qs, qt)
 
+    # Shard-aware Pallas tiling (2 vertex shards): one plan per snapshot,
+    # reused across every mesh factorization below.
+    engine = RelaxEngine(backend="pallas", block_v=32, shards=2)
+    plan0 = engine.prepare(g)
+    g1_host = apply_batch(g, batch)
+    engine1 = RelaxEngine(backend="pallas", block_v=32, shards=2)
+    plan1 = engine1.prepare(g1_host)
+
     for model in [m for m in (1, 2, 4, 8) if n_dev % m == 0]:
         mesh = make_host_mesh(model=model)
-        slab0 = shard_build_labelling(mesh, g, landmarks)
-        for f in ("dist", "hub", "highway"):
-            np.testing.assert_array_equal(np.asarray(getattr(slab0, f)),
-                                          np.asarray(getattr(lab0, f)))
-        sg1, slab1, saff1 = shard_batchhl_update(mesh, g, batch, slab0)
-        np.testing.assert_array_equal(np.asarray(saff1), np.asarray(aff1))
-        for f in ("dist", "hub", "highway"):
-            np.testing.assert_array_equal(np.asarray(getattr(slab1, f)),
-                                          np.asarray(getattr(lab1, f)))
-        sd1 = shard_batched_query(mesh, sg1, slab1, qs, qt)
-        np.testing.assert_array_equal(np.asarray(sd1), np.asarray(d1))
-        affv = affected_vertices(mesh, saff1)
-        np.testing.assert_array_equal(
-            np.asarray(affv), np.asarray(jnp.any(aff1, axis=0)))
-        print(f"mesh (data={mesh.shape['data']}, model={model}): "
-              f"construction/update/query bit-parity OK")
+        for backend, pln0, pln1 in (("jnp", None, None),
+                                    ("pallas", plan0, plan1)):
+            slab0 = shard_build_labelling(mesh, g, landmarks, plan=pln0)
+            for f in ("dist", "hub", "highway"):
+                np.testing.assert_array_equal(np.asarray(getattr(slab0, f)),
+                                              np.asarray(getattr(lab0, f)))
+            sg1, slab1, saff1 = shard_batchhl_update(mesh, g, batch, slab0,
+                                                     plan=pln1)
+            np.testing.assert_array_equal(np.asarray(saff1),
+                                          np.asarray(aff1))
+            for f in ("dist", "hub", "highway"):
+                np.testing.assert_array_equal(np.asarray(getattr(slab1, f)),
+                                              np.asarray(getattr(lab1, f)))
+            sd1 = shard_batched_query(mesh, sg1, slab1, qs, qt,
+                                      use_kernel=(backend == "pallas"),
+                                      plan=pln1)
+            np.testing.assert_array_equal(np.asarray(sd1), np.asarray(d1))
+            affv = affected_vertices(mesh, saff1)
+            np.testing.assert_array_equal(
+                np.asarray(affv), np.asarray(jnp.any(aff1, axis=0)))
+            print(f"mesh (data={mesh.shape['data']}, model={model}) "
+                  f"backend={backend}: construction/update/query "
+                  f"bit-parity OK")
     print(f"selftest OK on {n_dev} device(s)")
 
 

@@ -20,6 +20,16 @@ re-derived on device every sweep (validity churns with every batch update),
 while the src/dstloc tiling itself is rebuilt only when topology slots
 change — the contract `core/engine.py` enforces.
 
+The tiling is *shard-aware*: tile arrays carry a leading vertex-shard axis
+[S, NB, BE] (S contiguous block_v-aligned slices of the vertex range, each
+with its own destination blocks and its own slice of the slot permutation)
+and the launch grid is (S, NB). Destination blocks never straddle a shard
+boundary, so the per-block edge groups — and therefore the per-block
+min-reductions — are identical for every S: results are bit-identical to
+the S=1 tiling, which is the degenerate single-shard case. This is what
+lets the kernel run inside `shard_map` bodies (`core/shard.py`) and, at
+scale, lets each mesh device launch over its local slice only.
+
 Working set per grid step: keys (full shard) + BE·3·4 B edge slice +
 2·BV·4 B hub/out tiles. For BV=512, BE=4096: ≈ 64 KB on top of the keys.
 
@@ -41,39 +51,39 @@ INF32 = 1 << 29  # plain int: pallas kernels must not capture traced constants
 
 def _relax_kernel(keys_ref, src_ref, dstloc_ref, valid_ref, step_ref, o_ref):
     keys = keys_ref[...]          # [V] int32 (full shard)
-    src = src_ref[...]            # [1, BE]
-    dstloc = dstloc_ref[...]      # [1, BE] local dst in [0, BV)
-    valid = valid_ref[...]        # [1, BE] int32 mask
+    src = src_ref[0, 0]           # [BE]
+    dstloc = dstloc_ref[0, 0]     # [BE] local dst in [0, BV)
+    valid = valid_ref[0, 0]       # [BE] int32 mask
     step = step_ref[0]
 
-    gathered = jnp.take(keys, src[0], axis=0)
+    gathered = jnp.take(keys, src, axis=0)
     cand = jnp.minimum(gathered + step, INF32)
-    cand = jnp.where(valid[0] != 0, cand, INF32)
+    cand = jnp.where(valid != 0, cand, INF32)
     out = jnp.full((o_ref.shape[-1],), INF32, jnp.int32)
-    out = out.at[dstloc[0]].min(cand)
-    o_ref[...] = out[None, :]
+    out = out.at[dstloc].min(cand)
+    o_ref[...] = out[None, None, :]
 
 
 def _relax_sweep_kernel(keys_ref, hub_ref, src_ref, dstloc_ref, mask_ref,
                         params_ref, o_ref):
     """Generalized sweep: extend (step / inf-clamp / hub bit-clear) + mask."""
     keys = keys_ref[...]          # [V] int32 (full shard)
-    hub = hub_ref[...]            # [1, BV] int32: dst-block hub flags
-    src = src_ref[...]            # [1, BE]
-    dstloc = dstloc_ref[...]      # [1, BE] local dst in [0, BV)
-    mask = mask_ref[...]          # [1, BE] int32: per-sweep edge validity
+    hub = hub_ref[0, 0]           # [BV] int32: dst-block hub flags
+    src = src_ref[0, 0]           # [BE]
+    dstloc = dstloc_ref[0, 0]     # [BE] local dst in [0, BV)
+    mask = mask_ref[0, 0]         # [BE] int32: per-sweep edge validity
     step = params_ref[0]
     inf = params_ref[1]
     clear = params_ref[2]
 
-    gathered = jnp.take(keys, src[0], axis=0)
+    gathered = jnp.take(keys, src, axis=0)
     cand = jnp.minimum(gathered + step, inf)
-    hub_e = jnp.take(hub[0], dstloc[0], axis=0)
+    hub_e = jnp.take(hub, dstloc, axis=0)
     cand = jnp.where(hub_e != 0, cand & ~clear, cand)
-    cand = jnp.where(mask[0] != 0, cand, inf)
+    cand = jnp.where(mask != 0, cand, inf)
     out = jnp.full((o_ref.shape[-1],), inf, jnp.int32)
-    out = out.at[dstloc[0]].min(cand)
-    o_ref[...] = out[None, :]
+    out = out.at[dstloc].min(cand)
+    o_ref[...] = out[None, None, :]
 
 
 def block_edges_topology(src: np.ndarray, dst: np.ndarray, keep: np.ndarray,
@@ -109,41 +119,51 @@ def block_edges_topology(src: np.ndarray, dst: np.ndarray, keep: np.ndarray,
     return src_t, dst_t, perm_t, slot_t, block_v
 
 
-def block_edges(src: np.ndarray, dst: np.ndarray, valid: np.ndarray,
-                n: int, block_v: int, block_e: int | None = None):
-    """Legacy tiling of *all* edge slots with validity baked into val_t.
+def shard_tiling(shards: int, *tiles: np.ndarray):
+    """Split [NB, BE] tile arrays into `shards` contiguous vertex shards.
 
-    Returns (src_t [NB, BE], dstloc_t [NB, BE], valid_t [NB, BE], block_v).
+    Pads the block axis to a multiple of `shards` with empty blocks (all
+    zeros — slot_t=0 marks them padding) and reshapes to [S, NB_loc, BE].
+    Shard s then owns the destination range [s·NB_loc·BV, (s+1)·NB_loc·BV):
+    block boundaries are block_v-aligned, so no destination block straddles
+    a shard, block *contents* are untouched, and flattening the [S, NB_loc]
+    axes recovers the exact unsharded block order (padding blocks all land
+    past the last real block). Per-block reductions — and therefore sweep
+    results — are bit-identical for every S.
     """
-    keep = np.ones(len(src), bool)
-    src_t, dst_t, perm_t, slot_t, bv = block_edges_topology(
-        np.asarray(src), np.asarray(dst), keep, n, block_v, block_e)
-    val_t = np.where(slot_t != 0,
-                     np.asarray(valid, bool)[perm_t].astype(np.int32), 0)
-    return src_t, dst_t, val_t.astype(np.int32), bv
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    nb = tiles[0].shape[0]
+    nb_loc = max(-(-nb // shards), 1)
+    pad = shards * nb_loc - nb
+    out = []
+    for t in tiles:
+        padded = np.pad(t, ((0, pad), (0, 0)))
+        out.append(padded.reshape(shards, nb_loc, t.shape[1]))
+    return tuple(out)
 
 
 @functools.partial(jax.jit, static_argnames=("n", "block_v", "interpret"))
 def edge_relax_pallas(keys: jax.Array, src_t: jax.Array, dstloc_t: jax.Array,
                       valid_t: jax.Array, step: jax.Array, n: int,
                       block_v: int, interpret: bool = True) -> jax.Array:
-    """keys [V] int32 + tiled edges → cand [V] int32 (min-relaxed)."""
-    nb, be = src_t.shape
-    npad = nb * block_v
+    """keys [V] int32 + tiled edges [S, NB, BE] → cand [V] int32."""
+    s, nb, be = src_t.shape
+    npad = s * nb * block_v
     step_arr = jnp.full((1,), step, jnp.int32)
 
     out = pl.pallas_call(
         _relax_kernel,
-        grid=(nb,),
+        grid=(s, nb),
         in_specs=[
-            pl.BlockSpec(keys.shape, lambda i: (0,) * keys.ndim),
-            pl.BlockSpec((1, be), lambda i: (i, 0)),
-            pl.BlockSpec((1, be), lambda i: (i, 0)),
-            pl.BlockSpec((1, be), lambda i: (i, 0)),
-            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec(keys.shape, lambda j, i: (0,) * keys.ndim),
+            pl.BlockSpec((1, 1, be), lambda j, i: (j, i, 0)),
+            pl.BlockSpec((1, 1, be), lambda j, i: (j, i, 0)),
+            pl.BlockSpec((1, 1, be), lambda j, i: (j, i, 0)),
+            pl.BlockSpec((1,), lambda j, i: (0,)),
         ],
-        out_specs=pl.BlockSpec((1, block_v), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((nb, block_v), jnp.int32),
+        out_specs=pl.BlockSpec((1, 1, block_v), lambda j, i: (j, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, nb, block_v), jnp.int32),
         interpret=interpret,
     )(keys, src_t, dstloc_t, valid_t, step_arr)
     return out.reshape(npad)[:n]
@@ -155,30 +175,33 @@ def relax_sweep_pallas(keys: jax.Array, hub_t: jax.Array, src_t: jax.Array,
                        step: jax.Array, inf: jax.Array, clear_bit: jax.Array,
                        n: int, block_v: int,
                        interpret: bool = True) -> jax.Array:
-    """Generalized sweep: keys [V] + hub tiles [NB, BV] + tiled edges → [V].
+    """Generalized sweep: keys [V] + hub tiles [S, NB, BV] + tiled edges
+    [S, NB, BE] → [V].
 
     cand[v] = min over masked edges (u, v) of
         clear_hub_bit_if_hub(v, min(keys[u] + step, inf));  `inf` if none.
+    The grid walks (vertex shard, destination block); each step owns one
+    disjoint [BV] output tile, so S is a pure launch-structure knob.
     """
-    nb, be = src_t.shape
-    npad = nb * block_v
+    s, nb, be = src_t.shape
+    npad = s * nb * block_v
     params = jnp.stack([jnp.asarray(step, jnp.int32),
                         jnp.asarray(inf, jnp.int32),
                         jnp.asarray(clear_bit, jnp.int32)])
 
     out = pl.pallas_call(
         _relax_sweep_kernel,
-        grid=(nb,),
+        grid=(s, nb),
         in_specs=[
-            pl.BlockSpec(keys.shape, lambda i: (0,) * keys.ndim),
-            pl.BlockSpec((1, block_v), lambda i: (i, 0)),
-            pl.BlockSpec((1, be), lambda i: (i, 0)),
-            pl.BlockSpec((1, be), lambda i: (i, 0)),
-            pl.BlockSpec((1, be), lambda i: (i, 0)),
-            pl.BlockSpec((3,), lambda i: (0,)),
+            pl.BlockSpec(keys.shape, lambda j, i: (0,) * keys.ndim),
+            pl.BlockSpec((1, 1, block_v), lambda j, i: (j, i, 0)),
+            pl.BlockSpec((1, 1, be), lambda j, i: (j, i, 0)),
+            pl.BlockSpec((1, 1, be), lambda j, i: (j, i, 0)),
+            pl.BlockSpec((1, 1, be), lambda j, i: (j, i, 0)),
+            pl.BlockSpec((3,), lambda j, i: (0,)),
         ],
-        out_specs=pl.BlockSpec((1, block_v), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((nb, block_v), jnp.int32),
+        out_specs=pl.BlockSpec((1, 1, block_v), lambda j, i: (j, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, nb, block_v), jnp.int32),
         interpret=interpret,
     )(keys, hub_t, src_t, dstloc_t, mask_t, params)
     return out.reshape(npad)[:n]

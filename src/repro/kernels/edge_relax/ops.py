@@ -1,12 +1,17 @@
 """Jit'd wrappers: tiled Pallas edge relaxation with jnp fallback.
 
-`BlockedGraph` carries the one-off destination-block tiling. The tiling is
-purely topological (src / local-dst / original-slot permutation): per-sweep
-edge validity — which churns with every batch update and with the repair
+`BlockedGraph` carries the one-off destination-block tiling, organized as
+`shards` contiguous block_v-aligned vertex shards (leading [S] axis on every
+tile array; S=1 is the classic unsharded tiling). The tiling is purely
+topological (src / local-dst / original-slot permutation): per-sweep edge
+validity — which churns with every batch update and with the repair
 boundary/interior masks — is re-tiled on device with a single gather
 through `perm_t`, so re-tiling on host is needed only when topology slots
 change (insertions rewrite src/dst), not per wave and not per deletion.
-`core/engine.py` owns that cache; this module owns the kernel launch.
+Because no destination block straddles a shard boundary, sweep results are
+bit-identical for every S — the shard axis only shapes the launch grid
+(and, under a mesh, which slice a device owns). `core/engine.py` owns the
+cache; this module owns the kernel launch.
 """
 from __future__ import annotations
 
@@ -25,13 +30,18 @@ from repro.kernels.edge_relax import kernel, ref
          meta_fields=("n", "block_v"))
 @dataclasses.dataclass(frozen=True)
 class BlockedGraph:
-    src_t: jax.Array     # int32[NB, BE] source vertex per tile slot
-    dstloc_t: jax.Array  # int32[NB, BE] destination local to the block
-    valid_t: jax.Array   # int32[NB, BE] validity baked at prepare time
-    perm_t: jax.Array    # int32[NB, BE] original edge-slot index
-    slot_t: jax.Array    # int32[NB, BE] 1 on real slots, 0 on padding
+    src_t: jax.Array     # int32[S, NB, BE] source vertex per tile slot
+    dstloc_t: jax.Array  # int32[S, NB, BE] destination local to the block
+    valid_t: jax.Array   # int32[S, NB, BE] validity baked at prepare time
+    perm_t: jax.Array    # int32[S, NB, BE] original edge-slot index
+    slot_t: jax.Array    # int32[S, NB, BE] 1 on real slots, 0 on padding
     n: int
     block_v: int
+
+    @property
+    def shards(self) -> int:
+        """Vertex-shard count S of the tiling (leading tile axis)."""
+        return self.src_t.shape[0]
 
     def tile_mask(self, edge_mask: jax.Array) -> jax.Array:
         """Re-tile a per-edge mask (original slot order) on device."""
@@ -39,14 +49,15 @@ class BlockedGraph:
                          edge_mask[self.perm_t], False).astype(jnp.int32)
 
     def tile_plane(self, plane: jax.Array, fill) -> jax.Array:
-        """Pad + reshape a per-vertex plane [V] to dst tiles [NB, BV]."""
-        nb = self.src_t.shape[0]
-        npad = nb * self.block_v
+        """Pad + reshape a per-vertex plane [V] to dst tiles [S, NB, BV]."""
+        s, nb, _ = self.src_t.shape
+        npad = s * nb * self.block_v
         padded = jnp.full((npad,), fill, plane.dtype).at[:self.n].set(plane)
-        return padded.reshape(nb, self.block_v)
+        return padded.reshape(s, nb, self.block_v)
 
 
-def prepare(src, dst, valid, n: int, block_v: int = 512) -> BlockedGraph:
+def prepare(src, dst, valid, n: int, block_v: int = 512,
+            shards: int = 1) -> BlockedGraph:
     """Tile every edge slot; bake `valid` into valid_t (legacy entry)."""
     src = np.asarray(src)
     dst = np.asarray(dst)
@@ -54,18 +65,24 @@ def prepare(src, dst, valid, n: int, block_v: int = 512) -> BlockedGraph:
     src_t, dstloc_t, perm_t, slot_t, bv = kernel.block_edges_topology(
         src, dst, np.ones(len(src), bool), n, block_v)
     valid_t = np.where(slot_t != 0, valid[perm_t].astype(np.int32), 0)
+    src_t, dstloc_t, valid_t, perm_t, slot_t = kernel.shard_tiling(
+        shards, src_t, dstloc_t, valid_t.astype(np.int32), perm_t, slot_t)
     return BlockedGraph(jnp.asarray(src_t), jnp.asarray(dstloc_t),
-                        jnp.asarray(valid_t.astype(np.int32)),
-                        jnp.asarray(perm_t), jnp.asarray(slot_t), n, bv)
+                        jnp.asarray(valid_t), jnp.asarray(perm_t),
+                        jnp.asarray(slot_t), n, bv)
 
 
-def prepare_topology(src, dst, keep, n: int, block_v: int = 512
-                     ) -> BlockedGraph:
+def prepare_topology(src, dst, keep, n: int, block_v: int = 512,
+                     shards: int = 1) -> BlockedGraph:
     """Tile only the `keep` slots (host sync; amortized by core/engine.py).
 
     `keep` should be the currently-occupied slots: future deletions only
     flip validity (handled per sweep via `tile_mask`), while insertions
     rewrite src/dst and therefore force a fresh prepare anyway.
+
+    `shards` splits the destination-block tiling into that many contiguous
+    vertex shards (the leading [S] tile axis — see `kernel.shard_tiling`);
+    results are bit-identical for every S.
 
     The returned tiling sets `valid_t` to slot *occupancy*, not edge
     validity — it must only be consumed through `relax_sweep`, which
@@ -75,6 +92,8 @@ def prepare_topology(src, dst, keep, n: int, block_v: int = 512
     """
     src_t, dstloc_t, perm_t, slot_t, bv = kernel.block_edges_topology(
         np.asarray(src), np.asarray(dst), np.asarray(keep, bool), n, block_v)
+    src_t, dstloc_t, perm_t, slot_t = kernel.shard_tiling(
+        shards, src_t, dstloc_t, perm_t, slot_t)
     return BlockedGraph(jnp.asarray(src_t), jnp.asarray(dstloc_t),
                         jnp.asarray(slot_t), jnp.asarray(perm_t),
                         jnp.asarray(slot_t), n, bv)
@@ -90,11 +109,12 @@ def edge_relax(keys: jax.Array, bg: BlockedGraph, step,
                                         bg.valid_t, step, bg.n, bg.block_v,
                                         interpret=interpret)
     # jnp fallback on the tiled representation (same math, XLA segment_min).
+    s, nb, _ = bg.src_t.shape
     flat_dst = (bg.dstloc_t
-                + (jnp.arange(bg.src_t.shape[0]) * bg.block_v)[:, None])
+                + (jnp.arange(s * nb) * bg.block_v).reshape(s, nb, 1))
     return ref.edge_relax(keys, bg.src_t.reshape(-1), flat_dst.reshape(-1),
                           bg.valid_t.reshape(-1) != 0, step,
-                          bg.src_t.shape[0] * bg.block_v)[:bg.n]
+                          s * nb * bg.block_v)[:bg.n]
 
 
 def relax_sweep(keys: jax.Array, bg: BlockedGraph, edge_mask: jax.Array,
@@ -112,8 +132,8 @@ def relax_sweep(keys: jax.Array, bg: BlockedGraph, edge_mask: jax.Array,
     """
     mask_t = bg.tile_mask(edge_mask)
     if hub is None:
-        nb = bg.src_t.shape[0]
-        hub_t = jnp.zeros((nb, bg.block_v), jnp.int32)
+        s, nb, _ = bg.src_t.shape
+        hub_t = jnp.zeros((s, nb, bg.block_v), jnp.int32)
     else:
         hub_t = bg.tile_plane(hub.astype(jnp.int32), 0)
     interpret = jax.default_backend() != "tpu"

@@ -4,14 +4,21 @@
 
 This is the per-query hot path of the serving engine: for a query batch of
 B pairs against R landmarks it does B·R² int32 add+min ops. On TPU the VPU
-(8×128 lanes) executes the adds/mins; the landmark axis is padded to the
+(8×128 lanes) executes the adds/mins; the landmark axes are padded to the
 128-lane register width and the batch axis is tiled into VMEM blocks, so the
 working set per grid step is  BB·RP·4 · 2 (S,T) + RP²·4 (H) + BB·RP·4 (acc)
 ≈ 0.4 MB for BB=256, RP=128 — far under the ~16 MB VMEM budget, leaving the
 pipeline free to double-buffer blocks while the VPU runs.
 
-The inner contraction loops over the RP rows of H instead of materialising
-the [BB, RP, RP] cube (which would blow VMEM at 8 MB+ per block).
+H may be rectangular [P, R] with S [B, P]: that is the shard-local
+contraction of `core/shard.py`'s model-sharded query bound — each shard
+contracts its own P = R/M highway rows against the all-gathered target
+labels and a `pmin` over the mesh finishes the reduction. P = R recovers
+the full (unsharded) bound. INF padding is the min-plus identity, so the
+padded contraction is exact.
+
+The inner contraction loops over the PP rows of H instead of materialising
+the [BB, PP, RP] cube (which would blow VMEM at 8 MB+ per block).
 """
 from __future__ import annotations
 
@@ -28,10 +35,10 @@ LANES = 128        # TPU vector lane width; landmark axis padded to this
 
 
 def _minplus_kernel(s_ref, h_ref, t_ref, o_ref):
-    s = s_ref[...]          # [BB, RP] int32
-    h = h_ref[...]          # [RP, RP]
+    s = s_ref[...]          # [BB, PP] int32
+    h = h_ref[...]          # [PP, RP]
     t = t_ref[...]          # [BB, RP]
-    rp = h.shape[0]
+    pp, rp = h.shape
 
     def body(i, acc):
         # acc[b, j] = min(acc[b, j], s[b, i] + h[i, j])
@@ -39,8 +46,8 @@ def _minplus_kernel(s_ref, h_ref, t_ref, o_ref):
         h_row = jax.lax.dynamic_slice(h, (i, 0), (1, rp))           # [1, RP]
         return jnp.minimum(acc, jnp.minimum(s_col + h_row, INF32))
 
-    acc = jnp.full(s.shape, INF32, jnp.int32)
-    acc = jax.lax.fori_loop(0, rp, body, acc)
+    acc = jnp.full((s.shape[0], rp), INF32, jnp.int32)
+    acc = jax.lax.fori_loop(0, pp, body, acc)
     o_ref[...] = jnp.min(jnp.minimum(acc + t, INF32), axis=1, keepdims=True)
 
 
@@ -48,25 +55,31 @@ def _minplus_kernel(s_ref, h_ref, t_ref, o_ref):
 def minplus_pallas(s: jax.Array, h: jax.Array, t: jax.Array,
                    block_b: int = DEFAULT_BB,
                    interpret: bool = True) -> jax.Array:
-    """S [B,R], H [R,R], T [B,R] int32 → out [B] int32.
+    """S [B,P], H [P,R], T [B,R] int32 → out [B] int32.
 
-    Pads R→multiple of 128 lanes (INF padding is the min-plus identity) and
-    B→multiple of block_b.
+    P = R is the full Eq.-3 bound; P < R is a shard-local partial bound
+    (finished by a `pmin` across shards). Pads P and R→multiples of 128
+    lanes (INF padding is the min-plus identity) and B→multiple of block_b.
     """
-    b, r = s.shape
+    b, p = s.shape
+    p2, r = h.shape
+    if p2 != p or t.shape != (b, r):
+        raise ValueError(f"shape mismatch: S {s.shape}, H {h.shape}, "
+                         f"T {t.shape}")
+    pp = max(LANES, -(-p // LANES) * LANES)
     rp = max(LANES, -(-r // LANES) * LANES)
     bp = -(-b // block_b) * block_b
 
-    pad_s = jnp.full((bp, rp), INF32, jnp.int32).at[:b, :r].set(s)
+    pad_s = jnp.full((bp, pp), INF32, jnp.int32).at[:b, :p].set(s)
     pad_t = jnp.full((bp, rp), INF32, jnp.int32).at[:b, :r].set(t)
-    pad_h = jnp.full((rp, rp), INF32, jnp.int32).at[:r, :r].set(h)
+    pad_h = jnp.full((pp, rp), INF32, jnp.int32).at[:p, :r].set(h)
 
     out = pl.pallas_call(
         _minplus_kernel,
         grid=(bp // block_b,),
         in_specs=[
-            pl.BlockSpec((block_b, rp), lambda i: (i, 0)),
-            pl.BlockSpec((rp, rp), lambda i: (0, 0)),
+            pl.BlockSpec((block_b, pp), lambda i: (i, 0)),
+            pl.BlockSpec((pp, rp), lambda i: (0, 0)),
             pl.BlockSpec((block_b, rp), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((block_b, 1), lambda i: (i, 0)),

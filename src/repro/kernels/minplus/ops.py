@@ -9,10 +9,14 @@ from repro.kernels.minplus import kernel, ref
 
 def minplus_bound(s: jax.Array, h: jax.Array, t: jax.Array,
                   use_pallas: bool | None = None) -> jax.Array:
-    """Eq.-3 upper bound for a query batch. S/T [B,R], H [R,R] int32 → [B].
+    """Eq.-3 upper bound for a query batch: S [B,P], H [P,R], T [B,R]
+    int32 → [B].
 
-    use_pallas=None auto-selects: the Pallas kernel on TPU, interpret-mode
-    Pallas for small validation runs, and the jnp oracle otherwise.
+    P = R is the full bound; P < R contracts a shard-local highway-row
+    slice (`core/shard.py` finishes it with a `pmin` over the model axis).
+    use_pallas=None auto-selects: the Pallas kernel on TPU, the jnp oracle
+    elsewhere; use_pallas=True forces the kernel (interpret-mode off-TPU,
+    bit-identical — tests/test_kernels.py pins it).
     """
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"

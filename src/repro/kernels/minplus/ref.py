@@ -8,6 +8,10 @@ INF32 = 1 << 29  # plain int: pallas kernels must not capture traced constants
 
 
 def minplus_bound(s: jax.Array, h: jax.Array, t: jax.Array) -> jax.Array:
-    """out[b] = min_{i,j} S[b,i] + H[i,j] + T[b,j] (int32, INF-saturating)."""
+    """out[b] = min_{i,j} S[b,i] + H[i,j] + T[b,j] (int32, INF-saturating).
+
+    Accepts rectangular H [P, R] with S [B, P] / T [B, R] — the shard-local
+    partial contraction of the model-sharded query bound.
+    """
     mid = jnp.min(jnp.minimum(s[:, :, None] + h[None, :, :], INF32), axis=1)
     return jnp.min(jnp.minimum(mid + t, INF32), axis=1)

@@ -21,6 +21,12 @@ through `core/shard.py` on a `make_host_mesh` over the local devices;
 remaining devices form the data axis (query parallelism). Force a
 multi-device CPU host with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``. See DESIGN.md §4.
+
+Backend × mesh compose: under a mesh the engine's plan rides into the
+`shard_map` bodies, so ``--backend pallas --mesh host`` launches the
+tiled kernel on every device's local planes (``--tile-shards`` shapes the
+tiling's vertex-shard grid axis) — one configuration, no silent
+downgrade, bit-identical to the unsharded path.
 """
 from __future__ import annotations
 
@@ -58,6 +64,10 @@ def main() -> None:
                          "(auto = pallas on TPU, jnp elsewhere)")
     ap.add_argument("--block-v", type=int, default=512,
                     help="destination-block size for the pallas tiling")
+    ap.add_argument("--tile-shards", type=int, default=1,
+                    help="vertex-shard count of the pallas tiling (the "
+                         "kernel grid's leading axis; bit-identical for "
+                         "every value)")
     ap.add_argument("--use-minplus-kernel", action="store_true",
                     help="route the Eq.-3 upper bound through the Pallas "
                          "minplus kernel")
@@ -85,10 +95,11 @@ def main() -> None:
     g = from_edges(args.n, edges, cap)
     landmarks = select_landmarks_by_degree(g, args.landmarks)
 
-    engine = RelaxEngine(backend=args.backend, block_v=args.block_v)
-    # Sharded sweeps run the per-shard jnp reference for now (the tiling is
-    # not shard-aware — engine.shard_gate); skip the host-side tiling cost.
-    plan = None if mesh is not None else engine.prepare(g)
+    engine = RelaxEngine(backend=args.backend, block_v=args.block_v,
+                         shards=args.tile_shards)
+    # One plan serves sharded and unsharded call-sites alike: under a mesh
+    # it rides into the shard_map bodies as a replicated argument.
+    plan = engine.prepare(g)
 
     t0 = time.time()
     if mesh is not None:
@@ -98,13 +109,10 @@ def main() -> None:
     jax.block_until_ready(lab.dist)
     mesh_desc = ("unsharded" if mesh is None else
                  f"mesh data={mesh.shape['data']} model={mesh.shape['model']}")
-    # Under a mesh the engine is bypassed: sharded sweeps run per-shard jnp
-    # regardless of --backend (engine.shard_gate) — report what actually ran.
-    eff_backend = engine.backend if mesh is None else "jnp (shard-gated)"
     print(f"constructed labelling: {args.n} vertices, "
           f"{edges.shape[0]} edges, R={args.landmarks}, "
           f"size={int(lab.label_size())}, {time.time() - t0:.2f}s "
-          f"[backend={eff_backend}, {mesh_desc}]")
+          f"[backend={engine.backend}, {mesh_desc}]")
 
     # Host-side current edge set, maintained incrementally: a swap-remove
     # list + position map keeps each tick O(batch) instead of rebuilding
@@ -127,14 +135,15 @@ def main() -> None:
         # inside the update time: it is real per-tick work on the pallas
         # backend.
         has_ins = any(not is_del for (_, _, is_del) in ups)
+        g_next = apply_batch(g, batch)
+        plan = engine.prepare(g_next, topology_changed=has_ins)
         if mesh is None:
-            g_next = apply_batch(g, batch)
-            plan = engine.prepare(g_next, topology_changed=has_ins)
             g, lab, aff = batchhl_update(g, batch, lab, improved=True,
                                          plan=plan, g_new=g_next)
         else:
             g, lab, aff = shard_batchhl_update(mesh, g, batch, lab,
-                                               improved=True, plan=plan)
+                                               improved=True, plan=plan,
+                                               g_new=g_next)
         jax.block_until_ready(lab.dist)
         t_upd = time.time() - t0
 
@@ -189,11 +198,11 @@ def main() -> None:
             ckpt.save(args.ckpt_dir, tick + 1,
                       {"dist": lab.dist, "hub": lab.hub,
                        "highway": lab.highway, "landmarks": lab.landmarks})
-    engine_desc = ("" if mesh is not None else
+    engine_desc = ("" if engine.backend == "jnp" else
                    f"retiles={engine.retile_count}/{args.batches + 1} "
                    f"prepares, {engine.stale_cache_retiles} stale-cache "
-                   f"catches, ")
-    print(f"serve loop done [backend={eff_backend}, "
+                   f"catches, tile-shards={engine.shards}, ")
+    print(f"serve loop done [backend={engine.backend}, "
           f"{engine_desc}{mesh_desc}]")
 
 

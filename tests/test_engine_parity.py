@@ -321,7 +321,94 @@ def test_engine_prepare_catches_stale_cache():
 def test_engine_backend_validation():
     with pytest.raises(ValueError):
         RelaxEngine(backend="cuda")
+    with pytest.raises(ValueError):
+        RelaxEngine(backend="pallas", shards=0)
     edges, g, _, _ = _instance(2, 12, 6)
     bad = RelaxPlan(tiles=None, backend="nope")
     with pytest.raises(ValueError):
         relax_sweep(bad, g, jnp.zeros(12, jnp.int32), 1, int(INF_D))
+
+
+def test_plan_survives_mesh_roundtrip():
+    """Regression for the old `shard_gate` downgrade, which dropped the
+    plan object entirely under a mesh: one prepared plan must serve a
+    sharded update and then an unsharded call *without* retiling — the
+    fingerprint check recognizes the (deletion-only) snapshot as the one
+    it tiled."""
+    from repro.core.shard import shard_batchhl_update
+    from repro.launch.mesh import make_host_mesh
+
+    n = 40
+    edges, g, landmarks, lab = _instance(23, n, 20, r=8)
+    engine = RelaxEngine(backend="pallas", block_v=16, shards=2)
+    plan0 = engine.prepare(g)
+    assert engine.retile_count == 1
+
+    dele = make_batch([(int(edges[0][0]), int(edges[0][1]), True),
+                       (int(edges[1][0]), int(edges[1][1]), True)], pad_to=2)
+    mesh = make_host_mesh()
+    sg, slab, saff = shard_batchhl_update(mesh, g, batch=dele, labelling=lab,
+                                          plan=plan0)
+
+    # Post-mesh, single-device: same tiles object, no retile, no stale
+    # catch — the mesh leg never invalidated the cache.
+    plan1 = engine.prepare(sg, topology_changed=False)
+    assert plan1.tiles is plan0.tiles
+    assert engine.retile_count == 1
+    assert engine.stale_cache_retiles == 0
+    gj, labj, affj = batchhl_update(g, dele, lab)
+    gp, labp, affp = batchhl_update(g, dele, lab, plan=plan1)
+    np.testing.assert_array_equal(np.asarray(affp), np.asarray(affj))
+    np.testing.assert_array_equal(np.asarray(labp.dist),
+                                  np.asarray(labj.dist))
+    # ...and the sharded leg itself matched the unsharded jnp reference.
+    np.testing.assert_array_equal(np.asarray(saff), np.asarray(affj))
+    np.testing.assert_array_equal(np.asarray(slab.dist),
+                                  np.asarray(labj.dist))
+
+
+# --- three-way backend × mesh parity sweep ---------------------------------
+
+@pytest.mark.parametrize("mode", ["insert", "delete", "mixed"])
+def test_three_way_backend_mesh_parity(mode):
+    """sharded-pallas ≡ sharded-jnp ≡ unsharded-jnp, bit-for-bit, on
+    insert-only, delete-only, and mixed batches — labelling fields,
+    affected sets, and query answers."""
+    from repro.core.shard import shard_batched_query, shard_batchhl_update
+    from repro.launch.mesh import make_host_mesh
+
+    n = 48
+    edges, g, landmarks, lab = _instance(29, n, 30, r=8)
+    n_ins, n_del = {"insert": (5, 0), "delete": (0, 5),
+                    "mixed": (3, 3)}[mode]
+    ups = gen.random_batch_updates(edges, n, n_ins=n_ins, n_del=n_del,
+                                   seed=37)
+    batch = make_batch(ups, pad_to=max(n_ins + n_del, 1))
+    g_next = apply_batch(g, batch)
+    plan = RelaxEngine(backend="pallas", block_v=16, shards=2).prepare(g_next)
+    mesh = make_host_mesh()
+
+    g_u, lab_u, aff_u = batchhl_update(g, batch, lab, improved=True)
+    g_sj, lab_sj, aff_sj = shard_batchhl_update(mesh, g, batch, lab,
+                                                g_new=g_next)
+    g_sp, lab_sp, aff_sp = shard_batchhl_update(mesh, g, batch, lab,
+                                                plan=plan, g_new=g_next)
+
+    for name, aff, labx in (("sharded-jnp", aff_sj, lab_sj),
+                            ("sharded-pallas", aff_sp, lab_sp)):
+        np.testing.assert_array_equal(np.asarray(aff), np.asarray(aff_u),
+                                      err_msg=name)
+        for f in ("dist", "hub", "highway"):
+            np.testing.assert_array_equal(np.asarray(getattr(labx, f)),
+                                          np.asarray(getattr(lab_u, f)),
+                                          err_msg=f"{name}.{f}")
+
+    rng = np.random.default_rng(n)
+    qs = jnp.asarray(rng.integers(0, n, 19), jnp.int32)
+    qt = jnp.asarray(rng.integers(0, n, 19), jnp.int32)
+    d_u = batched_query(g_u, lab_u, qs, qt)
+    d_sj = shard_batched_query(mesh, g_sj, lab_sj, qs, qt)
+    d_sp = shard_batched_query(mesh, g_sp, lab_sp, qs, qt,
+                               use_kernel=True, plan=plan)
+    np.testing.assert_array_equal(np.asarray(d_sj), np.asarray(d_u))
+    np.testing.assert_array_equal(np.asarray(d_sp), np.asarray(d_u))

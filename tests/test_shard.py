@@ -1,12 +1,15 @@
 """Mesh-sharded BatchHL (core/shard.py): sharded-vs-unsharded bit-parity.
 
-In-process tests run on the degenerate 1-device host mesh (conftest keeps
-the real device topology — no XLA_FLAGS here). The real multi-device
-coverage runs in subprocesses that force an 8-device CPU host platform
-(`--xla_force_host_platform_device_count`, the launch/dryrun.py idiom):
-the shard selftest sweeps every (data, model) factorization of 8 — with a
-non-divisible query batch, exercising the pad/slice path — and the
-serving loop runs end-to-end on a (4, 2) mesh against the BFS oracle.
+In-process tests run on whatever host mesh the environment provides: the
+degenerate 1-device mesh under plain pytest (conftest sets no XLA_FLAGS),
+a real 8-device mesh under the CI `mesh` job
+(XLA_FLAGS=--xla_force_host_platform_device_count=8) — instances use R=8
+landmarks so the plane counts divide any device count up to 8. The
+subprocess tests force the 8-device platform themselves regardless
+(`launch/dryrun.py` idiom): the shard selftest sweeps every (data, model)
+factorization of 8 on both sweep backends — with a non-divisible query
+batch, exercising the pad/slice path — and the serving loop runs
+end-to-end on a (4, 2) mesh against the BFS oracle.
 """
 from __future__ import annotations
 
@@ -22,7 +25,7 @@ from repro.graphs import generators as gen
 from repro.graphs.coo import from_edges, make_batch
 from repro.core.construct import build_labelling, select_landmarks_by_degree
 from repro.core.batch import batchhl_update
-from repro.core.engine import JNP_PLAN, RelaxPlan, shard_gate
+from repro.core.engine import RelaxEngine
 from repro.core.query import batched_query
 from repro.core.shard import (_check_planes, affected_vertices,
                               shard_batched_query, shard_batchhl_update,
@@ -40,16 +43,17 @@ def _env_8dev():
     return env
 
 
-def _instance(n=60, extra=70, r=4, seed=5):
+def _instance(n=60, extra=70, r=8, seed=5):
     edges = gen.random_connected(n, extra_edges=extra, seed=seed)
     g = from_edges(n, edges, edges.shape[0] + 32)
     landmarks = select_landmarks_by_degree(g, r)
     return edges, g, landmarks
 
 
-# --- 1-device mesh: the sharded code path must already be bit-exact -------
+# --- host mesh (1-device under plain pytest, 8-device under the CI mesh
+# --- job): the sharded code path must be bit-exact either way ---------------
 
-def test_build_update_query_parity_one_device_mesh():
+def test_build_update_query_parity_host_mesh():
     mesh = make_host_mesh()
     edges, g, landmarks = _instance()
     n = g.n
@@ -78,7 +82,7 @@ def test_build_update_query_parity_one_device_mesh():
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
-def test_basic_search_variant_parity_one_device_mesh():
+def test_basic_search_variant_parity_host_mesh():
     mesh = make_host_mesh()
     edges, g, landmarks = _instance(seed=8)
     lab = build_labelling(g, landmarks)
@@ -112,24 +116,22 @@ def test_plane_divisibility_validation():
         make_host_mesh(model=3)   # 1 CPU device can't split a model axis
 
 
-def test_shard_gate_downgrades_pallas_plans():
-    assert shard_gate(None) is None
-    assert shard_gate(JNP_PLAN) is JNP_PLAN
-    gated = shard_gate(RelaxPlan(tiles=None, backend="pallas"))
-    assert gated.backend == "jnp"
-
-
 def test_sharded_update_accepts_engine_plan():
-    """Passing a pallas plan through the sharded path must not change
-    results (the gate swaps in the jnp reference per shard)."""
+    """A real Pallas plan (tiles and all) through the sharded path must
+    give bit-identical results to the per-shard jnp reference — the
+    shard-aware tiling composes with the mesh, no downgrade anywhere."""
+    from repro.graphs.coo import apply_batch
     mesh = make_host_mesh()
     edges, g, landmarks = _instance(seed=12)
     lab = build_labelling(g, landmarks)
     ups = gen.random_batch_updates(edges, g.n, n_ins=3, n_del=3, seed=6)
     batch = make_batch(ups, pad_to=6)
-    plan = RelaxPlan(tiles=None, backend="pallas")
+    g_next = apply_batch(g, batch)
+    plan = RelaxEngine(backend="pallas", block_v=16,
+                       shards=2).prepare(g_next)
     _, lab_a, aff_a = shard_batchhl_update(mesh, g, batch, lab)
-    _, lab_b, aff_b = shard_batchhl_update(mesh, g, batch, lab, plan=plan)
+    _, lab_b, aff_b = shard_batchhl_update(mesh, g, batch, lab, plan=plan,
+                                           g_new=g_next)
     np.testing.assert_array_equal(np.asarray(aff_b), np.asarray(aff_a))
     np.testing.assert_array_equal(np.asarray(lab_b.dist),
                                   np.asarray(lab_a.dist))
