@@ -18,11 +18,21 @@ from repro.graphs import generators as gen
 from repro.graphs.coo import from_edges
 from repro.core.construct import build_labelling, select_landmarks_by_degree
 
+#: (n, attachment degree) of the BA datasets; the single source of truth
+#: shared with callers that regenerate the graph themselves (the serve
+#: loop benches in `benchmarks/ticks.py`) so both trajectories measure
+#: the same graph under the same dataset name.
+BA_PARAMS = {
+    "ba_2k": (2_000, 3),
+    "ba_10k": (10_000, 4),
+    "ba_20k": (20_000, 5),
+}
+
 DATASETS = {
     # name: (builder, kwargs)  — ordered small → large
-    "ba_2k": lambda: gen.barabasi_albert(2_000, 3, seed=0),
-    "ba_10k": lambda: gen.barabasi_albert(10_000, 4, seed=1),
-    "ba_20k": lambda: gen.barabasi_albert(20_000, 5, seed=2),
+    "ba_2k": lambda: gen.barabasi_albert(*BA_PARAMS["ba_2k"], seed=0),
+    "ba_10k": lambda: gen.barabasi_albert(*BA_PARAMS["ba_10k"], seed=1),
+    "ba_20k": lambda: gen.barabasi_albert(*BA_PARAMS["ba_20k"], seed=2),
     "er_5k": lambda: gen.erdos_renyi(5_000, 0.0015, seed=3),
 }
 

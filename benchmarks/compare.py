@@ -6,8 +6,10 @@
 Compares candidate rows against the committed baseline by name and fails
 (exit 1) when any gated latency regresses more than --max-regression, or
 when a baseline row vanished from the candidate (coverage loss counts as
-a regression). Only rows matching --prefix (default ``ticks/``), above
---min-us, and not ending in --skip-suffix (default ``/construct`` —
+a regression). Only rows matching --prefix (comma-separated; default
+``ticks/,serve/`` — the tick trajectory *and* the serving-pipeline
+query-latency percentiles), above --min-us, and not ending in
+--skip-suffix (default ``/construct`` —
 one-shot measurements dominated by trace/compile variance) are gated:
 sub-millisecond rows on shared CI runners are noise, and the paper-table
 modules are trajectory telemetry, not gates. New candidate rows pass
@@ -50,8 +52,9 @@ def main() -> None:
     ap.add_argument("candidate")
     ap.add_argument("--max-regression", type=float, default=0.25,
                     help="fail when cand/base - 1 exceeds this (default .25)")
-    ap.add_argument("--prefix", default="ticks/",
-                    help="gate only rows whose name starts with this")
+    ap.add_argument("--prefix", default="ticks/,serve/",
+                    help="gate only rows whose name starts with one of "
+                         "these comma-separated prefixes")
     ap.add_argument("--skip-suffix", default="/construct",
                     help="report but never gate rows ending in this: "
                          "one-shot construct measurements are dominated "
@@ -78,6 +81,7 @@ def main() -> None:
 
     base = load_rows(args.baseline)
     cand = load_rows(args.candidate)
+    prefixes = tuple(p for p in args.prefix.split(",") if p)
 
     cal = 1.0
     if args.calibrate:
@@ -92,7 +96,7 @@ def main() -> None:
     failures: list[str] = []
     print(f"{'row':56s} {'base_us':>12s} {'cand_us':>12s} {'ratio':>7s}")
     for name in sorted(base):
-        if not name.startswith(args.prefix):
+        if not name.startswith(prefixes):
             continue
         b = base[name]["us_per_call"]
         if name not in cand:
@@ -120,7 +124,7 @@ def main() -> None:
             flag = "  (not gated)"
         print(f"{name:56s} {b:12.1f} {c:12.1f} {ratio:7.2f}{flag}")
     for name in sorted(set(cand) - set(base)):
-        if name.startswith(args.prefix):
+        if name.startswith(prefixes):
             print(f"{name:56s} {'—':>12s} "
                   f"{cand[name]['us_per_call']:12.1f} {'new':>7s}")
 

@@ -7,7 +7,9 @@ Prints ``name,us_per_call,derived`` CSV rows. Modules:
   table6_directed      — Table 6 (directed graphs, two-plane BatchHL)
   fig6_batch_sizes     — Fig. 6 (amortized total time vs batch size)
   fig7_landmarks       — Figs. 7/8 (update/query time vs landmarks)
-  ticks                — serving-tick latency per backend × mesh
+  ticks                — serving-tick latency per backend × mesh, plus
+                         the serve-loop trajectory (open-loop query
+                         p50/p95/p99 + staleness, sync vs pipeline)
 
 ``--fast`` trims datasets for CI-ish runs; default runs everything.
 ``--preset quick`` runs only the `ticks` module at CI size — the bench

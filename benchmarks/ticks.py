@@ -8,11 +8,26 @@ backend × mesh configurations that PRs 1–3 built:
     ticks/<dataset>/<backend>/<mesh>/update      (median per-tick)
     ticks/<dataset>/<backend>/<mesh>/query       (median per-tick)
 
+PR 4 adds the *serving-pipeline* trajectory: the open-loop query stream
+of `launch/serve.py` measured under concurrent update load, synchronous
+vs pipelined (DESIGN.md §5):
+
+    serve/<dataset>/<backend>/<mode>/q_p50|q_p95|q_p99   (per-query s→us)
+    serve/<dataset>/<backend>/<mode>/update              (min steady tick)
+    serve/<dataset>/<backend>/<mode>/staleness           (mean versions
+                                                          behind head —
+                                                          telemetry, not
+                                                          a latency)
+
+where mode ∈ {sync, pipeline}. The pipeline's whole point shows up here:
+sync q_p99 tracks the update latency (queries queue behind the monolithic
+dispatch), pipeline q_p99 tracks one chunk + one microbatch.
+
 Rows follow the ``name,us_per_call,derived`` contract of benchmarks/run.py;
-``python -m benchmarks.run --preset quick --json BENCH_pr3.json`` persists
+``python -m benchmarks.run --preset quick --json BENCH_pr4.json`` persists
 them in the bench-trajectory JSON format that `benchmarks/compare.py`
-gates against the committed `benchmarks/baseline.json` (>25% tick-latency
-regressions fail the CI `bench` job).
+gates against the committed `benchmarks/baseline.json` (>25% regressions
+on any gated tick latency *or* serve percentile fail the CI `bench` job).
 
 The quick preset is sized for shared CI runners: one small dataset, a few
 ticks, the degenerate host mesh on however many devices the runner
@@ -27,7 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import DATASETS, emit
+from benchmarks.common import BA_PARAMS, DATASETS, emit
 from repro.graphs import generators as gen
 from repro.graphs.coo import apply_batch, from_edges, make_batch
 from repro.core.batch import batchhl_update
@@ -37,6 +52,11 @@ from repro.core.query import batched_query
 from repro.core.shard import (shard_batched_query, shard_batchhl_update,
                               shard_build_labelling)
 from repro.launch.mesh import make_host_mesh
+from repro.launch.serve import ServeConfig, ServeLoop
+
+#: datasets the serve loop can regenerate itself (it builds its own BA
+#: graph from `common.BA_PARAMS` — one source of truth with DATASETS).
+SERVE_DATASETS = {"ba_2k"}
 
 
 def _tick_loop(name: str, g0, landmarks, edges, backend: str, mesh,
@@ -110,10 +130,46 @@ def _tick_loop(name: str, g0, landmarks, edges, backend: str, mesh,
     return rows
 
 
+def _serve_loop(name: str, n: int, deg: int, backend: str, mode: str,
+                ticks: int, batch_size: int, queries: int, landmarks: int,
+                block_v: int, tile_shards: int, qps: float,
+                microbatch: int) -> list[str]:
+    """One ServeLoop run → the serve/ percentile + staleness rows.
+
+    Percentiles are computed over the steady-state ticks only (the same
+    warmup convention as `_tick_loop`: tick 0 pays compilation, tick 1
+    can pay a reshard retrace), per query, arrival → answered.
+    """
+    cfg = ServeConfig(n=n, deg=deg, landmarks=landmarks, batches=ticks,
+                      batch_size=batch_size, queries=queries, qps=qps,
+                      microbatch=microbatch, pipeline=(mode == "pipeline"),
+                      backend=backend, block_v=block_v,
+                      tile_shards=tile_shards, quiet=True)
+    rep = ServeLoop(cfg).run()
+    warm = 2 if ticks > 2 else 1 if ticks > 1 else 0
+    mbs = [m for m in rep.microbatches if m.tick >= warm]
+    lat = np.concatenate([m.latencies for m in mbs])
+    stale = float(np.concatenate(
+        [np.full(m.latencies.shape, m.staleness) for m in mbs]).mean())
+    upd = min(t.update_s for t in rep.ticks if t.tick >= warm)
+    info = (f"ticks={ticks};Q={queries};qps={qps:g};mb={microbatch};"
+            f"chunk={cfg.chunk_sweeps}")
+    rows = [emit(f"{name}/q_p50", float(np.percentile(lat, 50)), info),
+            emit(f"{name}/q_p95", float(np.percentile(lat, 95)), info),
+            emit(f"{name}/q_p99", float(np.percentile(lat, 99)), info),
+            emit(f"{name}/update", upd, f"stat=min;{info}")]
+    # Telemetry, not a latency: the value is mean versions-behind-head.
+    row = f"{name}/staleness,{stale:.4f},unit=versions;{info}"
+    print(row)
+    rows.append(row)
+    return rows
+
+
 def run(datasets=("ba_2k",), backends=("jnp", "pallas"),
         meshes=("none", "host"), ticks: int = 6, batch_size: int = 64,
         queries: int = 128, landmarks: int = 16, block_v: int = 256,
-        tile_shards: int = 2) -> list[str]:
+        tile_shards: int = 2, serve_modes=("sync", "pipeline"),
+        qps: float = 2000.0, microbatch: int = 32) -> list[str]:
     rows = []
     for ds in datasets:
         edges = DATASETS[ds]()
@@ -127,6 +183,19 @@ def run(datasets=("ba_2k",), backends=("jnp", "pallas"),
                 rows += _tick_loop(f"ticks/{ds}/{backend}/{mesh_name}",
                                    g0, lms, edges, backend, mesh, ticks,
                                    batch_size, queries, block_v, tile_shards)
+    # The serving-pipeline trajectory: unsharded sync vs pipeline per
+    # backend (the mesh × pipeline composition is smoke-tested by the CI
+    # `mesh` job; benching it here would double the preset's runtime).
+    for ds in datasets:
+        if ds not in SERVE_DATASETS:
+            continue
+        n, deg = BA_PARAMS[ds]
+        for backend in backends:
+            for mode in serve_modes:
+                rows += _serve_loop(f"serve/{ds}/{backend}/{mode}", n, deg,
+                                    backend, mode, ticks, batch_size,
+                                    queries, landmarks, block_v,
+                                    tile_shards, qps, microbatch)
     return rows
 
 

@@ -63,14 +63,19 @@ def _fixpoint(body_fn, init: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 # Batch Search — Algorithm 2 (basic, returns CP-affected superset)
 # ---------------------------------------------------------------------------
+#
+# Each search below is decomposed into a *seed* (scatter the batch's anchor
+# keys into per-plane planes) and a *step* (one relaxation wave over all
+# planes). The monotone fixpoint of the step from the seed is the search
+# result; the monolithic `*_planes` functions iterate it to convergence in
+# one `while_loop`, and the serving pipeline (`core/snapshot.py`) iterates
+# the *same* step in bounded chunks so query microbatches can interleave on
+# the device queue — bit-identical by monotonicity (extra converged waves
+# are no-ops).
 
-def search_basic_planes(g_new: Graph, batch: BatchUpdate, dist_g: jax.Array,
-                        plan: RelaxPlan | None = None) -> jax.Array:
-    """Algo-2 search over an arbitrary plane slice `dist_g` [P, V].
-
-    Entirely per-plane (the paper's landmark parallelism): `core/shard.py`
-    runs this on each shard's local planes with no cross-shard traffic.
-    """
+def search_basic_seed(g_new: Graph, batch: BatchUpdate, dist_g: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Algo-2 seeds for a plane slice: (seed keys [P, V], seeded [P, V])."""
     n = g_new.n
 
     da = dist_g[:, batch.src]                                 # [P, U]
@@ -85,19 +90,32 @@ def search_basic_planes(g_new: Graph, batch: BatchUpdate, dist_g: jax.Array,
     def scatter_seeds(anchors, vals):
         plane = jnp.full((n,), INF_D, jnp.int32)
         return plane.at[anchors].min(vals)
-    seed = jax.vmap(scatter_seeds)(anchor, seed_d)            # [R, V]
-    seeded = seed < INF_D                                     # anchors join
+    seed = jax.vmap(scatter_seeds)(anchor, seed_d)            # [P, V]
+    return seed, seed < INF_D                                 # anchors join
                                                               # V_AFF+ uncond.
 
-    def plane_fix(seed_p, dist_p):
-        def sweep(best):
-            cand = relax_sweep(plan, g_new, best, 1, INF_D)
-            accept = cand <= dist_p                           # Algo2 line 12
-            cand = jnp.where(accept, cand, INF_D)
-            return jnp.minimum(best, jnp.minimum(cand, seed_p))
-        return _fixpoint(sweep, seed_p)
 
-    best = jax.vmap(plane_fix)(seed, dist_g)
+def search_basic_step(plan: RelaxPlan | None, g_new: Graph, best: jax.Array,
+                      seed: jax.Array, dist_g: jax.Array) -> jax.Array:
+    """One Algo-2 relaxation wave over all planes of a slice [P, V]."""
+    def one(best_p, seed_p, dist_p):
+        cand = relax_sweep(plan, g_new, best_p, 1, INF_D)
+        accept = cand <= dist_p                               # Algo2 line 12
+        cand = jnp.where(accept, cand, INF_D)
+        return jnp.minimum(best_p, jnp.minimum(cand, seed_p))
+    return jax.vmap(one)(best, seed, dist_g)
+
+
+def search_basic_planes(g_new: Graph, batch: BatchUpdate, dist_g: jax.Array,
+                        plan: RelaxPlan | None = None) -> jax.Array:
+    """Algo-2 search over an arbitrary plane slice `dist_g` [P, V].
+
+    Entirely per-plane (the paper's landmark parallelism): `core/shard.py`
+    runs this on each shard's local planes with no cross-shard traffic.
+    """
+    seed, seeded = search_basic_seed(g_new, batch, dist_g)
+    best = _fixpoint(
+        lambda b: search_basic_step(plan, g_new, b, seed, dist_g), seed)
     return seeded | (best < INF_D)
 
 
@@ -112,14 +130,11 @@ def batch_search_basic(g_old: Graph, g_new: Graph, batch: BatchUpdate,
 # Batch Search — Algorithm 3 (improved, extended landmark lengths)
 # ---------------------------------------------------------------------------
 
-def search_improved_planes(g_new: Graph, batch: BatchUpdate,
-                           dist_g: jax.Array, hub_g: jax.Array,
-                           hub_mask: jax.Array,
-                           plan: RelaxPlan | None = None) -> jax.Array:
-    """Algo-3 search over an arbitrary plane slice (dist/hub/hub_mask [P, V]).
-
-    Entirely per-plane; `core/shard.py` runs it on shard-local planes.
-    """
+def search_improved_seed(g_new: Graph, batch: BatchUpdate,
+                         dist_g: jax.Array, hub_g: jax.Array,
+                         hub_mask: jax.Array
+                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Algo-3 seeds for a plane slice: (seed key4 [P, V], seeded, beta)."""
     n = g_new.n
     key2_g = key2_make(dist_g, hub_g)                         # [P, V]
     beta = key4_beta(key2_g)                                  # [P, V]
@@ -131,7 +146,7 @@ def search_improved_planes(g_new: Graph, batch: BatchUpdate,
     anchor = jnp.where(a_is_pre, batch.dst[None, :], batch.src[None, :])
     pre = jnp.where(a_is_pre, batch.src[None, :], batch.dst[None, :])
 
-    key2_pre = jnp.take_along_axis(key2_g, pre, axis=1)       # [R, U]
+    key2_pre = jnp.take_along_axis(key2_g, pre, axis=1)       # [P, U]
     k4 = key4_from_key2(key2_pre, batch.is_del[None, :])
     anchor_is_hub = jnp.take_along_axis(hub_mask, anchor, axis=1)
     seed_k4 = key4_extend(k4, anchor_is_hub)
@@ -141,19 +156,36 @@ def search_improved_planes(g_new: Graph, batch: BatchUpdate,
         plane = jnp.full((n,), INF_KEY4, jnp.int32)
         return plane.at[anchors].min(vals)
     seed = jax.vmap(scatter_seeds)(anchor, seed_k4)
-    seeded = seed < INF_KEY4
+    return seed, seed < INF_KEY4, beta
 
-    def plane_fix(seed_p, beta_p, hub_p):
-        def sweep(best):
-            # key4_extend per edge: +4, clamp, clear the l-bit at hub dsts.
-            cand = relax_sweep(plan, g_new, best, 4, INF_KEY4,
-                               hub=hub_p, clear_bit=2)
-            accept = cand <= beta_p                           # Algo3 line 14
-            cand = jnp.where(accept, cand, INF_KEY4)
-            return jnp.minimum(best, jnp.minimum(cand, seed_p))
-        return _fixpoint(sweep, seed_p)
 
-    best = jax.vmap(plane_fix)(seed, beta, hub_mask)
+def search_improved_step(plan: RelaxPlan | None, g_new: Graph,
+                         best: jax.Array, seed: jax.Array, beta: jax.Array,
+                         hub_mask: jax.Array) -> jax.Array:
+    """One Algo-3 relaxation wave over all planes of a slice [P, V]."""
+    def one(best_p, seed_p, beta_p, hub_p):
+        # key4_extend per edge: +4, clamp, clear the l-bit at hub dsts.
+        cand = relax_sweep(plan, g_new, best_p, 4, INF_KEY4,
+                           hub=hub_p, clear_bit=2)
+        accept = cand <= beta_p                               # Algo3 line 14
+        cand = jnp.where(accept, cand, INF_KEY4)
+        return jnp.minimum(best_p, jnp.minimum(cand, seed_p))
+    return jax.vmap(one)(best, seed, beta, hub_mask)
+
+
+def search_improved_planes(g_new: Graph, batch: BatchUpdate,
+                           dist_g: jax.Array, hub_g: jax.Array,
+                           hub_mask: jax.Array,
+                           plan: RelaxPlan | None = None) -> jax.Array:
+    """Algo-3 search over an arbitrary plane slice (dist/hub/hub_mask [P, V]).
+
+    Entirely per-plane; `core/shard.py` runs it on shard-local planes.
+    """
+    seed, seeded, beta = search_improved_seed(g_new, batch, dist_g, hub_g,
+                                              hub_mask)
+    best = _fixpoint(
+        lambda b: search_improved_step(plan, g_new, b, seed, beta, hub_mask),
+        seed)
     return seeded | (best < INF_KEY4)
 
 
@@ -170,6 +202,35 @@ def batch_search_improved(g_old: Graph, g_new: Graph, batch: BatchUpdate,
 # Batch Repair — Algorithm 4
 # ---------------------------------------------------------------------------
 
+def repair_base(plan: RelaxPlan | None, g_new: Graph, aff: jax.Array,
+                key2_g: jax.Array, hub_mask: jax.Array) -> jax.Array:
+    """Algo-4 boundary seeds: landmark-distance bounds from *unaffected*
+    neighbours (line 3), INF_KEY2 off the affected sets. [P, V]."""
+    def one(aff_p, key2_p, hub_p):
+        bou_mask = g_new.valid & ~aff_p[g_new.src] & aff_p[g_new.dst]
+        base = relax_sweep(plan, g_new, key2_p, 2, INF_KEY2,
+                           hub=hub_p, clear_bit=1, edge_mask=bou_mask)
+        return jnp.where(aff_p, base, INF_KEY2)
+    return jax.vmap(one)(aff, key2_g, hub_mask)
+
+
+def repair_step(plan: RelaxPlan | None, g_new: Graph, cur: jax.Array,
+                aff: jax.Array, hub_mask: jax.Array) -> jax.Array:
+    """One Algo-4 interior relaxation wave (lines 5-15) over a slice."""
+    def one(cur_p, aff_p, hub_p):
+        int_mask = g_new.valid & aff_p[g_new.src] & aff_p[g_new.dst]
+        cand = relax_sweep(plan, g_new, cur_p, 2, INF_KEY2,
+                           hub=hub_p, clear_bit=1, edge_mask=int_mask)
+        return jnp.minimum(cur_p, cand)
+    return jax.vmap(one)(cur, aff, hub_mask)
+
+
+def repair_merge(aff: jax.Array, settled: jax.Array,
+                 key2_g: jax.Array) -> jax.Array:
+    """Rewrite only affected entries; unaffected labels are untouched."""
+    return jnp.where(aff, settled, key2_g)
+
+
 def repair_planes(g_new: Graph, aff: jax.Array, key2_g: jax.Array,
                   hub_mask: jax.Array,
                   plan: RelaxPlan | None = None) -> jax.Array:
@@ -180,26 +241,10 @@ def repair_planes(g_new: Graph, aff: jax.Array, key2_g: jax.Array,
     values by Lemma 5.20 + monotonicity. Entirely per-plane, so
     `core/shard.py` runs it on shard-local planes.
     """
-
-    def plane_repair(aff_p, key2_p, hub_p):
-        # Landmark-distance bounds from *unaffected* neighbours (line 3).
-        bou_mask = g_new.valid & ~aff_p[g_new.src] & aff_p[g_new.dst]
-        base = relax_sweep(plan, g_new, key2_p, 2, INF_KEY2,
-                           hub=hub_p, clear_bit=1, edge_mask=bou_mask)
-        base = jnp.where(aff_p, base, INF_KEY2)
-
-        # Interior relaxation (lines 5-15 wavefront → fixpoint).
-        int_mask = g_new.valid & aff_p[g_new.src] & aff_p[g_new.dst]
-
-        def sweep(cur):
-            cand = relax_sweep(plan, g_new, cur, 2, INF_KEY2,
-                               hub=hub_p, clear_bit=1, edge_mask=int_mask)
-            return jnp.minimum(cur, cand)
-
-        settled = _fixpoint(sweep, base)
-        return jnp.where(aff_p, settled, key2_p)
-
-    return jax.vmap(plane_repair)(aff, key2_g, hub_mask)
+    base = repair_base(plan, g_new, aff, key2_g, hub_mask)
+    settled = _fixpoint(
+        lambda c: repair_step(plan, g_new, c, aff, hub_mask), base)
+    return repair_merge(aff, settled, key2_g)
 
 
 def batch_repair(g_new: Graph, aff: jax.Array,

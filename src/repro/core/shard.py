@@ -59,8 +59,11 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.graphs.coo import Graph, BatchUpdate, INF_D, apply_batch
-from repro.core.batch import (repair_planes, search_basic_planes,
-                              search_improved_planes)
+from repro.core.batch import (repair_base, repair_merge, repair_planes,
+                              repair_step, search_basic_planes,
+                              search_basic_seed, search_basic_step,
+                              search_improved_planes, search_improved_seed,
+                              search_improved_step)
 from repro.core.construct import construct_key2_planes
 from repro.core.engine import RelaxPlan
 from repro.core.labelling import (HighwayLabelling, key2_dist, key2_hub,
@@ -83,6 +86,29 @@ def _check_planes(r: int, size: int, what: str) -> None:
 
 def _maint_size(mesh) -> int:
     return mesh.shape["model"] * mesh.shape["data"]
+
+
+def validate_landmark_sharding(mesh, r: int) -> None:
+    """Pre-flight check of R against *both* plane groupings of a mesh.
+
+    Maintenance shards landmark planes over data·model (the idle data
+    axis donates its parallelism); queries regroup them over model only.
+    Each failing grouping is named explicitly — `R % n_devices` alone
+    can't tell a caller which phase's regrouping broke, and keeps working
+    silently if the groupings ever diverge.
+    """
+    data, model = mesh.shape["data"], mesh.shape["model"]
+    failing = []
+    if r % (data * model):
+        failing.append(f"maintenance grouping data×model = "
+                       f"{data}×{model} = {data * model}")
+    if r % model:
+        failing.append(f"query grouping model = {model}")
+    if failing:
+        raise ValueError(
+            f"landmark count R={r} must be divisible by every plane "
+            f"grouping of the mesh; failing: {'; '.join(failing)} — pick "
+            f"R as a multiple, or a smaller mesh / --shards")
 
 
 # ---------------------------------------------------------------------------
@@ -187,6 +213,134 @@ def affected_vertices(mesh, aff: jax.Array) -> jax.Array:
     return shard_map(body, mesh=mesh,
                      in_specs=(P(MAINT_AXES, None),),
                      out_specs=P(None))(aff)
+
+
+# ---------------------------------------------------------------------------
+# Bounded update chunks (the serving pipeline's mesh path, DESIGN.md §5)
+# ---------------------------------------------------------------------------
+#
+# `core/snapshot.pipelined_update` runs the batch update as bounded
+# dispatches so query microbatches interleave on the device queue. These
+# are the mesh twins of the unsharded chunk jits in `core/snapshot.py`:
+# the same seed/step functions from `core/batch.py`, under shard_map on
+# the maintenance plane grouping (landmark planes over ("model", "data")),
+# with the graph, batch, and plan replicated. The per-chunk `changed`
+# flag is the one cross-shard reduction (a pmax OR-merge); everything
+# else is all-local, exactly like the monolithic maintenance bodies.
+
+@partial(jax.jit, static_argnames=("mesh", "improved"))
+def shard_search_seed(mesh, g_new: Graph, batch: BatchUpdate,
+                      dist: jax.Array, hub: jax.Array, landmarks: jax.Array,
+                      improved: bool = True):
+    """Mesh twin of `snapshot.search_seed`; outputs plane-sharded rv."""
+    _check_planes(landmarks.shape[0], _maint_size(mesh), "maintenance")
+
+    def body(g_new, batch, dist, hub, own, landmarks_full):
+        hub_mask = per_plane_hub_mask(landmarks_full, own, g_new.n)
+        if improved:
+            seed, seeded, beta = search_improved_seed(g_new, batch, dist,
+                                                      hub, hub_mask)
+            return seed, seeded, beta, hub_mask
+        seed, seeded = search_basic_seed(g_new, batch, dist)
+        return seed, seeded, dist, hub_mask
+
+    rv = P(MAINT_AXES, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), rv, rv, P(MAINT_AXES), P()),
+        out_specs=(rv, rv, rv, rv),
+        check_rep=False)(g_new, batch, dist, hub, landmarks, landmarks)
+
+
+@partial(jax.jit, static_argnames=("mesh", "improved", "sweeps"))
+def shard_search_chunk(mesh, g_new: Graph, best: jax.Array, seed: jax.Array,
+                       bound: jax.Array, hub_mask: jax.Array,
+                       plan: RelaxPlan | None, improved: bool = True,
+                       sweeps: int = 1):
+    """Mesh twin of `snapshot.search_chunk` → (best', changed scalar)."""
+
+    def body(g_new, best, seed, bound, hub_mask, plan):
+        cur = best
+        for _ in range(sweeps):
+            if improved:
+                cur = search_improved_step(plan, g_new, cur, seed, bound,
+                                           hub_mask)
+            else:
+                cur = search_basic_step(plan, g_new, cur, seed, bound)
+        changed = jax.lax.pmax(
+            jnp.any(cur != best).astype(jnp.int32), MAINT_AXES)
+        return cur, changed > 0
+
+    rv = P(MAINT_AXES, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), rv, rv, rv, rv, P()),
+        out_specs=(rv, P()),
+        check_rep=False)(g_new, best, seed, bound, hub_mask, plan)
+
+
+@partial(jax.jit, static_argnames=("mesh",))
+def shard_repair_start(mesh, g_new: Graph, aff: jax.Array, dist: jax.Array,
+                       hub: jax.Array, hub_mask: jax.Array,
+                       plan: RelaxPlan | None) -> jax.Array:
+    """Mesh twin of `snapshot.repair_start` (Algo-4 boundary seeding)."""
+
+    def body(g_new, aff, dist, hub, hub_mask, plan):
+        return repair_base(plan, g_new, aff, key2_make(dist, hub), hub_mask)
+
+    rv = P(MAINT_AXES, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), rv, rv, rv, rv, P()),
+        out_specs=rv,
+        check_rep=False)(g_new, aff, dist, hub, hub_mask, plan)
+
+
+@partial(jax.jit, static_argnames=("mesh", "sweeps"))
+def shard_repair_chunk(mesh, g_new: Graph, cur: jax.Array, aff: jax.Array,
+                       hub_mask: jax.Array, plan: RelaxPlan | None,
+                       sweeps: int = 1):
+    """Mesh twin of `snapshot.repair_chunk` → (cur', changed scalar)."""
+
+    def body(g_new, cur, aff, hub_mask, plan):
+        out = cur
+        for _ in range(sweeps):
+            out = repair_step(plan, g_new, out, aff, hub_mask)
+        changed = jax.lax.pmax(
+            jnp.any(out != cur).astype(jnp.int32), MAINT_AXES)
+        return out, changed > 0
+
+    rv = P(MAINT_AXES, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), rv, rv, rv, P()),
+        out_specs=(rv, P()),
+        check_rep=False)(g_new, cur, aff, hub_mask, plan)
+
+
+@partial(jax.jit, static_argnames=("mesh",))
+def shard_update_finish(mesh, aff: jax.Array, settled: jax.Array,
+                        dist: jax.Array, hub: jax.Array,
+                        landmarks: jax.Array) -> HighwayLabelling:
+    """Mesh twin of `snapshot.update_finish`; labelling comes back
+    plane-sharded rv with row-sharded highway, like the monolithic
+    `shard_batchhl_update`."""
+
+    def body(aff, settled, dist, hub, landmarks_full):
+        new_key2 = repair_merge(aff, settled, key2_make(dist, hub))
+        ndist = jnp.minimum(key2_dist(new_key2), INF_D)
+        nhub = key2_hub(new_key2) & (ndist < INF_D)
+        highway = ndist[:, landmarks_full]   # local rows [P, R]
+        return ndist, nhub, highway
+
+    rv = P(MAINT_AXES, None)
+    ndist, nhub, highway = shard_map(
+        body, mesh=mesh,
+        in_specs=(rv, rv, rv, rv, P()),
+        out_specs=(rv, rv, rv),
+        check_rep=False)(aff, settled, dist, hub, landmarks)
+    return HighwayLabelling(landmarks.astype(jnp.int32), ndist, nhub,
+                            highway)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,424 @@
+"""Versioned snapshots and the chunked-update serving pipeline.
+
+The serving architecture of DESIGN.md §5: queries must stay fast *while*
+the graph churns (the paper's premise), but a monolithic
+`batchhl_update` is one device dispatch — on a single execution queue,
+any query enqueued behind it waits for the whole update, so tail latency
+is bounded below by update time. This module breaks that head-of-line
+blocking with two pieces:
+
+* **`Snapshot` / `SnapshotStore`** — an immutable serving unit
+  (graph + labelling + prepared `RelaxPlan` + version id) behind a
+  single-writer many-reader store. Queries always dispatch against the
+  *committed* snapshot; an update builds snapshot N+1 off to the side
+  and `commit` swaps the pointer atomically. JAX arrays are immutable,
+  so in-flight queries against snapshot N stay valid across the swap —
+  answers are always exact *at some committed version* (bounded
+  staleness, never inconsistency).
+
+* **`pipelined_update`** — the BatchHL update (batch search Algos 2–3 +
+  batch repair Algo 4) as a generator of *bounded* device dispatches:
+  seed, then fixpoint sweeps in chunks of `chunk_sweeps` waves, then
+  repair likewise, then finalize. The caller interleaves query
+  microbatches at every yield; because each chunk is a fixed number of
+  relaxation sweeps, a query enqueued behind it waits at most one chunk
+  (a few sweeps) instead of the full update. The chunk bodies are the
+  *same* seed/step functions the monolithic fixpoints use
+  (`core/batch.py`), and the fixpoint is monotone, so the committed
+  labelling is bit-identical to `batchhl_update` — extra converged
+  sweeps are no-ops (`tests/test_pipeline.py` pins it).
+
+Under a mesh the chunks run through the `core/shard.py` wrappers with
+the maintenance plane grouping (landmark planes over data×model) while
+query microbatches keep the query grouping (planes over model, batch
+over data) — the regrouping contract of DESIGN.md §4, now interleaved
+on the same device queue instead of serialized.
+
+Checkpointing: `save_snapshot` / `restore_snapshot` persist the *full*
+serve state — graph topology (src/dst/valid), labelling, and version —
+so a restarted loop resumes exactly (the `RelaxPlan` is derived state,
+re-prepared by the engine on restore).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.coo import Graph, BatchUpdate, INF_D, apply_batch
+from repro.checkpoint import manager as ckpt
+from repro.core.batch import (repair_base, repair_merge, repair_step,
+                              search_basic_seed, search_basic_step,
+                              search_improved_seed, search_improved_step)
+from repro.core.engine import RelaxPlan
+from repro.core.labelling import (HighwayLabelling, INF_KEY4, key2_dist,
+                                  key2_hub, key2_make, per_plane_hub_mask)
+
+
+# ---------------------------------------------------------------------------
+# Snapshot + store
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """One immutable serving unit: everything a query needs, versioned.
+
+    `plan` is the `RelaxPlan` prepared for this graph snapshot (None on
+    the jnp backend); it rides along so queries at version N keep using
+    N's tiling even while the engine prepares N+1's.
+    """
+    version: int
+    graph: Graph
+    labelling: HighwayLabelling
+    plan: RelaxPlan | None = None
+
+
+class SnapshotStore:
+    """Single-writer / many-reader versioned snapshot pointer.
+
+    Reads (`committed`) are one attribute load — atomic under the GIL, no
+    lock on the query path. `commit` swaps the pointer and enforces
+    contiguous versions, so "answered at version v" is always meaningful.
+    """
+
+    def __init__(self, snapshot: Snapshot):
+        self._committed = snapshot
+
+    @property
+    def committed(self) -> Snapshot:
+        return self._committed
+
+    @property
+    def version(self) -> int:
+        return self._committed.version
+
+    def commit(self, snapshot: Snapshot) -> Snapshot:
+        if snapshot.version != self._committed.version + 1:
+            raise ValueError(
+                f"commit of version {snapshot.version} onto "
+                f"{self._committed.version}: versions must be contiguous")
+        self._committed = snapshot
+        return snapshot
+
+
+# ---------------------------------------------------------------------------
+# Bounded update chunks (unsharded; core/shard.py holds the mesh twins)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("improved",))
+def search_seed(g_new: Graph, batch: BatchUpdate, dist: jax.Array,
+                hub: jax.Array, landmarks: jax.Array, improved: bool = True
+                ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Batch-search initial state: (seed keys, seeded, bound, hub_mask).
+
+    `bound` is the per-vertex accept bound of the search step (β for the
+    improved Algo 3, d_G for the basic Algo 2); `hub_mask` is reused by
+    every later phase of the tick.
+    """
+    hub_mask = per_plane_hub_mask(landmarks, landmarks, g_new.n)
+    if improved:
+        seed, seeded, beta = search_improved_seed(g_new, batch, dist, hub,
+                                                  hub_mask)
+        return seed, seeded, beta, hub_mask
+    seed, seeded = search_basic_seed(g_new, batch, dist)
+    return seed, seeded, dist, hub_mask
+
+
+@partial(jax.jit, static_argnames=("improved", "sweeps"))
+def search_chunk(g_new: Graph, best: jax.Array, seed: jax.Array,
+                 bound: jax.Array, hub_mask: jax.Array,
+                 plan: RelaxPlan | None, improved: bool = True,
+                 sweeps: int = 1) -> tuple[jax.Array, jax.Array]:
+    """`sweeps` search waves in one bounded dispatch → (best', changed)."""
+    cur = best
+    for _ in range(sweeps):
+        if improved:
+            cur = search_improved_step(plan, g_new, cur, seed, bound,
+                                       hub_mask)
+        else:
+            cur = search_basic_step(plan, g_new, cur, seed, bound)
+    return cur, jnp.any(cur != best)
+
+
+@partial(jax.jit, static_argnames=("improved",))
+def search_finish(best: jax.Array, seeded: jax.Array,
+                  improved: bool = True) -> jax.Array:
+    """Settled search keys → aff[P, V] (the CP/LD-affected supersets)."""
+    inf = INF_KEY4 if improved else INF_D
+    return seeded | (best < inf)
+
+
+@jax.jit
+def repair_start(g_new: Graph, aff: jax.Array, dist: jax.Array,
+                 hub: jax.Array, hub_mask: jax.Array,
+                 plan: RelaxPlan | None) -> jax.Array:
+    """Algo-4 boundary seeding as one bounded dispatch."""
+    return repair_base(plan, g_new, aff, key2_make(dist, hub), hub_mask)
+
+
+@partial(jax.jit, static_argnames=("sweeps",))
+def repair_chunk(g_new: Graph, cur: jax.Array, aff: jax.Array,
+                 hub_mask: jax.Array, plan: RelaxPlan | None,
+                 sweeps: int = 1) -> tuple[jax.Array, jax.Array]:
+    """`sweeps` interior repair waves in one bounded dispatch."""
+    out = cur
+    for _ in range(sweeps):
+        out = repair_step(plan, g_new, out, aff, hub_mask)
+    return out, jnp.any(out != cur)
+
+
+@jax.jit
+def update_finish(aff: jax.Array, settled: jax.Array, dist: jax.Array,
+                  hub: jax.Array, landmarks: jax.Array) -> HighwayLabelling:
+    """Merge repaired keys into the labelling (dist/hub/highway)."""
+    new_key2 = repair_merge(aff, settled, key2_make(dist, hub))
+    ndist = jnp.minimum(key2_dist(new_key2), INF_D)
+    nhub = key2_hub(new_key2) & (ndist < INF_D)
+    highway = ndist[:, landmarks]
+    return HighwayLabelling(landmarks, ndist, nhub, highway)
+
+
+# ---------------------------------------------------------------------------
+# The pipelined update
+# ---------------------------------------------------------------------------
+
+def pipelined_update(snapshot: Snapshot, batch: BatchUpdate, *,
+                     plan: RelaxPlan | None = None,
+                     g_new: Graph | None = None, mesh=None,
+                     improved: bool = True, chunk_sweeps: int = 1):
+    """BatchHL update against `snapshot` as a generator of bounded
+    dispatches; returns (snapshot N+1, aff[R, V]) via StopIteration.
+
+    Yields a phase tag after *dispatching* each chunk and syncs on the
+    chunk's `changed` flag only after resuming — the caller serves query
+    microbatches against the committed snapshot at every yield, and each
+    enqueues behind at most one chunk (`chunk_sweeps` relaxation waves)
+    on the device queue. Like `batchhl_update`, a Pallas `plan` must be
+    prepared from the post-update snapshot (pass the materialized graph
+    as `g_new` to skip the recompute). With `mesh`, chunks run through
+    the `core/shard.py` wrappers on the maintenance plane grouping.
+
+    Drive it to completion with `run_pipelined_update`, or manually:
+
+        gen = pipelined_update(snap, batch, plan=plan)
+        for _phase in gen:
+            serve_pending_queries()      # interleaved work goes here
+        # StopIteration.value is the (snapshot, aff) result
+    """
+    if mesh is None:
+        seed_fn = search_seed
+        chunk_fn = search_chunk
+        rstart_fn = repair_start
+        rchunk_fn = repair_chunk
+        finish_fn = update_finish
+    else:
+        from repro.core import shard
+        seed_fn = partial(shard.shard_search_seed, mesh)
+        chunk_fn = partial(shard.shard_search_chunk, mesh)
+        rstart_fn = partial(shard.shard_repair_start, mesh)
+        rchunk_fn = partial(shard.shard_repair_chunk, mesh)
+        finish_fn = partial(shard.shard_update_finish, mesh)
+
+    lab = snapshot.labelling
+    if g_new is None:
+        g_new = apply_batch(snapshot.graph, batch)
+
+    seed, seeded, bound, hub_mask = seed_fn(
+        g_new, batch, lab.dist, lab.hub, lab.landmarks, improved=improved)
+    yield "search-seed"
+    best = seed
+    while True:
+        best, changed = chunk_fn(g_new, best, seed, bound, hub_mask, plan,
+                                 improved=improved, sweeps=chunk_sweeps)
+        yield "search"
+        if not bool(changed):
+            break
+    aff = search_finish(best, seeded, improved=improved)
+
+    cur = rstart_fn(g_new, aff, lab.dist, lab.hub, hub_mask, plan)
+    yield "repair-seed"
+    while True:
+        cur, changed = rchunk_fn(g_new, cur, aff, hub_mask, plan,
+                                 sweeps=chunk_sweeps)
+        yield "repair"
+        if not bool(changed):
+            break
+
+    new_lab = finish_fn(aff, cur, lab.dist, lab.hub, lab.landmarks)
+    return Snapshot(snapshot.version + 1, g_new, new_lab, plan), aff
+
+
+def run_pipelined_update(gen) -> tuple[Snapshot, jax.Array]:
+    """Drain a `pipelined_update` with no interleaved work.
+
+    The synchronous-equivalence hook: tests drain the generator dry and
+    compare the committed snapshot bit-for-bit against `batchhl_update`.
+    """
+    while True:
+        try:
+            next(gen)
+        except StopIteration as stop:
+            return stop.value
+
+
+# ---------------------------------------------------------------------------
+# Full-state checkpointing (graph + labelling + version)
+# ---------------------------------------------------------------------------
+
+def snapshot_state(snap: Snapshot) -> dict:
+    """The restartable serve state as a flat checkpoint tree.
+
+    Includes the graph topology slots — a labelling alone cannot resume a
+    serve loop (no edge set to apply the next batch to, no capacity). The
+    `RelaxPlan` is derived state and deliberately excluded: the engine
+    re-prepares it from the restored graph.
+    """
+    g, lab = snap.graph, snap.labelling
+    return {
+        "version": np.int64(snap.version),
+        "n": np.int64(g.n),
+        "graph_src": g.src, "graph_dst": g.dst, "graph_valid": g.valid,
+        "landmarks": lab.landmarks, "dist": lab.dist, "hub": lab.hub,
+        "highway": lab.highway,
+    }
+
+
+def save_snapshot(ckpt_dir: str, snap: Snapshot,
+                  extra: dict | None = None) -> str:
+    """Atomically persist the full serve state as step_<version>.
+
+    `extra` adds caller-owned host state to the same atomic checkpoint
+    (the serve loop stores its incremental edge list there — deletion
+    sampling is edge-*order* dependent, so the order itself is state).
+    """
+    state = snapshot_state(snap)
+    for k, v in (extra or {}).items():
+        if k in state:
+            raise ValueError(f"extra key {k!r} collides with snapshot state")
+        state[k] = v
+    return ckpt.save(ckpt_dir, snap.version, state)
+
+
+def restore_extra(ckpt_dir: str, names: tuple[str, ...],
+                  step: int | None = None) -> dict:
+    """Load caller-owned `extra` leaves saved alongside a snapshot."""
+    step = step if step is not None else ckpt.latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    return {name: np.load(os.path.join(d, name + ".npy")) for name in names}
+
+
+
+
+def restore_snapshot(ckpt_dir: str, step: int | None = None) -> Snapshot:
+    """Rebuild a `Snapshot` from the newest (or given) checkpoint.
+
+    Self-describing: shapes and the static vertex count come from the
+    checkpoint itself, so no template tree is needed. The returned
+    snapshot has `plan=None` — prepare one with the serving engine.
+    """
+    step = step if step is not None else ckpt.latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step}")
+
+    def load(name: str) -> np.ndarray:
+        return np.load(os.path.join(d, name + ".npy"))
+
+    missing = [k for k in ("graph_src", "graph_dst", "graph_valid")
+               if not os.path.exists(os.path.join(d, k + ".npy"))]
+    if missing:
+        raise FileNotFoundError(
+            f"checkpoint {d} lacks graph state {missing}: it predates the "
+            "full-state format and cannot resume a serve loop")
+    g = Graph(jnp.asarray(load("graph_src")), jnp.asarray(load("graph_dst")),
+              jnp.asarray(load("graph_valid")), int(load("n")))
+    lab = HighwayLabelling(jnp.asarray(load("landmarks")),
+                           jnp.asarray(load("dist")),
+                           jnp.asarray(load("hub")),
+                           jnp.asarray(load("highway")))
+    return Snapshot(int(load("version")), g, lab, None)
+
+
+# ---------------------------------------------------------------------------
+# Self-test (runnable under a forced multi-device host platform)
+# ---------------------------------------------------------------------------
+
+def _selftest() -> None:
+    """Pipelined-vs-monolithic bit-parity on every host-mesh factorization
+    × both sweep backends, then a pipelined ServeLoop whose every answer
+    is re-derived synchronously at the version it was served.
+
+    Run with a forced device count to exercise real multi-device meshes:
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+            PYTHONPATH=src python -m repro.core.snapshot
+    """
+    from repro.graphs import generators as gen
+    from repro.graphs.coo import from_edges, make_batch
+    from repro.core.construct import build_labelling, \
+        select_landmarks_by_degree
+    from repro.core.batch import batchhl_update
+    from repro.core.engine import RelaxEngine
+    from repro.core.query import batched_query
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.serve import ServeConfig, ServeLoop
+
+    n_dev = len(jax.devices())
+    n, r = 120, 8
+    edges = gen.random_connected(n, extra_edges=150, seed=3)
+    g = from_edges(n, edges, edges.shape[0] + 64)
+    landmarks = select_landmarks_by_degree(g, r)
+    lab0 = build_labelling(g, landmarks)
+    ups = gen.random_batch_updates(edges, n, n_ins=6, n_del=6, seed=9)
+    batch = make_batch(ups, pad_to=12)
+    g1, lab1, aff1 = batchhl_update(g, batch, lab0, improved=True)
+
+    g1_host = apply_batch(g, batch)
+    engine = RelaxEngine(backend="pallas", block_v=32, shards=2)
+    plan1 = engine.prepare(g1_host)
+
+    for model in [m for m in (1, 2, 4, 8) if n_dev % m == 0]:
+        mesh = make_host_mesh(model=model)
+        for backend, pln in (("jnp", None), ("pallas", plan1)):
+            snap = Snapshot(0, g, lab0, pln)
+            nxt, aff = run_pipelined_update(pipelined_update(
+                snap, batch, plan=pln, mesh=mesh, chunk_sweeps=2))
+            np.testing.assert_array_equal(np.asarray(aff), np.asarray(aff1))
+            for f in ("dist", "hub", "highway"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(nxt.labelling, f)),
+                    np.asarray(getattr(lab1, f)))
+            print(f"mesh (data={mesh.shape['data']}, model={model}) "
+                  f"backend={backend}: pipelined update bit-parity OK")
+
+    # End-to-end: pipelined serving on a real mesh (if the device count
+    # allows a model axis), every answer checked at its served version.
+    shards = 2 if n_dev % 2 == 0 and n_dev > 1 else 1
+    for backend in ("jnp", "pallas"):
+        cfg = ServeConfig(n=200, deg=3, landmarks=8, batches=2,
+                          batch_size=20, queries=24, qps=5000.0,
+                          microbatch=8, pipeline=True, backend=backend,
+                          block_v=64, tile_shards=2, mesh="host",
+                          shards=shards, quiet=True, keep_history=True)
+        rep = ServeLoop(cfg).run()
+        for m in rep.microbatches:
+            s = rep.history[m.version]
+            want = batched_query(s.graph, s.labelling,
+                                 jnp.asarray(m.qs), jnp.asarray(m.qt))
+            np.testing.assert_array_equal(m.answers, np.asarray(want))
+        assert any(m.staleness == 1 for m in rep.microbatches), \
+            "no query overlapped an update — pipeline never engaged"
+        print(f"serve pipeline backend={backend} (mesh shards={shards}): "
+              f"{len(rep.microbatches)} microbatches exact at their "
+              f"versions")
+    print(f"pipeline selftest OK on {n_dev} device(s)")
+
+
+if __name__ == "__main__":
+    _selftest()

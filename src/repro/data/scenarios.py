@@ -1,0 +1,95 @@
+"""Serving-scenario registry: named workload shapes for the serve loop.
+
+A scenario fixes the two streams the serving pipeline is measured under
+(DESIGN.md §5): the *update* stream (how much of each tick's batch is
+insertions vs deletions, and whether churn arrives steadily or in
+bursts) and the *query* stream (which sources the open-loop query
+traffic draws). Everything else — arrival times, batch padding, seeds —
+is owned by the serve loop, so scenarios stay pure workload shape and
+two loops running the same scenario see bit-identical streams.
+
+Registry (`SCENARIOS` / `get_scenario`):
+
+  mixed         50/50 insert/delete churn, uniform query sources
+  insert-heavy  90/10 — the labelling mostly tightens; tilings retile
+                every tick (worst case for the plan cache)
+  delete-heavy  10/90 — validity-bit churn; tilings are reused across
+                ticks (best case for the plan cache)
+  bursty        full-size batch every `burst_period`-th tick, a trickle
+                otherwise — commit-latency spikes under a steady query
+                stream (the staleness stress test)
+  skewed        50/50 churn with Zipf(1.2) query sources — traffic
+                concentrates on the BA network's hubs
+
+`launch/serve.py --scenario <name>` drives these; `benchmarks/ticks.py`
+reports the serving trajectory under them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.graphs import generators as gen
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One workload shape: update mix per tick + query-source law."""
+    name: str
+    description: str
+    #: fraction of each tick's update batch that is insertions
+    ins_frac: float
+    #: > 0: only every burst_period-th tick gets the full batch; the
+    #: others get `quiet_frac` of it (rounded, min 2 updates)
+    burst_period: int = 0
+    quiet_frac: float = 0.1
+    #: > 0: Zipf exponent for query *sources* (targets stay uniform)
+    query_skew: float = 0.0
+
+    def update_counts(self, tick: int, batch_size: int) -> tuple[int, int]:
+        """(n_ins, n_del) for this tick's batch."""
+        size = batch_size
+        if self.burst_period and tick % self.burst_period:
+            size = max(2, int(round(batch_size * self.quiet_frac)))
+        n_ins = int(round(size * self.ins_frac))
+        return n_ins, size - n_ins
+
+    def max_inserts(self, ticks: int, batch_size: int) -> int:
+        """Upper bound on total insertions — sizes the graph capacity."""
+        return sum(self.update_counts(t, batch_size)[0]
+                   for t in range(ticks))
+
+    def sample_queries(self, rng: np.random.Generator, n: int,
+                       size: int) -> tuple[np.ndarray, np.ndarray]:
+        """One tick's query pairs (sources [size], targets [size])."""
+        if self.query_skew > 0:
+            src = gen.zipf_vertices(rng, n, size, self.query_skew)
+        else:
+            src = rng.integers(0, n, size).astype(np.int32)
+        dst = rng.integers(0, n, size).astype(np.int32)
+        return src, dst
+
+
+SCENARIOS: dict[str, Scenario] = {s.name: s for s in (
+    Scenario("mixed", "50/50 insert/delete churn, uniform queries",
+             ins_frac=0.5),
+    Scenario("insert-heavy", "90/10 churn: retile-every-tick worst case",
+             ins_frac=0.9),
+    Scenario("delete-heavy", "10/90 churn: tiling-reuse best case",
+             ins_frac=0.1),
+    Scenario("bursty", "full batch every 3rd tick, trickle otherwise",
+             ins_frac=0.5, burst_period=3),
+    Scenario("skewed", "50/50 churn, Zipf(1.2) hub-skewed query sources",
+             ins_frac=0.5, query_skew=1.2),
+)}
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scenario {name!r}; registry: "
+            f"{', '.join(sorted(SCENARIOS))}") from None

@@ -105,6 +105,24 @@ def random_batch_updates(edges: np.ndarray, n: int, n_ins: int, n_del: int,
     return out
 
 
+def zipf_vertices(rng: np.random.Generator, n: int, size: int,
+                  a: float = 1.2) -> np.ndarray:
+    """Bounded-Zipf(a) vertex ids over [0, n): P(id = k) ∝ (k + 1)^-a.
+
+    Rank maps to id directly: low ids are the oldest (highest-degree)
+    vertices in the BA generator above, so skewed query traffic
+    concentrates on the network's hubs — the hot-source serving scenario
+    (`data/scenarios.py`). The law is normalized over [0, n) rather than
+    sampled unbounded and clipped: clipping would pile the entire tail
+    mass (~20% at a=1.2, n=2000) onto vertex n-1, the *newest*
+    lowest-degree vertex — the opposite of a hub.
+    """
+    if a <= 1.0:
+        raise ValueError(f"zipf exponent must be > 1, got {a}")
+    w = np.arange(1, n + 1, dtype=np.float64) ** -a
+    return rng.choice(n, size=size, p=w / w.sum()).astype(np.int32)
+
+
 def _dedupe(edges: np.ndarray) -> np.ndarray:
     if edges.size == 0:
         return edges.reshape(0, 2)

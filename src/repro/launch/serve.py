@@ -2,35 +2,53 @@
 
     PYTHONPATH=src python -m repro.launch.serve --n 2000 --batches 5
 
-Loop per tick: ingest a batch of edge updates (insert+delete mix), run
-BatchHL (batch search + batch repair), answer a query batch, report
-latencies and labelling size. Optionally verifies every answer against a
-BFS oracle (--verify), and checkpoints the labelling for restart.
+Per tick the loop ingests one batch of edge updates (mix set by
+``--scenario``), maintains the labelling with BatchHL, and answers an
+*open-loop* query stream: ``--queries`` arrivals per tick at Poisson rate
+``--qps``, dispatched in microbatches of ``--microbatch``. Two serving
+modes (DESIGN.md §5):
+
+* **synchronous** (default): one monolithic `batchhl_update` dispatch per
+  tick. Every query that arrives while it runs queues behind it on the
+  device, so tail latency is bounded below by update time — the failure
+  mode BatchHL exists to avoid.
+
+* **``--pipeline``**: the update runs as *bounded chunks*
+  (`core/snapshot.pipelined_update`, ``--chunk-sweeps`` relaxation waves
+  per dispatch) against snapshot N+1 while query microbatches keep
+  dispatching against the immutable committed snapshot N; the commit is
+  an atomic version swap. A query waits for at most one chunk instead of
+  the whole update, answers stay exact at the version they were served
+  (staleness ≤ 1 version, reported), and the final labelling is
+  bit-identical to the synchronous loop's.
+
+The loop reports p50/p95/p99 query latency and answer staleness per run;
+``--verify`` checks every sampled answer against a BFS oracle *at the
+version it was answered* — stale answers are exact too.
 
 Sweep backend: ``--backend {auto,jnp,pallas}`` selects the relaxation
-engine backend (DESIGN.md §3). The loop owns one `RelaxEngine`, so the
-Pallas destination-block tiling is prepared once per tick — from the
-*post-update* snapshot, so it covers the tick's inserted edges — and
-reused outright across deletion-only ticks, then amortized over every
-wave of batch search, batch repair, and the query-side BiBFS in that
-tick.
+engine backend (DESIGN.md §3). The loop owns one `RelaxEngine`, whose
+fingerprint-keyed plan cache keeps both live snapshots' tilings (the
+committed one serving queries and the post-update one under repair).
 
 Mesh sharding: ``--mesh host`` runs construction, updates, and queries
 through `core/shard.py` on a `make_host_mesh` over the local devices;
-``--shards M`` sets the model-axis size (landmark-plane parallelism), the
-remaining devices form the data axis (query parallelism). Force a
-multi-device CPU host with
-``XLA_FLAGS=--xla_force_host_platform_device_count=8``. See DESIGN.md §4.
+``--shards M`` sets the model-axis size. Landmark counts are validated
+against *both* plane groupings (data·model for maintenance, model for
+queries) with an error naming the failing grouping. Backend × mesh
+compose as before; in pipeline mode the maintenance chunks use the
+data×model plane grouping while interleaved query microbatches regroup
+over model — overlapped on the device queue instead of serialized.
 
-Backend × mesh compose: under a mesh the engine's plan rides into the
-`shard_map` bodies, so ``--backend pallas --mesh host`` launches the
-tiled kernel on every device's local planes (``--tile-shards`` shapes the
-tiling's vertex-shard grid axis) — one configuration, no silent
-downgrade, bit-identical to the unsharded path.
+Checkpointing: ``--ckpt-dir`` persists the *full* serve state each tick
+(graph topology + labelling + version + the host edge list);
+``--resume`` restarts from the newest checkpoint and continues the
+exact stream (seeds are tick-indexed).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -44,10 +62,450 @@ from repro.core.batch import batchhl_update
 from repro.core.engine import RelaxEngine
 from repro.core.query import batched_query
 from repro.core.shard import (shard_batched_query, shard_batchhl_update,
-                              shard_build_labelling)
+                              shard_build_labelling,
+                              validate_landmark_sharding)
+from repro.core.snapshot import (Snapshot, SnapshotStore, pipelined_update,
+                                 restore_extra, restore_snapshot,
+                                 save_snapshot)
 from repro.core import ref
 from repro.checkpoint import manager as ckpt
+from repro.data.scenarios import SCENARIOS, get_scenario
 from repro.launch.mesh import make_host_mesh
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    """Everything the serving loop needs; `main()` maps CLI flags here."""
+    n: int = 2000
+    deg: int = 4
+    landmarks: int = 16
+    batches: int = 5
+    batch_size: int = 100
+    scenario: str = "mixed"
+    # open-loop query stream
+    queries: int = 256          # arrivals per tick
+    qps: float = 2000.0         # Poisson arrival rate (queries/second)
+    microbatch: int = 32        # max queries per dispatched microbatch
+    # serving mode
+    pipeline: bool = False
+    chunk_sweeps: int = 1       # relaxation waves per pipelined dispatch
+    # engine / mesh
+    backend: str = "auto"
+    block_v: int = 512
+    tile_shards: int = 1
+    use_minplus_kernel: bool = False
+    mesh: str = "none"
+    shards: int = 1
+    # ops
+    verify: bool = False
+    ckpt_dir: str | None = None
+    resume: bool = False
+    seed: int = 7
+    quiet: bool = False
+    #: retain every committed snapshot in the report (tests/verification:
+    #: lets a caller recompute any answer synchronously at its version)
+    keep_history: bool = False
+
+
+@dataclasses.dataclass
+class MicrobatchRecord:
+    """One answered microbatch: which queries, at which version."""
+    tick: int
+    version: int                # snapshot version the answers are exact at
+    staleness: int              # versions behind the in-flight head
+    qs: np.ndarray              # int32 [m] (unpadded)
+    qt: np.ndarray
+    answers: np.ndarray         # int32 [m]
+    latencies: np.ndarray       # float64 [m] seconds, arrival → answered
+
+
+@dataclasses.dataclass
+class TickStats:
+    tick: int
+    version: int                # committed version after this tick
+    update_s: float             # dispatch start → commit
+    affected: int
+    label_size: int
+    queries: int
+    verify_mismatches: int | None = None
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Everything a caller (benchmarks, tests) needs from one run."""
+    config: ServeConfig
+    ticks: list[TickStats]
+    microbatches: list[MicrobatchRecord]
+    final: Snapshot
+    backend: str
+    #: version -> committed Snapshot, populated when keep_history is set
+    history: dict[int, Snapshot] = dataclasses.field(default_factory=dict)
+
+    def latencies(self) -> np.ndarray:
+        if not self.microbatches:
+            return np.zeros((0,))
+        return np.concatenate([m.latencies for m in self.microbatches])
+
+    def latency_percentiles(self) -> dict[str, float]:
+        lat = self.latencies()
+        if lat.size == 0:
+            return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+        return {p: float(np.percentile(lat, q))
+                for p, q in (("p50", 50), ("p95", 95), ("p99", 99))}
+
+    def staleness(self) -> np.ndarray:
+        return np.concatenate(
+            [np.full(m.latencies.shape, m.staleness, np.int32)
+             for m in self.microbatches]) if self.microbatches else \
+            np.zeros((0,), np.int32)
+
+    def mean_staleness(self) -> float:
+        s = self.staleness()
+        return float(s.mean()) if s.size else 0.0
+
+
+class ServeLoop:
+    """The serving pipeline: one instance owns the engine, the snapshot
+    store, the scenario streams, and the open-loop query clock."""
+
+    def __init__(self, cfg: ServeConfig):
+        self.cfg = cfg
+        self.scenario = get_scenario(cfg.scenario)
+        self.mesh = None
+        if cfg.mesh == "host":
+            self.mesh = make_host_mesh(model=cfg.shards)
+            validate_landmark_sharding(self.mesh, cfg.landmarks)
+        self.engine = RelaxEngine(backend=cfg.backend, block_v=cfg.block_v,
+                                  shards=cfg.tile_shards)
+        self.store: SnapshotStore | None = None
+        self.report: ServeReport | None = None
+        # host-side current edge set, maintained incrementally: a
+        # swap-remove list + position map keeps each tick O(batch); the
+        # *order* is serve state (deletion sampling depends on it), so it
+        # rides along in every checkpoint.
+        self._edge_list: list[tuple[int, int]] = []
+        self._edge_pos: dict[tuple[int, int], int] = {}
+        self._oracle_adj: dict[int, dict] = {}  # version -> adjacency
+
+    def _log(self, msg: str) -> None:
+        if not self.cfg.quiet:
+            print(msg, flush=True)
+
+    # -- setup --------------------------------------------------------------
+
+    def _fresh_snapshot(self) -> Snapshot:
+        cfg = self.cfg
+        edges = gen.barabasi_albert(cfg.n, cfg.deg, seed=0)
+        cap = (edges.shape[0]
+               + self.scenario.max_inserts(cfg.batches, cfg.batch_size) + 64)
+        g = from_edges(cfg.n, edges, cap)
+        landmarks = select_landmarks_by_degree(g, cfg.landmarks)
+        plan = self.engine.prepare(g)
+        t0 = time.time()
+        if self.mesh is not None:
+            lab = shard_build_labelling(self.mesh, g, landmarks, plan=plan)
+        else:
+            lab = build_labelling(g, landmarks, plan=plan)
+        jax.block_until_ready(lab.dist)
+        self._edge_list = [(int(min(a, b)), int(max(a, b)))
+                           for a, b in edges]
+        self._edge_pos = {e: i for i, e in enumerate(self._edge_list)}
+        self._log(f"constructed labelling: {cfg.n} vertices, "
+                  f"{edges.shape[0]} edges, R={cfg.landmarks}, "
+                  f"size={int(lab.label_size())}, {time.time() - t0:.2f}s "
+                  f"[backend={self.engine.backend}, {self._mesh_desc()}]")
+        return Snapshot(0, g, lab, plan)
+
+    def _resumed_snapshot(self) -> Snapshot:
+        cfg = self.cfg
+        snap = restore_snapshot(cfg.ckpt_dir)
+        if snap.graph.n != cfg.n:
+            raise ValueError(
+                f"checkpoint has n={snap.graph.n}, config has n={cfg.n}")
+        edge_arr = restore_extra(cfg.ckpt_dir, ("edge_list",))["edge_list"]
+        self._edge_list = [(int(u), int(v)) for u, v in edge_arr]
+        self._edge_pos = {e: i for i, e in enumerate(self._edge_list)}
+        snap = dataclasses.replace(snap, plan=self.engine.prepare(snap.graph))
+        self._log(f"resumed at version {snap.version}: {cfg.n} vertices, "
+                  f"{len(self._edge_list)} edges, "
+                  f"size={int(snap.labelling.label_size())} "
+                  f"[backend={self.engine.backend}, {self._mesh_desc()}]")
+        return snap
+
+    def _mesh_desc(self) -> str:
+        if self.mesh is None:
+            return "unsharded"
+        return (f"mesh data={self.mesh.shape['data']} "
+                f"model={self.mesh.shape['model']}")
+
+    # -- query stream -------------------------------------------------------
+
+    def _tick_queries(self, tick: int) -> tuple[np.ndarray, np.ndarray,
+                                                np.ndarray]:
+        """This tick's open-loop stream: (offsets [Q] s, qs [Q], qt [Q]).
+
+        Content and arrival offsets are pure functions of (seed, tick), so
+        sync and pipelined runs — and a resumed run — see the identical
+        stream; only *when* each query is answered differs.
+        """
+        cfg = self.cfg
+        arr_rng = np.random.default_rng((cfg.seed, 101, tick))
+        offsets = np.cumsum(
+            arr_rng.exponential(1.0 / cfg.qps, size=cfg.queries))
+        q_rng = np.random.default_rng((cfg.seed, 202, tick))
+        qs, qt = self.scenario.sample_queries(q_rng, cfg.n, cfg.queries)
+        return offsets, qs, qt
+
+    def _answer(self, snap: Snapshot, qs: jax.Array,
+                qt: jax.Array) -> jax.Array:
+        if self.mesh is None:
+            d = batched_query(snap.graph, snap.labelling, qs, qt,
+                              use_kernel=self.cfg.use_minplus_kernel,
+                              plan=snap.plan)
+        else:
+            d = shard_batched_query(self.mesh, snap.graph, snap.labelling,
+                                    qs, qt,
+                                    use_kernel=self.cfg.use_minplus_kernel,
+                                    plan=snap.plan)
+        jax.block_until_ready(d)
+        return d
+
+    def _drain_arrived(self, tick: int, tick_t0: float, offsets: np.ndarray,
+                       qs: np.ndarray, qt: np.ndarray, served: int,
+                       head_version: int,
+                       out: list[MicrobatchRecord]) -> int:
+        """Answer every query that has arrived by now, in microbatches of
+        at most cfg.microbatch, against the committed snapshot. Returns
+        the new served count."""
+        cfg = self.cfg
+        q = offsets.shape[0]
+        while served < q:
+            arrived = int(np.searchsorted(offsets, time.time() - tick_t0,
+                                          side="right"))
+            if arrived <= served:
+                break
+            take = min(cfg.microbatch, arrived - served)
+            idx = np.arange(served, served + take)
+            # Pad to the fixed microbatch shape (one compile) by repeating
+            # the first query; the pad lanes are dropped from the record.
+            pad_idx = np.concatenate(
+                [idx, np.full(cfg.microbatch - take, idx[0])])
+            snap = self.store.committed
+            d = self._answer(snap, jnp.asarray(qs[pad_idx]),
+                             jnp.asarray(qt[pad_idx]))
+            t_done = time.time()
+            out.append(MicrobatchRecord(
+                tick=tick, version=snap.version,
+                staleness=head_version - snap.version,
+                qs=qs[idx].copy(), qt=qt[idx].copy(),
+                answers=np.asarray(d)[:take].copy(),
+                latencies=t_done - (tick_t0 + offsets[idx])))
+            served += take
+        return served
+
+    def _drain_rest(self, tick: int, tick_t0: float, offsets: np.ndarray,
+                    qs: np.ndarray, qt: np.ndarray, served: int,
+                    head_version: int, out: list[MicrobatchRecord]) -> int:
+        """Serve the tick's remaining arrivals, sleeping the open-loop
+        clock forward between stragglers."""
+        q = offsets.shape[0]
+        while served < q:
+            wait = tick_t0 + offsets[served] - time.time()
+            if wait > 0:
+                time.sleep(wait)
+            served = self._drain_arrived(tick, tick_t0, offsets, qs, qt,
+                                         served, head_version, out)
+        return served
+
+    # -- update modes -------------------------------------------------------
+
+    def _update_sync(self, snap: Snapshot, batch, plan, g_next) -> Snapshot:
+        """The monolithic update: one dispatch, queries queue behind it."""
+        if self.mesh is None:
+            g2, lab2, aff = batchhl_update(snap.graph, batch, snap.labelling,
+                                           improved=True, plan=plan,
+                                           g_new=g_next)
+        else:
+            g2, lab2, aff = shard_batchhl_update(self.mesh, snap.graph,
+                                                 batch, snap.labelling,
+                                                 improved=True, plan=plan,
+                                                 g_new=g_next)
+        jax.block_until_ready(lab2.dist)
+        self._last_aff = aff
+        return Snapshot(snap.version + 1, g2, lab2, plan)
+
+    def _update_pipelined(self, snap: Snapshot, batch, plan, g_next,
+                          tick: int, tick_t0: float, offsets, qs, qt,
+                          served_box: list, out) -> Snapshot:
+        """The chunked update: serve arrived microbatches at every yield."""
+        cfg = self.cfg
+        upd = pipelined_update(snap, batch, plan=plan, g_new=g_next,
+                               mesh=self.mesh, improved=True,
+                               chunk_sweeps=cfg.chunk_sweeps)
+        head = snap.version + 1
+        while True:
+            try:
+                next(upd)
+            except StopIteration as stop:
+                nxt, aff = stop.value
+                break
+            served_box[0] = self._drain_arrived(
+                tick, tick_t0, offsets, qs, qt, served_box[0], head, out)
+        jax.block_until_ready(nxt.labelling.dist)
+        self._last_aff = aff
+        return nxt
+
+    # -- verification -------------------------------------------------------
+
+    def _oracle(self, version: int, graph) -> dict:
+        if version not in self._oracle_adj:
+            self._oracle_adj[version] = to_numpy_adj(graph)
+            # A tick only ever verifies against its own two versions;
+            # evict older adjacencies so --verify stays O(E) host memory
+            # on long runs instead of O(ticks × E).
+            for old in [v for v in self._oracle_adj if v < version - 1]:
+                del self._oracle_adj[old]
+        return self._oracle_adj[version]
+
+    def _verify_tick(self, tick: int, out: list[MicrobatchRecord],
+                     snapshots: dict[int, Snapshot]) -> int:
+        """Check the first min(64, Q) answered queries of the tick against
+        the BFS oracle *at the version each was answered* — the staleness
+        contract says stale answers are exact at their own version."""
+        n_check = min(64, self.cfg.queries)
+        wrong = checked = 0
+        for m in out:
+            if m.tick != tick or checked >= n_check:
+                continue
+            adj = self._oracle(m.version, snapshots[m.version].graph)
+            for i in range(m.qs.shape[0]):
+                if checked >= n_check:
+                    break
+                got = float(m.answers[i])
+                want = ref.pair_distance(adj, self.cfg.n, int(m.qs[i]),
+                                         int(m.qt[i]))
+                want = got if (want == ref.INF and got >= 1e8) else want
+                if int(m.qs[i]) == int(m.qt[i]):
+                    want = 0
+                wrong += int(got != want)
+                checked += 1
+        self._log(f"  verify: {wrong}/{n_check} mismatches")
+        return wrong
+
+    # -- the loop -----------------------------------------------------------
+
+    def run(self) -> ServeReport:
+        cfg = self.cfg
+        resumable = (cfg.resume and cfg.ckpt_dir
+                     and ckpt.latest_step(cfg.ckpt_dir) is not None)
+        snap0 = self._resumed_snapshot() if resumable \
+            else self._fresh_snapshot()
+        self.store = SnapshotStore(snap0)
+        ticks: list[TickStats] = []
+        out: list[MicrobatchRecord] = []
+        history: dict[int, Snapshot] = {}
+        if cfg.keep_history:
+            history[snap0.version] = snap0
+        self._last_aff = None
+
+        for tick in range(snap0.version, cfg.batches):
+            snap = self.store.committed
+            n_ins, n_del = self.scenario.update_counts(tick, cfg.batch_size)
+            cur_edges = np.asarray(self._edge_list, np.int32)
+            ups = gen.random_batch_updates(
+                cur_edges, cfg.n, n_ins=n_ins, n_del=n_del,
+                seed=100 + tick, existing=self._edge_pos)
+            batch = make_batch(ups, pad_to=cfg.batch_size)
+            offsets, qs, qt = self._tick_queries(tick)
+            has_ins = any(not is_del for (_, _, is_del) in ups)
+
+            served_box = [0]
+            tick_t0 = time.time()
+            # One tiling per tick, prepared from the post-update snapshot
+            # (the engine contract); the keyed plan cache keeps the
+            # committed snapshot's tiling alive alongside it.
+            g_next = apply_batch(snap.graph, batch)
+            plan = self.engine.prepare(g_next, topology_changed=has_ins)
+            if cfg.pipeline:
+                nxt = self._update_pipelined(snap, batch, plan, g_next,
+                                             tick, tick_t0, offsets, qs, qt,
+                                             served_box, out)
+            else:
+                nxt = self._update_sync(snap, batch, plan, g_next)
+            t_upd = time.time() - tick_t0
+            self.store.commit(nxt)
+            if cfg.keep_history:
+                history[nxt.version] = nxt
+            served_box[0] = self._drain_rest(
+                tick, tick_t0, offsets, qs, qt, served_box[0],
+                nxt.version, out)
+
+            # Fold the tick's updates into the incremental edge set.
+            for u, v, is_del in ups:
+                k = (min(u, v), max(u, v))
+                if is_del:
+                    i = self._edge_pos.pop(k, None)
+                    if i is not None:
+                        last = self._edge_list.pop()
+                        if i < len(self._edge_list):
+                            self._edge_list[i] = last
+                            self._edge_pos[last] = i
+                elif k not in self._edge_pos:
+                    self._edge_pos[k] = len(self._edge_list)
+                    self._edge_list.append(k)
+
+            tick_mbs = [m for m in out if m.tick == tick]
+            lat = (np.concatenate([m.latencies for m in tick_mbs])
+                   if tick_mbs else np.zeros((1,)))
+            stale = sum(int(m.staleness > 0) * m.qs.shape[0]
+                        for m in tick_mbs)
+            stats = TickStats(
+                tick=tick, version=nxt.version, update_s=t_upd,
+                affected=int(jnp.sum(self._last_aff)),
+                label_size=int(nxt.labelling.label_size()),
+                queries=int(served_box[0]))
+            self._log(
+                f"tick {tick}: update {t_upd * 1e3:.1f}ms "
+                f"({stats.affected} affected, v{nxt.version}) | "
+                f"{stats.queries} queries p50 "
+                f"{np.percentile(lat, 50) * 1e3:.1f}ms p99 "
+                f"{np.percentile(lat, 99) * 1e3:.1f}ms "
+                f"({stale} stale) | label size {stats.label_size}")
+
+            if cfg.verify:
+                snapshots = {snap.version: snap, nxt.version: nxt}
+                stats.verify_mismatches = self._verify_tick(
+                    tick, tick_mbs, snapshots)
+            ticks.append(stats)
+
+            if cfg.ckpt_dir:
+                save_snapshot(
+                    cfg.ckpt_dir, nxt,
+                    extra={"edge_list": np.asarray(self._edge_list,
+                                                   np.int32)})
+
+        self.report = ServeReport(config=cfg, ticks=ticks, microbatches=out,
+                                  final=self.store.committed,
+                                  backend=self.engine.backend,
+                                  history=history)
+        pct = self.report.latency_percentiles()
+        mode = "pipeline" if cfg.pipeline else "sync"
+        engine = self.engine
+        engine_desc = (
+            "" if engine.backend == "jnp" else
+            f"retiles={engine.retile_count}/{cfg.batches + 1} prepares, "
+            f"{engine.plan_cache_hits} plan-cache hits, "
+            f"{engine.stale_cache_retiles} stale-cache catches, "
+            f"tile-shards={engine.shards}, ")
+        self._log(
+            f"latency: p50 {pct['p50'] * 1e3:.1f}ms "
+            f"p95 {pct['p95'] * 1e3:.1f}ms p99 {pct['p99'] * 1e3:.1f}ms | "
+            f"staleness mean {self.report.mean_staleness():.2f} versions "
+            f"behind head [{mode}, chunk-sweeps={cfg.chunk_sweeps}, "
+            f"scenario={cfg.scenario}]")
+        self._log(f"serve loop done [backend={engine.backend}, "
+                  f"{engine_desc}{self._mesh_desc()}, mode={mode}]")
+        return self.report
 
 
 def main() -> None:
@@ -57,7 +515,23 @@ def main() -> None:
     ap.add_argument("--landmarks", type=int, default=16)
     ap.add_argument("--batches", type=int, default=5)
     ap.add_argument("--batch-size", type=int, default=100)
-    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--scenario", default="mixed",
+                    choices=tuple(sorted(SCENARIOS)),
+                    help="workload shape: update mix + query-source law "
+                         "(data/scenarios.py)")
+    ap.add_argument("--queries", type=int, default=256,
+                    help="open-loop query arrivals per tick")
+    ap.add_argument("--qps", type=float, default=2000.0,
+                    help="Poisson arrival rate of the query stream")
+    ap.add_argument("--microbatch", type=int, default=32,
+                    help="max queries per dispatched microbatch")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="serve queries against the committed snapshot "
+                         "while the update runs as bounded chunks "
+                         "(DESIGN.md §5); default is the synchronous loop")
+    ap.add_argument("--chunk-sweeps", type=int, default=1,
+                    help="relaxation waves per pipelined update dispatch "
+                         "(the head-of-line blocking bound)")
     ap.add_argument("--backend", default="auto",
                     choices=("auto", "jnp", "pallas"),
                     help="relaxation-engine backend for every sweep "
@@ -78,132 +552,39 @@ def main() -> None:
                     help="model-axis size of the host mesh: landmark planes "
                          "shard over it, the other devices form the data "
                          "(query) axis; must divide the device count")
-    ap.add_argument("--verify", action="store_true")
-    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--verify", action="store_true",
+                    help="check sampled answers against a BFS oracle at "
+                         "the version each was answered")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint the full serve state each tick")
+    ap.add_argument("--resume", action="store_true",
+                    help="restart from the newest checkpoint in --ckpt-dir")
+    ap.add_argument("--seed", type=int, default=7)
     args = ap.parse_args()
 
-    mesh = None
-    if args.mesh == "host":
-        mesh = make_host_mesh(model=args.shards)
-        n_dev = len(jax.devices())
-        if args.landmarks % n_dev:
-            ap.error(f"--landmarks {args.landmarks} must be divisible by "
-                     f"the {n_dev} mesh devices (plane sharding)")
-
-    edges = gen.barabasi_albert(args.n, args.deg, seed=0)
-    cap = edges.shape[0] + args.batches * args.batch_size + 64
-    g = from_edges(args.n, edges, cap)
-    landmarks = select_landmarks_by_degree(g, args.landmarks)
-
-    engine = RelaxEngine(backend=args.backend, block_v=args.block_v,
-                         shards=args.tile_shards)
-    # One plan serves sharded and unsharded call-sites alike: under a mesh
-    # it rides into the shard_map bodies as a replicated argument.
-    plan = engine.prepare(g)
-
-    t0 = time.time()
-    if mesh is not None:
-        lab = shard_build_labelling(mesh, g, landmarks, plan=plan)
-    else:
-        lab = build_labelling(g, landmarks, plan=plan)
-    jax.block_until_ready(lab.dist)
-    mesh_desc = ("unsharded" if mesh is None else
-                 f"mesh data={mesh.shape['data']} model={mesh.shape['model']}")
-    print(f"constructed labelling: {args.n} vertices, "
-          f"{edges.shape[0]} edges, R={args.landmarks}, "
-          f"size={int(lab.label_size())}, {time.time() - t0:.2f}s "
-          f"[backend={engine.backend}, {mesh_desc}]")
-
-    # Host-side current edge set, maintained incrementally: a swap-remove
-    # list + position map keeps each tick O(batch) instead of rebuilding
-    # (and sorting) the full O(E log E) adjacency set every tick.
-    edge_list: list[tuple[int, int]] = [
-        (int(min(a, b)), int(max(a, b))) for a, b in edges]
-    edge_pos = {e: i for i, e in enumerate(edge_list)}
-
-    rng = np.random.default_rng(7)
-    for tick in range(args.batches):
-        cur_edges = np.asarray(edge_list, np.int32)
-        ups = gen.random_batch_updates(
-            cur_edges, args.n, n_ins=args.batch_size // 2,
-            n_del=args.batch_size // 2, seed=100 + tick, existing=edge_pos)
-        batch = make_batch(ups, pad_to=args.batch_size)
-        t0 = time.time()
-        # One tiling per tick, prepared from the post-update snapshot so it
-        # covers inserted edges (the documented engine contract — both
-        # backends); deletion-only ticks reuse the cached tiles. Counted
-        # inside the update time: it is real per-tick work on the pallas
-        # backend.
-        has_ins = any(not is_del for (_, _, is_del) in ups)
-        g_next = apply_batch(g, batch)
-        plan = engine.prepare(g_next, topology_changed=has_ins)
-        if mesh is None:
-            g, lab, aff = batchhl_update(g, batch, lab, improved=True,
-                                         plan=plan, g_new=g_next)
-        else:
-            g, lab, aff = shard_batchhl_update(mesh, g, batch, lab,
-                                               improved=True, plan=plan,
-                                               g_new=g_next)
-        jax.block_until_ready(lab.dist)
-        t_upd = time.time() - t0
-
-        qs = jnp.asarray(rng.integers(0, args.n, args.queries), jnp.int32)
-        qt = jnp.asarray(rng.integers(0, args.n, args.queries), jnp.int32)
-        t0 = time.time()
-        if mesh is None:
-            dist = batched_query(g, lab, qs, qt,
-                                 use_kernel=args.use_minplus_kernel,
-                                 plan=plan)
-        else:
-            dist = shard_batched_query(mesh, g, lab, qs, qt,
-                                       use_kernel=args.use_minplus_kernel,
-                                       plan=plan)
-        jax.block_until_ready(dist)
-        t_q = time.time() - t0
-
-        print(f"tick {tick}: update {t_upd * 1e3:.1f}ms "
-              f"({int(jnp.sum(aff))} affected) | "
-              f"{args.queries} queries {t_q * 1e3:.1f}ms "
-              f"({t_q / args.queries * 1e6:.0f}us/q) | "
-              f"label size {int(lab.label_size())}")
-
-        # Fold the tick's updates into the incremental edge set.
-        for u, v, is_del in ups:
-            k = (min(u, v), max(u, v))
-            if is_del:
-                i = edge_pos.pop(k, None)
-                if i is not None:
-                    last = edge_list.pop()
-                    if i < len(edge_list):
-                        edge_list[i] = last
-                        edge_pos[last] = i
-            elif k not in edge_pos:
-                edge_pos[k] = len(edge_list)
-                edge_list.append(k)
-
-        if args.verify:
-            adj = to_numpy_adj(g)
-            wrong = 0
-            n_check = min(64, args.queries)
-            for i in range(n_check):
-                o = ref.pair_distance(adj, args.n, int(qs[i]), int(qt[i]))
-                got = float(dist[i])
-                o = got if (o == ref.INF and got >= 1e8) else o
-                if int(qs[i]) == int(qt[i]):
-                    o = 0
-                wrong += int(got != o)
-            print(f"  verify: {wrong}/{n_check} mismatches")
-
-        if args.ckpt_dir:
-            ckpt.save(args.ckpt_dir, tick + 1,
-                      {"dist": lab.dist, "hub": lab.hub,
-                       "highway": lab.highway, "landmarks": lab.landmarks})
-    engine_desc = ("" if engine.backend == "jnp" else
-                   f"retiles={engine.retile_count}/{args.batches + 1} "
-                   f"prepares, {engine.stale_cache_retiles} stale-cache "
-                   f"catches, tile-shards={engine.shards}, ")
-    print(f"serve loop done [backend={engine.backend}, "
-          f"{engine_desc}{mesh_desc}]")
+    cfg = ServeConfig(
+        n=args.n, deg=args.deg, landmarks=args.landmarks,
+        batches=args.batches, batch_size=args.batch_size,
+        scenario=args.scenario, queries=args.queries, qps=args.qps,
+        microbatch=args.microbatch, pipeline=args.pipeline,
+        chunk_sweeps=args.chunk_sweeps, backend=args.backend,
+        block_v=args.block_v, tile_shards=args.tile_shards,
+        use_minplus_kernel=args.use_minplus_kernel, mesh=args.mesh,
+        shards=args.shards, verify=args.verify, ckpt_dir=args.ckpt_dir,
+        resume=args.resume, seed=args.seed)
+    try:
+        # Config validation (mesh shape, landmark groupings, scenario,
+        # backend) happens at construction; runtime errors inside run()
+        # propagate with their tracebacks rather than masquerading as
+        # CLI misuse.
+        loop = ServeLoop(cfg)
+    except ValueError as e:
+        ap.error(str(e))
+    report = loop.run()
+    if cfg.verify:
+        bad = sum(t.verify_mismatches or 0 for t in report.ticks)
+        if bad:
+            raise SystemExit(f"verify FAILED: {bad} mismatched answers")
 
 
 if __name__ == "__main__":
