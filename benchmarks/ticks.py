@@ -23,8 +23,15 @@ where mode ∈ {sync, pipeline}. The pipeline's whole point shows up here:
 sync q_p99 tracks the update latency (queries queue behind the monolithic
 dispatch), pipeline q_p99 tracks one chunk + one microbatch.
 
+PR 5 adds mode `growth` — the pure-insertion `growth` scenario run
+pipelined with grow-in-place enabled (`--capacity` below the stream's
+final size, DESIGN.md §6), its capacity sized so the geometric growth
+lands on a steady-state tick: the q percentiles price serving *through*
+the growth retrace/retile, and the row's `derived` field records the
+growth count and capacity trajectory.
+
 Rows follow the ``name,us_per_call,derived`` contract of benchmarks/run.py;
-``python -m benchmarks.run --preset quick --json BENCH_pr4.json`` persists
+``python -m benchmarks.run --preset quick --json BENCH_pr5.json`` persists
 them in the bench-trajectory JSON format that `benchmarks/compare.py`
 gates against the committed `benchmarks/baseline.json` (>25% regressions
 on any gated tick latency *or* serve percentile fail the CI `bench` job).
@@ -133,16 +140,23 @@ def _tick_loop(name: str, g0, landmarks, edges, backend: str, mesh,
 def _serve_loop(name: str, n: int, deg: int, backend: str, mode: str,
                 ticks: int, batch_size: int, queries: int, landmarks: int,
                 block_v: int, tile_shards: int, qps: float,
-                microbatch: int) -> list[str]:
+                microbatch: int, capacity: int | None = None) -> list[str]:
     """One ServeLoop run → the serve/ percentile + staleness rows.
 
     Percentiles are computed over the steady-state ticks only (the same
     warmup convention as `_tick_loop`: tick 0 pays compilation, tick 1
     can pay a reshard retrace), per query, arrival → answered.
+
+    mode "growth" runs the pure-insertion `growth` scenario pipelined
+    with grow-in-place enabled from a deliberately small `capacity`, so
+    the row tracks the cost of serving *through* a growth event (shape
+    retrace + retile on the growth tick) rather than steady state only.
     """
     cfg = ServeConfig(n=n, deg=deg, landmarks=landmarks, batches=ticks,
                       batch_size=batch_size, queries=queries, qps=qps,
-                      microbatch=microbatch, pipeline=(mode == "pipeline"),
+                      microbatch=microbatch, pipeline=(mode != "sync"),
+                      scenario="growth" if mode == "growth" else "mixed",
+                      capacity=capacity, grow=(mode == "growth"),
                       backend=backend, block_v=block_v,
                       tile_shards=tile_shards, quiet=True)
     rep = ServeLoop(cfg).run()
@@ -154,6 +168,9 @@ def _serve_loop(name: str, n: int, deg: int, backend: str, mode: str,
     upd = min(t.update_s for t in rep.ticks if t.tick >= warm)
     info = (f"ticks={ticks};Q={queries};qps={qps:g};mb={microbatch};"
             f"chunk={cfg.chunk_sweeps}")
+    if mode == "growth":
+        info += (f";growths={len(rep.growth)};cap={capacity}->"
+                 f"{rep.final.graph.capacity}")
     rows = [emit(f"{name}/q_p50", float(np.percentile(lat, 50)), info),
             emit(f"{name}/q_p95", float(np.percentile(lat, 95)), info),
             emit(f"{name}/q_p99", float(np.percentile(lat, 99)), info),
@@ -185,17 +202,27 @@ def run(datasets=("ba_2k",), backends=("jnp", "pallas"),
                                    batch_size, queries, block_v, tile_shards)
     # The serving-pipeline trajectory: unsharded sync vs pipeline per
     # backend (the mesh × pipeline composition is smoke-tested by the CI
-    # `mesh` job; benching it here would double the preset's runtime).
+    # `mesh` job; benching it here would double the preset's runtime),
+    # plus the grow-in-place trajectory: the `growth` scenario started
+    # at a capacity that overflows on a *steady-state* tick, so the row
+    # tracks query latency through the growth retrace/retile
+    # (DESIGN.md §6) instead of only warm steady ticks.
     for ds in datasets:
         if ds not in SERVE_DATASETS:
             continue
         n, deg = BA_PARAMS[ds]
+        e0 = DATASETS[ds]().shape[0]
         for backend in backends:
             for mode in serve_modes:
                 rows += _serve_loop(f"serve/{ds}/{backend}/{mode}", n, deg,
                                     backend, mode, ticks, batch_size,
                                     queries, landmarks, block_v,
                                     tile_shards, qps, microbatch)
+            rows += _serve_loop(f"serve/{ds}/{backend}/growth", n, deg,
+                                backend, "growth", ticks, batch_size,
+                                queries, landmarks, block_v, tile_shards,
+                                qps, microbatch,
+                                capacity=e0 + 7 * batch_size // 2)
     return rows
 
 

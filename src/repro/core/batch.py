@@ -39,6 +39,22 @@ from repro.core.labelling import (
 _MAX_WAVES_CAP = 1 << 20  # safety valve; loops exit on fixpoint far earlier
 
 
+def check_labelling_width(g: Graph, dist: jax.Array) -> None:
+    """Trace-time guard: the labelling planes must span exactly g.n.
+
+    Grow-in-place (DESIGN.md §6) resizes the graph and the labelling
+    together at a version boundary; a caller that grows one without the
+    other would otherwise surface as an opaque gather/broadcast shape
+    error from deep inside the jitted fixpoints. Shapes are static, so
+    this costs nothing at runtime.
+    """
+    if dist.shape[1] != g.n:
+        raise ValueError(
+            f"labelling planes span {dist.shape[1]} vertices but the graph "
+            f"has n={g.n}; grow them together (core/growth.ensure_capacity, "
+            f"or coo.grow + labelling.grow_labelling) before updating")
+
+
 def _per_plane_hub_mask(labelling: HighwayLabelling, n: int) -> jax.Array:
     """[R, V] hub mask over the full plane set of a labelling."""
     return per_plane_hub_mask(labelling.landmarks, labelling.landmarks, n)
@@ -280,6 +296,7 @@ def batchhl_update(g_old: Graph, batch: BatchUpdate,
     pass it as `g_new` to skip the recompute; it must equal
     apply_batch(g_old, batch).
     """
+    check_labelling_width(g_old, labelling.dist)
     if g_new is None:
         g_new = apply_batch(g_old, batch)
     search = batch_search_improved if improved else batch_search_basic

@@ -32,7 +32,7 @@ from repro.core.labelling import (
     key4_from_key2, key4_extend, key4_beta,
 )
 from repro.core.batch import (_per_plane_hub_mask, _fixpoint, batch_repair)
-from repro.graphs.segment import masked_segment_min
+from repro.core.engine import RelaxPlan, relax_sweep
 from repro.core.construct import build_labelling
 
 
@@ -96,14 +96,23 @@ class DirectedLabelling:
     bwd: HighwayLabelling   # L_b, H_b (distances v → r)
 
 
-def build_directed_labelling(g: DirectedGraph,
-                             landmarks: jax.Array) -> DirectedLabelling:
-    return DirectedLabelling(build_labelling(g.fwd(), landmarks),
-                             build_labelling(g.rev(), landmarks))
+def build_directed_labelling(g: DirectedGraph, landmarks: jax.Array,
+                             plan_fwd: RelaxPlan | None = None,
+                             plan_bwd: RelaxPlan | None = None
+                             ) -> DirectedLabelling:
+    """Both planes' labellings. The two arc orientations are two distinct
+    topologies to the relaxation engine, so each takes its own plan:
+    `plan_fwd` prepared on `g.fwd()`, `plan_bwd` on `g.rev()` (None runs
+    the jnp reference, as everywhere)."""
+    return DirectedLabelling(build_labelling(g.fwd(), landmarks,
+                                             plan=plan_fwd),
+                             build_labelling(g.rev(), landmarks,
+                                             plan=plan_bwd))
 
 
 def _directed_search(g_new: Graph, batch_src, batch_dst, batch_is_del,
-                     batch_valid, labelling: HighwayLabelling) -> jax.Array:
+                     batch_valid, labelling: HighwayLabelling,
+                     plan: RelaxPlan | None = None) -> jax.Array:
     """Improved batch search on one plane; anchors fixed at arc heads."""
     n = g_new.n
     dist_g = labelling.dist
@@ -131,12 +140,12 @@ def _directed_search(g_new: Graph, batch_src, batch_dst, batch_is_del,
     seeded = seed < INF_KEY4
 
     def plane_fix(seed_p, beta_p, hub_p):
-        dst_hub = hub_p[g_new.dst]
-
         def sweep(best):
-            cand = key4_extend(best[g_new.src], dst_hub)
-            cand = masked_segment_min(cand, g_new.dst, n, g_new.valid,
-                                      INF_KEY4)
+            # key4_extend per arc, routed through the engine: +4, clamp,
+            # clear the l-bit at hub heads — same dispatch as the
+            # undirected Algo-3 step, so `plan` selects jnp vs Pallas.
+            cand = relax_sweep(plan, g_new, best, 4, INF_KEY4,
+                               hub=hub_p, clear_bit=2)
             cand = jnp.where(cand <= beta_p, cand, INF_KEY4)
             return jnp.minimum(best, jnp.minimum(cand, seed_p))
         return _fixpoint(sweep, seed_p)
@@ -147,25 +156,40 @@ def _directed_search(g_new: Graph, batch_src, batch_dst, batch_is_del,
 
 @jax.jit
 def batchhl_update_directed(g: DirectedGraph, batch: BatchUpdate,
-                            lab: DirectedLabelling
+                            lab: DirectedLabelling,
+                            plan_fwd: RelaxPlan | None = None,
+                            plan_bwd: RelaxPlan | None = None
                             ) -> tuple[DirectedGraph, DirectedLabelling,
                                        jax.Array]:
-    """One directed BatchHL step: both planes searched + repaired."""
+    """One directed BatchHL step: both planes searched + repaired.
+
+    Like the undirected `batchhl_update`, plans must be prepared from the
+    *post-update* snapshot — `plan_fwd` on `apply_batch_directed(g,
+    batch).fwd()`, `plan_bwd` on its `.rev()` (the reversed orientation is
+    a distinct topology to the tiler). None runs the jnp reference;
+    `tests/test_directed_engine.py` pins backend bit-parity.
+    """
     g2 = apply_batch_directed(g, batch)
     # forward plane: arcs as-is, anchor = head
     aff_f = _directed_search(g2.fwd(), batch.src, batch.dst, batch.is_del,
-                             batch.valid, lab.fwd)
-    new_f = batch_repair(g2.fwd(), aff_f, lab.fwd)
+                             batch.valid, lab.fwd, plan_fwd)
+    new_f = batch_repair(g2.fwd(), aff_f, lab.fwd, plan_fwd)
     # backward plane: reversed arcs, anchor = tail
     aff_b = _directed_search(g2.rev(), batch.dst, batch.src, batch.is_del,
-                             batch.valid, lab.bwd)
-    new_b = batch_repair(g2.rev(), aff_b, lab.bwd)
+                             batch.valid, lab.bwd, plan_bwd)
+    new_b = batch_repair(g2.rev(), aff_b, lab.bwd, plan_bwd)
     return g2, DirectedLabelling(new_f, new_b), aff_f | aff_b
 
 
 def directed_query(g: DirectedGraph, lab: DirectedLabelling, s: jax.Array,
-                   t: jax.Array, max_steps: int = 64) -> jax.Array:
-    """Exact directed distances d(s → t) for query batches."""
+                   t: jax.Array, max_steps: int = 64,
+                   plan_fwd: RelaxPlan | None = None,
+                   plan_bwd: RelaxPlan | None = None) -> jax.Array:
+    """Exact directed distances d(s → t) for query batches.
+
+    `plan_fwd`/`plan_bwd` route the bidirectional search's frontier
+    expansions through the engine (forward waves follow arcs, backward
+    waves the reversed orientation); None runs the jnp reference."""
     from repro.core.query import effective_labels
     from repro.core.labelling import landmark_onehot
 
@@ -186,12 +210,15 @@ def directed_query(g: DirectedGraph, lab: DirectedLabelling, s: jax.Array,
     ds = jnp.where(blocked[s][:, None], inf, ds)
     dt = jnp.where(blocked[t][:, None], inf, dt)
 
-    def expand(dist_x, level, srcs, dsts):
-        frontier = dist_x == level
-        msg = frontier[:, srcs] & g.valid[None, :]
-        reached = jax.vmap(
-            lambda m: jax.ops.segment_max(m, dsts, num_segments=n))(msg)
-        newly = reached & (dist_x == inf) & ~blocked[None, :]
+    def expand(dist_x, level, og, plan):
+        # Frontier lifted to a key plane (level on the frontier, INF
+        # elsewhere): one engine-dispatched relaxation sweep computes
+        # level+1 exactly at vertices with a frontier in-neighbour — the
+        # same primitive (and kernel) as the undirected bounded BiBFS.
+        frontier_keys = jnp.where(dist_x == level, level, inf)
+        cand = jax.vmap(
+            lambda k: relax_sweep(plan, og, k, 1, inf))(frontier_keys)
+        newly = (cand < inf) & (dist_x == inf) & ~blocked[None, :]
         return jnp.where(newly, level + 1, dist_x)
 
     def cond(state):
@@ -205,11 +232,11 @@ def directed_query(g: DirectedGraph, lab: DirectedLabelling, s: jax.Array,
 
         def s_side(a):
             ds, dt, ls, lt = a
-            return expand(ds, ls, g.src, g.dst), dt, ls + 1, lt
+            return expand(ds, ls, g.fwd(), plan_fwd), dt, ls + 1, lt
 
         def t_side(a):
             ds, dt, ls, lt = a
-            return ds, expand(dt, lt, g.dst, g.src), ls, lt + 1
+            return ds, expand(dt, lt, g.rev(), plan_bwd), ls, lt + 1
 
         ds, dt, ls, lt = jax.lax.cond(exp_s, s_side, t_side,
                                       (ds, dt, ls, lt))

@@ -136,6 +136,19 @@ class RelaxEngine:
         self.stale_cache_retiles = 0  # fingerprint mismatches caught below
         self.plan_cache_hits = 0  # keyed-cache hits (no retile needed)
 
+    @property
+    def plan_alignment(self) -> int:
+        """Vertex-count alignment unit for grow-in-place (DESIGN.md §6).
+
+        Grown vertex counts are rounded up to block_v · shards so the
+        grown tiling keeps full destination blocks and an even per-shard
+        block split — the same shape a fresh prepare at that size would
+        produce. Reported for *both* backends (the jnp path needs no
+        alignment) so a growth stream reaches the same sizes whichever
+        backend serves it, keeping cross-backend state bit-comparable.
+        """
+        return self.block_v * self.shards
+
     @staticmethod
     def _snapshot_fingerprint(g: Graph) -> tuple:
         """Cheap identity of a snapshot's topology slots.
@@ -143,13 +156,26 @@ class RelaxEngine:
         (n, capacity, occupied-slot count, all-slot src/dst checksum). The
         checksum covers *every* slot — free slots included — because
         insertions rewrite free slots (changing it) while deletions only
-        flip validity bits (leaving it untouched). Two tiny device
-        reductions + one host sync; negligible next to the O(E log E)
-        retile it guards.
+        flip validity bits (leaving it untouched). It is *slot-position
+        sensitive* — each slot's hash is mixed with its index — because
+        the tiling a fingerprint keys embeds a slot permutation: two
+        snapshots holding the same edge multiset in different slot
+        layouts must not collide, or one's per-slot validity mask gets
+        applied through the other's permutation and the sweep relaxes
+        the wrong edges (a commutative sum had exactly this collision;
+        the batch-split property test pins it). n and capacity being
+        part of the key is what makes grow-in-place safe here: a grown
+        snapshot can never alias a pre-growth fingerprint, so growth is
+        always a clean retile, never a stale-tile reuse (DESIGN.md §6).
+        Two tiny device reductions + one host sync; negligible next to
+        the O(E log E) retile it guards.
         """
         occupied = int(jnp.sum(g.valid))
-        chk = int(jnp.sum(g.src.astype(jnp.uint32) * jnp.uint32(2654435761)
-                          + g.dst.astype(jnp.uint32) * jnp.uint32(40503)))
+        idx = jnp.arange(g.src.shape[0], dtype=jnp.uint32)
+        slot_h = (g.src.astype(jnp.uint32) * jnp.uint32(2654435761)
+                  + g.dst.astype(jnp.uint32) * jnp.uint32(40503)) \
+            ^ (idx * jnp.uint32(2246822519))
+        chk = int(jnp.sum(slot_h))
         return (g.n, g.src.shape[0], occupied, chk)
 
     def _cache_is_stale(self, g: Graph) -> bool:

@@ -1,0 +1,237 @@
+"""Grow-in-place capacity management (DESIGN.md §6).
+
+The substrate's static shapes are what make every sweep one compiled
+executable — but a batch-dynamic stream has no natural size bound, and a
+fixed edge capacity chosen up front caps every run (the paper's premise
+is graphs that "undergo rapid changes over time"; the incremental
+labelling line it builds on is explicitly motivated by graphs that only
+ever grow). This module removes the cap without giving up static shapes:
+when a batch would overflow edge slots or introduce vertex ids >= n, the
+slot arrays and labelling planes grow *geometrically* to the next
+aligned size, and the serve loop commits the grown arrays as a new
+version through the snapshot store's pointer swap — queries keep
+answering against the committed pre-growth snapshot throughout, with the
+same staleness <= 1 contract.
+
+The contract, layer by layer:
+
+* **Detection is host-side and pre-dispatch** (`ensure_capacity` →
+  `coo.batch_requirements`): overflow surfaces as a typed
+  `CapacityError` naming the tick and required sizes, never as a clobbered
+  slot or a shape error from inside jit.
+* **Growth is a pure shape change** (`coo.grow` + `grow_labelling` +
+  `snapshot.grow_snapshot`): same edges, same distances; new edge slots
+  are free, new vertex columns are isolated (dist INF_D, hub False) —
+  exactly the state a fresh construction at the grown size assigns them,
+  which is why post-growth maintenance stays bit-identical to fresh
+  construction at the final size (pinned by `tests/test_growth.py`).
+* **Geometric steps, aligned sizes** (`GrowthPolicy`): each growth at
+  least multiplies the overflowing dimension by `factor`, so a stream of
+  U-sized batches pays O(log(final/initial)) growths — amortized O(1)
+  copy work per inserted edge. Vertex counts round up to
+  block_v · tile-shards (`kernel.aligned_vertex_count`) so a grown Pallas
+  tiling keeps full destination blocks and an even per-shard block split.
+* **Growth = fingerprint change = clean retile**: the engine's snapshot
+  fingerprint includes n and capacity, so a grown snapshot can never
+  alias a cached pre-growth tiling; jit caches re-key on the new shapes
+  the same way (a shape step is a retrace, never a stale executable).
+
+`launch/serve.py --grow --capacity C` drives this; `python -m
+repro.core.growth` self-tests grown-update mesh parity and the
+fresh-construction contract end-to-end (run it under
+XLA_FLAGS=--xla_force_host_platform_device_count=8 for real meshes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.graphs import coo
+from repro.graphs.coo import BatchUpdate, CapacityError
+from repro.core.snapshot import Snapshot, grow_snapshot
+from repro.kernels.edge_relax.kernel import aligned_vertex_count
+
+
+@dataclasses.dataclass(frozen=True)
+class GrowthPolicy:
+    """How far to grow past a requirement, and to what alignment.
+
+    `factor` is the geometric step (amortization: total copy work over a
+    stream is a constant multiple of the final size). `block_v`/`shards`
+    set the vertex-count alignment unit (the tiling invariants above) —
+    pass the serving engine's values so grown and fresh tilings share
+    shapes; `capacity_align` keeps edge capacities on round slot-pair
+    boundaries.
+    """
+    factor: float = 2.0
+    block_v: int = 1
+    shards: int = 1
+    capacity_align: int = 64
+
+    def __post_init__(self):
+        if self.factor <= 1.0:
+            raise ValueError(f"growth factor must be > 1, got {self.factor}")
+
+    def next_capacity(self, current: int, required: int) -> int:
+        """Smallest aligned capacity >= required that is a geometric step."""
+        target = max(required, int(math.ceil(current * self.factor)))
+        return -(-target // self.capacity_align) * self.capacity_align
+
+    def next_n(self, current: int, required: int) -> int:
+        """Smallest aligned vertex count >= required (geometric step)."""
+        target = max(required, int(math.ceil(current * self.factor)))
+        return aligned_vertex_count(target, self.block_v, self.shards)
+
+
+@dataclasses.dataclass(frozen=True)
+class GrowthEvent:
+    """One growth step, for reports/benches: what grew, when, why."""
+    tick: int | None
+    old_capacity: int
+    new_capacity: int
+    old_n: int
+    new_n: int
+    required_capacity: int
+    required_n: int
+
+
+def ensure_capacity(snap: Snapshot, batch: BatchUpdate,
+                    policy: GrowthPolicy = GrowthPolicy(), *,
+                    grow: bool = True, tick: int | None = None
+                    ) -> tuple[Snapshot, GrowthEvent | None]:
+    """Make `snap` big enough to absorb `batch`, growing if allowed.
+
+    Returns (snapshot, event): the snapshot unchanged with event None
+    when the batch fits; a same-version grown snapshot (plan dropped —
+    re-prepare with the engine) with the event when it doesn't and
+    `grow` is set. With `grow=False` an overflow raises `CapacityError`
+    carrying the tick and the required sizes — the pre-growth check that
+    call-sites surface instead of a shape error from deep inside jit.
+    """
+    g = snap.graph
+    req_cap, req_n = coo.batch_requirements(g, batch)
+    if req_cap <= g.capacity and req_n <= g.n:
+        return snap, None
+    if not grow:
+        raise CapacityError(
+            f"batch{f' at tick {tick}' if tick is not None else ''} needs "
+            f"edge capacity {req_cap} (have {g.capacity}) and vertex count "
+            f"{req_n} (have {g.n}); re-run with growth enabled (--grow) or "
+            f"provision a larger --capacity",
+            tick=tick, capacity=g.capacity, required_capacity=req_cap,
+            n=g.n, required_n=req_n)
+    new_cap = (policy.next_capacity(g.capacity, req_cap)
+               if req_cap > g.capacity else g.capacity)
+    new_n = policy.next_n(g.n, req_n) if req_n > g.n else g.n
+    grown = grow_snapshot(snap, capacity=new_cap, n=new_n)
+    event = GrowthEvent(tick=tick, old_capacity=g.capacity,
+                        new_capacity=new_cap, old_n=g.n, new_n=new_n,
+                        required_capacity=req_cap, required_n=req_n)
+    return grown, event
+
+
+# ---------------------------------------------------------------------------
+# Self-test (runnable under a forced multi-device host platform)
+# ---------------------------------------------------------------------------
+
+def _selftest() -> None:
+    """Grown-state parity end to end:
+
+    1. a grown snapshot (capacity + vertex growth) updated on every
+       host-mesh factorization × both backends is bit-identical to the
+       unsharded jnp update of the same grown state;
+    2. a ServeLoop growth run (pure-insertion `growth` scenario starting
+       at a fraction of final capacity, pipelined, mesh if the device
+       count allows) drops zero queries, grows at least twice, and ends
+       with a labelling bit-identical to fresh construction at the final
+       grown size.
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+            PYTHONPATH=src python -m repro.core.growth
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.graphs import generators as gen
+    from repro.graphs.coo import from_edges, make_batch, to_numpy_adj
+    from repro.core.batch import batchhl_update
+    from repro.core.construct import build_labelling, \
+        select_landmarks_by_degree
+    from repro.core.engine import RelaxEngine
+    from repro.core.shard import shard_batchhl_update
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.serve import ServeConfig, ServeLoop
+
+    n_dev = len(jax.devices())
+
+    # --- 1: grown-update mesh parity ------------------------------------
+    n, r = 120, 8
+    edges = gen.random_connected(n, extra_edges=150, seed=3)
+    g = from_edges(n, edges, edges.shape[0] + 4)
+    landmarks = select_landmarks_by_degree(g, r)
+    lab0 = build_labelling(g, landmarks)
+    # A batch that outgrows both dimensions: 8 inserts (4 free pairs) and
+    # two of them wire in brand-new vertices >= n.
+    ups = gen.random_batch_updates(edges, n, n_ins=6, n_del=2, seed=9)
+    ups += [(5, n, False), (n, n + 1, False)]
+    batch = make_batch(ups, pad_to=12)
+    policy = GrowthPolicy(block_v=32, shards=2)
+    snap, event = ensure_capacity(Snapshot(0, g, lab0, None), batch,
+                                  policy, tick=0)
+    assert event is not None and snap.graph.n == policy.next_n(n, n + 2)
+    assert snap.graph.capacity >= edges.shape[0] + 8
+
+    g1, lab1, aff1 = batchhl_update(snap.graph, batch, snap.labelling)
+    engine = RelaxEngine(backend="pallas", block_v=32, shards=2)
+    plan1 = engine.prepare(coo.apply_batch(snap.graph, batch))
+    for model in [m for m in (1, 2, 4, 8) if n_dev % m == 0]:
+        mesh = make_host_mesh(model=model)
+        for backend, pln in (("jnp", None), ("pallas", plan1)):
+            sg1, slab1, saff1 = shard_batchhl_update(
+                mesh, snap.graph, batch, snap.labelling, plan=pln)
+            np.testing.assert_array_equal(np.asarray(saff1),
+                                          np.asarray(aff1))
+            for f in ("dist", "hub", "highway"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(slab1, f)),
+                    np.asarray(getattr(lab1, f)))
+            print(f"mesh (data={mesh.shape['data']}, model={model}) "
+                  f"backend={backend}: grown-update bit-parity OK")
+
+    # --- 2: serve-loop growth runs, fresh-construction contract ---------
+    shards = 2 if n_dev % 2 == 0 and n_dev > 1 else 1
+    mesh_kind = "host" if n_dev > 1 else "none"
+    for backend in ("jnp", "pallas"):
+        # BA(200, 1) seeds ~199 edges; 5 ticks x 60 pure inserts end near
+        # 500 — starting capacity 224 forces two geometric growths
+        # (224 -> 448 -> 896) while the pipelined stream keeps serving.
+        cfg = ServeConfig(n=200, deg=1, landmarks=8, batches=5,
+                          batch_size=60, scenario="growth", capacity=224,
+                          grow=True, queries=24, qps=5000.0, microbatch=8,
+                          pipeline=True, backend=backend, block_v=64,
+                          tile_shards=2, mesh=mesh_kind, shards=shards,
+                          quiet=True)
+        loop = ServeLoop(cfg)
+        rep = loop.run()
+        assert sum(t.queries for t in rep.ticks) == cfg.batches * cfg.queries
+        assert len(rep.growth) >= 2, rep.growth
+        final = rep.final
+        fresh_g = from_edges(final.graph.n,
+                             np.asarray(loop._edge_list, np.int32),
+                             final.graph.capacity)
+        assert to_numpy_adj(fresh_g) == to_numpy_adj(final.graph)
+        fresh_lab = build_labelling(fresh_g, final.labelling.landmarks)
+        for f in ("dist", "hub", "highway"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(final.labelling, f)),
+                np.asarray(getattr(fresh_lab, f)))
+        print(f"serve growth backend={backend} (mesh={mesh_kind} "
+              f"shards={shards}): {len(rep.growth)} growths, "
+              f"capacity {rep.growth[0].old_capacity}->"
+              f"{final.graph.capacity}, fresh-construction parity OK")
+    print(f"growth selftest OK on {n_dev} device(s)")
+
+
+if __name__ == "__main__":
+    _selftest()

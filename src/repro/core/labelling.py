@@ -114,6 +114,32 @@ class HighwayLabelling:
         return jnp.where(self.label_mask(), self.dist, INF_D)
 
 
+def grow_labelling(lab: HighwayLabelling, new_n: int) -> HighwayLabelling:
+    """Widen the labelling planes to `new_n` vertices (grow-in-place).
+
+    New columns are seeded exactly as a fresh construction at the larger
+    size would leave an isolated vertex: dist INF_D (the pruned-BFS
+    fixpoint never reaches it, and key2_dist(INF_KEY2) == INF_D), hub
+    False (the flag is masked to finite distances). The landmark set and
+    the highway are untouched — growth never adds landmarks, and no
+    existing distance changes until a batch actually wires the new
+    vertices in. Bit-parity with fresh construction at `new_n` is pinned
+    by `tests/test_growth.py`.
+    """
+    old_n = lab.dist.shape[1]
+    if new_n < old_n:
+        raise ValueError(f"grow_labelling cannot shrink: {old_n}->{new_n}")
+    if new_n == old_n:
+        return lab
+    r = lab.dist.shape[0]
+    pad_d = jnp.full((r, new_n - old_n), INF_D, lab.dist.dtype)
+    pad_h = jnp.zeros((r, new_n - old_n), bool)
+    return HighwayLabelling(lab.landmarks,
+                            jnp.concatenate([lab.dist, pad_d], axis=1),
+                            jnp.concatenate([lab.hub, pad_h], axis=1),
+                            lab.highway)
+
+
 def landmark_onehot(landmarks: jax.Array, n: int) -> jax.Array:
     """bool[V]: vertex is a landmark."""
     v_ids = jnp.arange(n)

@@ -59,7 +59,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.graphs.coo import Graph, BatchUpdate, INF_D, apply_batch
-from repro.core.batch import (repair_base, repair_merge, repair_planes,
+from repro.core.batch import (check_labelling_width, repair_base,
+                              repair_merge, repair_planes,
                               repair_step, search_basic_planes,
                               search_basic_seed, search_basic_step,
                               search_improved_planes, search_improved_seed,
@@ -167,6 +168,9 @@ def shard_batchhl_update(mesh, g_old: Graph, batch: BatchUpdate,
     prepare) can pass it as `g_new` to skip the recompute.
     """
     _check_planes(labelling.num_landmarks, _maint_size(mesh), "maintenance")
+    # Trace-time growth guard: a grown graph with un-grown planes would
+    # otherwise die as a GSPMD shape error inside the shard_map body.
+    check_labelling_width(g_old, labelling.dist)
     if g_new is None:
         g_new = apply_batch(g_old, batch)
 
@@ -234,6 +238,7 @@ def shard_search_seed(mesh, g_new: Graph, batch: BatchUpdate,
                       improved: bool = True):
     """Mesh twin of `snapshot.search_seed`; outputs plane-sharded rv."""
     _check_planes(landmarks.shape[0], _maint_size(mesh), "maintenance")
+    check_labelling_width(g_new, dist)
 
     def body(g_new, batch, dist, hub, own, landmarks_full):
         hub_mask = per_plane_hub_mask(landmarks_full, own, g_new.n)

@@ -49,14 +49,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.graphs.coo import Graph, BatchUpdate, INF_D, apply_batch
+from repro.graphs.coo import Graph, BatchUpdate, INF_D, apply_batch, grow
 from repro.checkpoint import manager as ckpt
-from repro.core.batch import (repair_base, repair_merge, repair_step,
+from repro.core.batch import (check_labelling_width, repair_base,
+                              repair_merge, repair_step,
                               search_basic_seed, search_basic_step,
                               search_improved_seed, search_improved_step)
 from repro.core.engine import RelaxPlan
-from repro.core.labelling import (HighwayLabelling, INF_KEY4, key2_dist,
-                                  key2_hub, key2_make, per_plane_hub_mask)
+from repro.core.labelling import (HighwayLabelling, INF_KEY4, grow_labelling,
+                                  key2_dist, key2_hub, key2_make,
+                                  per_plane_hub_mask)
 
 
 # ---------------------------------------------------------------------------
@@ -105,6 +107,27 @@ class SnapshotStore:
         return snapshot
 
 
+def grow_snapshot(snap: Snapshot, *, capacity: int | None = None,
+                  n: int | None = None) -> Snapshot:
+    """The grown twin of `snap`: same version, same logical graph, larger
+    static slots (DESIGN.md §6).
+
+    Growth is a pure shape change — every edge, distance, and hub flag is
+    preserved, and new vertex columns are seeded exactly as a fresh
+    construction at the larger size would leave an isolated vertex — so
+    the grown snapshot keeps the *same* version: committing happens only
+    when the next batch update lands (version + 1, at the grown shapes,
+    through the store's pointer swap). Queries keep serving the committed
+    pre-growth snapshot meanwhile, preserving the staleness ≤ 1 contract.
+    `plan` is dropped: tilings are shape-keyed derived state, and the
+    engine's fingerprint (which includes n and capacity) guarantees the
+    re-prepare is a clean retile, never a stale-tile reuse.
+    """
+    g = grow(snap.graph, capacity=capacity, n=n)
+    return Snapshot(snap.version, g, grow_labelling(snap.labelling, g.n),
+                    None)
+
+
 # ---------------------------------------------------------------------------
 # Bounded update chunks (unsharded; core/shard.py holds the mesh twins)
 # ---------------------------------------------------------------------------
@@ -119,6 +142,7 @@ def search_seed(g_new: Graph, batch: BatchUpdate, dist: jax.Array,
     improved Algo 3, d_G for the basic Algo 2); `hub_mask` is reused by
     every later phase of the tick.
     """
+    check_labelling_width(g_new, dist)
     hub_mask = per_plane_hub_mask(landmarks, landmarks, g_new.n)
     if improved:
         seed, seeded, beta = search_improved_seed(g_new, batch, dist, hub,

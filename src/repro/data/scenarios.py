@@ -20,6 +20,13 @@ Registry (`SCENARIOS` / `get_scenario`):
                 stream (the staleness stress test)
   skewed        50/50 churn with Zipf(1.2) query sources — traffic
                 concentrates on the BA network's hubs
+  growth        100/0 — pure insertions, the unbounded-stream shape: the
+                edge count climbs every tick (sized so batches ×
+                batch_size ≈ the initial edge count doubles the graph
+                over a run). Pair with `--capacity`/`--grow` to start
+                below the final size and exercise grow-in-place
+                (DESIGN.md §6); without --grow it is the scenario that
+                deterministically raises CapacityError
 
 `launch/serve.py --scenario <name>` drives these; `benchmarks/ticks.py`
 reports the serving trajectory under them.
@@ -83,6 +90,9 @@ SCENARIOS: dict[str, Scenario] = {s.name: s for s in (
              ins_frac=0.5, burst_period=3),
     Scenario("skewed", "50/50 churn, Zipf(1.2) hub-skewed query sources",
              ins_frac=0.5, query_skew=1.2),
+    Scenario("growth", "pure insertions: the edge count climbs every tick "
+                       "(grow-in-place stress; pair with --capacity/--grow)",
+             ins_frac=1.0),
 )}
 
 

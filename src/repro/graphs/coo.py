@@ -21,6 +21,31 @@ import numpy as np
 INF_D = jnp.int32(1 << 28)
 
 
+class CapacityError(ValueError):
+    """A graph's static slots cannot hold the requested edges/vertices.
+
+    Raised by `from_edges` at build time and by the pre-growth check of
+    `core/growth.ensure_capacity` *before* any device dispatch — the
+    alternative is `apply_batch` silently clobbering its last free slot
+    pair, surfacing later as a wrong answer or a shape error from deep
+    inside jit. Carries the numbers a caller needs to grow (or to size a
+    fresh build): the tick that overflowed (None outside a serve stream),
+    the current and required edge capacities (slot pairs), and the current
+    and required vertex counts.
+    """
+
+    def __init__(self, message: str, *, tick: int | None = None,
+                 capacity: int | None = None,
+                 required_capacity: int | None = None,
+                 n: int | None = None, required_n: int | None = None):
+        super().__init__(message)
+        self.tick = tick
+        self.capacity = capacity
+        self.required_capacity = required_capacity
+        self.n = n
+        self.required_n = required_n
+
+
 @partial(jax.tree_util.register_dataclass,
          data_fields=("src", "dst", "valid"), meta_fields=("n",))
 @dataclasses.dataclass(frozen=True)
@@ -55,7 +80,8 @@ def from_edges(n: int, edges: np.ndarray, capacity: int) -> Graph:
     edges = np.asarray(edges, dtype=np.int32).reshape(-1, 2)
     m = edges.shape[0]
     if m > capacity:
-        raise ValueError(f"{m} edges exceed capacity {capacity}")
+        raise CapacityError(f"{m} edges exceed capacity {capacity}",
+                            capacity=capacity, required_capacity=m, n=n)
     src = np.zeros(2 * capacity, np.int32)
     dst = np.zeros(2 * capacity, np.int32)
     valid = np.zeros(2 * capacity, bool)
@@ -63,6 +89,60 @@ def from_edges(n: int, edges: np.ndarray, capacity: int) -> Graph:
     src[1:2 * m:2], dst[1:2 * m:2] = edges[:, 1], edges[:, 0]
     valid[:2 * m] = True
     return Graph(jnp.asarray(src), jnp.asarray(dst), jnp.asarray(valid), n)
+
+
+def grow(g: Graph, *, capacity: int | None = None,
+         n: int | None = None) -> Graph:
+    """Return `g` with larger static slots: the same edge set, more room.
+
+    New edge slots are free (valid False, src/dst zeroed — the same
+    convention `from_edges` uses for its padding), and a larger `n` only
+    widens the vertex id space; no existing slot moves, so the grown graph
+    is the *same* graph. Shrinking is refused: slots past the new capacity
+    could hold live edges, and vertex ids past the new n could be
+    referenced by them.
+    """
+    capacity = g.capacity if capacity is None else capacity
+    n = g.n if n is None else n
+    if capacity < g.capacity or n < g.n:
+        raise ValueError(
+            f"grow cannot shrink: capacity {g.capacity}->{capacity}, "
+            f"n {g.n}->{n}")
+    pad = 2 * (capacity - g.capacity)
+    if pad == 0:
+        return Graph(g.src, g.dst, g.valid, n)
+    return Graph(jnp.concatenate([g.src, jnp.zeros((pad,), jnp.int32)]),
+                 jnp.concatenate([g.dst, jnp.zeros((pad,), jnp.int32)]),
+                 jnp.concatenate([g.valid, jnp.zeros((pad,), bool)]), n)
+
+
+def batch_requirements(g: Graph, b: BatchUpdate) -> tuple[int, int]:
+    """Host-side (required_capacity, required_n) to apply `b` to `g`.
+
+    `required_capacity` is exact for `apply_batch`'s semantics: occupied
+    slot pairs, minus the pairs the batch's own deletions free (deletions
+    are processed before insertions, and the deletion match below is the
+    same undirected canonical-endpoint match `apply_batch` uses — so a
+    batch is rejected/grown-for iff it genuinely would not fit), plus the
+    batch's valid insertions. `required_n` is one past the largest vertex
+    id any valid update row touches. Costs one O(E·U) device compare +
+    two scalar syncs per call — negligible next to the update it gates.
+    """
+    is_del = np.asarray(b.is_del)
+    valid = np.asarray(b.valid)
+    n_ins = int(((~is_del) & valid).sum())
+    occupied_pairs = int(jnp.sum(g.valid)) // 2
+    del_mask_u = b.is_del & b.valid
+    g_lo = jnp.minimum(g.src, g.dst)
+    g_hi = jnp.maximum(g.src, g.dst)
+    b_lo = jnp.where(del_mask_u, jnp.minimum(b.src, b.dst), -1)
+    b_hi = jnp.where(del_mask_u, jnp.maximum(b.src, b.dst), -1)
+    hit = jnp.any((g_lo[:, None] == b_lo[None, :])
+                  & (g_hi[:, None] == b_hi[None, :]), axis=1) & g.valid
+    freed_pairs = int(jnp.sum(hit)) // 2
+    ids = np.concatenate([np.asarray(b.src)[valid], np.asarray(b.dst)[valid]])
+    required_n = int(ids.max()) + 1 if ids.size else 0
+    return occupied_pairs - freed_pairs + n_ins, required_n
 
 
 def make_batch(updates, pad_to: int | None = None) -> BatchUpdate:

@@ -119,6 +119,21 @@ def block_edges_topology(src: np.ndarray, dst: np.ndarray, keep: np.ndarray,
     return src_t, dst_t, perm_t, slot_t, block_v
 
 
+def aligned_vertex_count(n: int, block_v: int, shards: int) -> int:
+    """Smallest vertex count >= n that tiles cleanly: a multiple of
+    block_v · shards, so every destination block is full-width and
+    `shard_tiling` splits the block axis into `shards` equal groups with
+    no all-padding blocks. The growth policy (`core/growth.py`) rounds
+    grown vertex counts up to this so a grown tiling has the same shape
+    invariants as a fresh one at the same size.
+    """
+    if n < 1 or block_v < 1 or shards < 1:
+        raise ValueError(
+            f"need positive n/block_v/shards, got {n}/{block_v}/{shards}")
+    unit = block_v * shards
+    return -(-n // unit) * unit
+
+
 def shard_tiling(shards: int, *tiles: np.ndarray):
     """Split [NB, BE] tile arrays into `shards` contiguous vertex shards.
 

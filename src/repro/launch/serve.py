@@ -44,6 +44,16 @@ Checkpointing: ``--ckpt-dir`` persists the *full* serve state each tick
 (graph topology + labelling + version + the host edge list);
 ``--resume`` restarts from the newest checkpoint and continues the
 exact stream (seeds are tick-indexed).
+
+Grow-in-place: ``--capacity C`` starts the run at C edge slots instead
+of provisioning the scenario's worst case; with ``--grow`` a batch that
+would overflow (or that introduces vertex ids ≥ n) grows the slot
+arrays and labelling planes geometrically to the next aligned size at
+the version boundary — queries keep serving the committed pre-growth
+snapshot throughout, and the post-growth labelling is bit-identical to
+fresh construction at the grown size (DESIGN.md §6). Without ``--grow``
+an overflow raises a typed ``CapacityError`` naming the tick and the
+required sizes before anything is dispatched.
 """
 from __future__ import annotations
 
@@ -64,6 +74,7 @@ from repro.core.query import batched_query
 from repro.core.shard import (shard_batched_query, shard_batchhl_update,
                               shard_build_labelling,
                               validate_landmark_sharding)
+from repro.core.growth import GrowthEvent, GrowthPolicy, ensure_capacity
 from repro.core.snapshot import (Snapshot, SnapshotStore, pipelined_update,
                                  restore_extra, restore_snapshot,
                                  save_snapshot)
@@ -96,6 +107,12 @@ class ServeConfig:
     use_minplus_kernel: bool = False
     mesh: str = "none"
     shards: int = 1
+    # capacity / grow-in-place (DESIGN.md §6)
+    capacity: int | None = None  # initial edge capacity (None = provision
+                                 # for the scenario's worst-case inserts)
+    grow: bool = False           # grow slots/planes geometrically on
+                                 # overflow instead of raising CapacityError
+    growth_factor: float = 2.0
     # ops
     verify: bool = False
     ckpt_dir: str | None = None
@@ -128,6 +145,9 @@ class TickStats:
     label_size: int
     queries: int
     verify_mismatches: int | None = None
+    grew: bool = False          # this tick grew capacity/planes (§6)
+    capacity: int = 0           # edge capacity after this tick
+    graph_n: int = 0            # vertex slots after this tick
 
 
 @dataclasses.dataclass
@@ -140,6 +160,8 @@ class ServeReport:
     backend: str
     #: version -> committed Snapshot, populated when keep_history is set
     history: dict[int, Snapshot] = dataclasses.field(default_factory=dict)
+    #: grow-in-place events, in tick order (empty without --grow)
+    growth: list[GrowthEvent] = dataclasses.field(default_factory=list)
 
     def latencies(self) -> np.ndarray:
         if not self.microbatches:
@@ -177,6 +199,12 @@ class ServeLoop:
             validate_landmark_sharding(self.mesh, cfg.landmarks)
         self.engine = RelaxEngine(backend=cfg.backend, block_v=cfg.block_v,
                                   shards=cfg.tile_shards)
+        # Grow-in-place policy: align grown vertex counts to the engine's
+        # tiling unit (engine.plan_alignment = block_v · shards) so grown
+        # and fresh tilings share shape invariants, backend-independent.
+        self.growth_policy = GrowthPolicy(factor=cfg.growth_factor,
+                                          block_v=self.engine.block_v,
+                                          shards=self.engine.shards)
         self.store: SnapshotStore | None = None
         self.report: ServeReport | None = None
         # host-side current edge set, maintained incrementally: a
@@ -196,8 +224,13 @@ class ServeLoop:
     def _fresh_snapshot(self) -> Snapshot:
         cfg = self.cfg
         edges = gen.barabasi_albert(cfg.n, cfg.deg, seed=0)
-        cap = (edges.shape[0]
-               + self.scenario.max_inserts(cfg.batches, cfg.batch_size) + 64)
+        # Explicit --capacity starts the run at that size (the grow-in-place
+        # entry point: pair with --grow to start small and let the stream
+        # grow the slots); the default provisions the scenario's worst case
+        # up front, as before.
+        cap = cfg.capacity if cfg.capacity is not None else (
+            edges.shape[0]
+            + self.scenario.max_inserts(cfg.batches, cfg.batch_size) + 64)
         g = from_edges(cfg.n, edges, cap)
         landmarks = select_landmarks_by_degree(g, cfg.landmarks)
         plan = self.engine.prepare(g)
@@ -219,9 +252,21 @@ class ServeLoop:
     def _resumed_snapshot(self) -> Snapshot:
         cfg = self.cfg
         snap = restore_snapshot(cfg.ckpt_dir)
-        if snap.graph.n != cfg.n:
+        # A grown run checkpoints n >= cfg.n (growth only widens), so the
+        # graph's own n cannot distinguish "this config, grown" from "a
+        # different, larger config". Each checkpoint therefore carries the
+        # run's *base* n; resuming requires it to match exactly. Pre-growth
+        # checkpoints (no base_n leaf) never grew, so their graph n is the
+        # base and the old exact check applies.
+        try:
+            base_n = int(restore_extra(cfg.ckpt_dir,
+                                       ("base_n",))["base_n"])
+        except FileNotFoundError:
+            base_n = snap.graph.n
+        if base_n != cfg.n:
             raise ValueError(
-                f"checkpoint has n={snap.graph.n}, config has n={cfg.n}")
+                f"checkpoint is from a run with n={base_n} "
+                f"(grown to {snap.graph.n}), config has n={cfg.n}")
         edge_arr = restore_extra(cfg.ckpt_dir, ("edge_list",))["edge_list"]
         self._edge_list = [(int(u), int(v)) for u, v in edge_arr]
         self._edge_pos = {e: i for i, e in enumerate(self._edge_list)}
@@ -382,7 +427,9 @@ class ServeLoop:
                 if checked >= n_check:
                     break
                 got = float(m.answers[i])
-                want = ref.pair_distance(adj, self.cfg.n, int(m.qs[i]),
+                # len(adj) is the snapshot's own n — a grown snapshot has
+                # more vertices than cfg.n, and the BFS must see them all.
+                want = ref.pair_distance(adj, len(adj), int(m.qs[i]),
                                          int(m.qt[i]))
                 want = got if (want == ref.INF and got >= 1e8) else want
                 if int(m.qs[i]) == int(m.qt[i]):
@@ -403,6 +450,7 @@ class ServeLoop:
         self.store = SnapshotStore(snap0)
         ticks: list[TickStats] = []
         out: list[MicrobatchRecord] = []
+        growth: list[GrowthEvent] = []
         history: dict[int, Snapshot] = {}
         if cfg.keep_history:
             history[snap0.version] = snap0
@@ -419,19 +467,37 @@ class ServeLoop:
             offsets, qs, qt = self._tick_queries(tick)
             has_ins = any(not is_del for (_, _, is_del) in ups)
 
+            # Grow-in-place check *before* any dispatch (DESIGN.md §6): an
+            # overflowing batch grows the working snapshot — same version,
+            # larger slots/planes — or raises a typed CapacityError naming
+            # this tick. The committed snapshot keeps serving queries
+            # untouched either way; the grown shapes first become visible
+            # to readers at the next commit's pointer swap.
+            work, event = ensure_capacity(snap, batch, self.growth_policy,
+                                          grow=cfg.grow, tick=tick)
+            if event is not None:
+                growth.append(event)
+                self._log(f"  grow: capacity {event.old_capacity}->"
+                          f"{event.new_capacity}, n {event.old_n}->"
+                          f"{event.new_n} (needed {event.required_capacity}"
+                          f"/{event.required_n})")
+
             served_box = [0]
             tick_t0 = time.time()
             # One tiling per tick, prepared from the post-update snapshot
             # (the engine contract); the keyed plan cache keeps the
-            # committed snapshot's tiling alive alongside it.
-            g_next = apply_batch(snap.graph, batch)
-            plan = self.engine.prepare(g_next, topology_changed=has_ins)
+            # committed snapshot's tiling alive alongside it. Growth moved
+            # topology slots (capacity/n changed → new fingerprint), so it
+            # forces a clean retile exactly like an insertion does.
+            g_next = apply_batch(work.graph, batch)
+            plan = self.engine.prepare(
+                g_next, topology_changed=has_ins or event is not None)
             if cfg.pipeline:
-                nxt = self._update_pipelined(snap, batch, plan, g_next,
+                nxt = self._update_pipelined(work, batch, plan, g_next,
                                              tick, tick_t0, offsets, qs, qt,
                                              served_box, out)
             else:
-                nxt = self._update_sync(snap, batch, plan, g_next)
+                nxt = self._update_sync(work, batch, plan, g_next)
             t_upd = time.time() - tick_t0
             self.store.commit(nxt)
             if cfg.keep_history:
@@ -463,7 +529,9 @@ class ServeLoop:
                 tick=tick, version=nxt.version, update_s=t_upd,
                 affected=int(jnp.sum(self._last_aff)),
                 label_size=int(nxt.labelling.label_size()),
-                queries=int(served_box[0]))
+                queries=int(served_box[0]),
+                grew=event is not None,
+                capacity=nxt.graph.capacity, graph_n=nxt.graph.n)
             self._log(
                 f"tick {tick}: update {t_upd * 1e3:.1f}ms "
                 f"({stats.affected} affected, v{nxt.version}) | "
@@ -482,12 +550,13 @@ class ServeLoop:
                 save_snapshot(
                     cfg.ckpt_dir, nxt,
                     extra={"edge_list": np.asarray(self._edge_list,
-                                                   np.int32)})
+                                                   np.int32),
+                           "base_n": np.int64(cfg.n)})
 
         self.report = ServeReport(config=cfg, ticks=ticks, microbatches=out,
                                   final=self.store.committed,
                                   backend=self.engine.backend,
-                                  history=history)
+                                  history=history, growth=growth)
         pct = self.report.latency_percentiles()
         mode = "pipeline" if cfg.pipeline else "sync"
         engine = self.engine
@@ -503,6 +572,13 @@ class ServeLoop:
             f"staleness mean {self.report.mean_staleness():.2f} versions "
             f"behind head [{mode}, chunk-sweeps={cfg.chunk_sweeps}, "
             f"scenario={cfg.scenario}]")
+        if growth:
+            final_g = self.store.committed.graph
+            self._log(f"grew {len(growth)}x: capacity "
+                      f"{growth[0].old_capacity}->{final_g.capacity}, "
+                      f"n {growth[0].old_n}->{final_g.n} "
+                      f"[factor={cfg.growth_factor:g}, "
+                      f"v-align={engine.plan_alignment}]")
         self._log(f"serve loop done [backend={engine.backend}, "
                   f"{engine_desc}{self._mesh_desc()}, mode={mode}]")
         return self.report
@@ -552,6 +628,21 @@ def main() -> None:
                     help="model-axis size of the host mesh: landmark planes "
                          "shard over it, the other devices form the data "
                          "(query) axis; must divide the device count")
+    ap.add_argument("--capacity", type=int, default=None,
+                    help="initial edge capacity (slot pairs); default "
+                         "provisions the scenario's worst-case inserts up "
+                         "front. Pair with --grow to start small and grow "
+                         "in place (DESIGN.md §6)")
+    ap.add_argument("--grow", action="store_true",
+                    help="grow edge slots and labelling planes "
+                         "geometrically when a batch would overflow, "
+                         "committing the grown arrays as the next version; "
+                         "without it an overflow raises CapacityError "
+                         "naming the tick and required sizes")
+    ap.add_argument("--growth-factor", type=float, default=2.0,
+                    help="geometric growth step (> 1); each growth at "
+                         "least multiplies the overflowing dimension by "
+                         "this")
     ap.add_argument("--verify", action="store_true",
                     help="check sampled answers against a BFS oracle at "
                          "the version each was answered")
@@ -570,8 +661,9 @@ def main() -> None:
         chunk_sweeps=args.chunk_sweeps, backend=args.backend,
         block_v=args.block_v, tile_shards=args.tile_shards,
         use_minplus_kernel=args.use_minplus_kernel, mesh=args.mesh,
-        shards=args.shards, verify=args.verify, ckpt_dir=args.ckpt_dir,
-        resume=args.resume, seed=args.seed)
+        shards=args.shards, capacity=args.capacity, grow=args.grow,
+        growth_factor=args.growth_factor, verify=args.verify,
+        ckpt_dir=args.ckpt_dir, resume=args.resume, seed=args.seed)
     try:
         # Config validation (mesh shape, landmark groupings, scenario,
         # backend) happens at construction; runtime errors inside run()

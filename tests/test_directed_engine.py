@@ -1,0 +1,103 @@
+"""Directed BatchHL under the engine's Pallas backend (DESIGN.md §3).
+
+`tests/test_directed.py` pins the directed stack against the directed
+BFS oracle, but only on the jnp reference path. This module pins the
+*backend dispatch*: construction, batch update, and directed queries
+driven through per-orientation `RelaxPlan`s (the forward arc table and
+its reversal are distinct topologies to the tiler) must be bit-identical
+to the jnp run, with an oracle spot-check on the answers. Deterministic
+and hypothesis-free, so it runs in the fast job and on bare checkouts.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.graphs.coo import make_batch, INF_D
+from repro.core import ref
+from repro.core.directed import (apply_batch_directed,
+                                 batchhl_update_directed,
+                                 build_directed_labelling, directed_query,
+                                 from_arcs)
+from repro.core.engine import RelaxEngine
+
+
+def _digraph(seed=0, n=40, extra=50):
+    rng = np.random.default_rng(seed)
+    arcs = set()
+    for v in range(1, n):  # weakly-connected backbone
+        u = int(rng.integers(v))
+        arcs.add((u, v) if rng.random() < 0.7 else (v, u))
+    while len(arcs) < n - 1 + extra:
+        u, v = int(rng.integers(n)), int(rng.integers(n))
+        if u != v:
+            arcs.add((u, v))
+    return np.asarray(sorted(arcs), np.int32), n, rng
+
+
+def _adj_out(g):
+    adj = {v: set() for v in range(g.n)}
+    for s, d, ok in zip(np.asarray(g.src), np.asarray(g.dst),
+                        np.asarray(g.valid)):
+        if ok:
+            adj[int(s)].add(int(d))
+    return adj
+
+
+def _plans(g, block_v=16):
+    """One engine per orientation: fwd and rev are distinct topologies,
+    each with its own tiling/fingerprint."""
+    ef = RelaxEngine(backend="pallas", block_v=block_v)
+    eb = RelaxEngine(backend="pallas", block_v=block_v)
+    return ef.prepare(g.fwd()), eb.prepare(g.rev())
+
+
+def _assert_directed_equal(a, b):
+    for plane in ("fwd", "bwd"):
+        for f in ("dist", "hub", "highway"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(getattr(a, plane), f)),
+                np.asarray(getattr(getattr(b, plane), f)),
+                err_msg=f"{plane}.{f}")
+
+
+def test_directed_construction_backend_parity():
+    arcs, n, _ = _digraph()
+    g = from_arcs(n, arcs, arcs.shape[0] + 8)
+    lms = jnp.asarray([0, 5, 9], jnp.int32)
+    pf, pb = _plans(g)
+    _assert_directed_equal(build_directed_labelling(g, lms),
+                           build_directed_labelling(g, lms, pf, pb))
+
+
+def test_directed_update_and_query_backend_parity():
+    arcs, n, rng = _digraph(seed=1)
+    g = from_arcs(n, arcs, arcs.shape[0] + 8)
+    lms = jnp.asarray([0, 3, 7], jnp.int32)
+    lab = build_directed_labelling(g, lms)
+
+    ups = [(int(arcs[3, 0]), int(arcs[3, 1]), True),
+           (int(arcs[11, 0]), int(arcs[11, 1]), True),
+           (7, 31, False), (22, 2, False), (15, 33, False)]
+    batch = make_batch(ups, pad_to=len(ups) + 1)
+    # Plans from the post-update snapshot, one per orientation.
+    g2 = apply_batch_directed(g, batch)
+    pf2, pb2 = _plans(g2)
+
+    gj, lab_j, aff_j = batchhl_update_directed(g, batch, lab)
+    gp, lab_p, aff_p = batchhl_update_directed(g, batch, lab, pf2, pb2)
+    np.testing.assert_array_equal(np.asarray(aff_j), np.asarray(aff_p))
+    _assert_directed_equal(lab_j, lab_p)
+
+    qs = jnp.asarray(rng.integers(0, n, 24), jnp.int32)
+    qt = jnp.asarray(rng.integers(0, n, 24), jnp.int32)
+    d_j = directed_query(gj, lab_j, qs, qt)
+    d_p = directed_query(gp, lab_p, qs, qt, plan_fwd=pf2, plan_bwd=pb2)
+    np.testing.assert_array_equal(np.asarray(d_j), np.asarray(d_p))
+
+    adj = _adj_out(gj)
+    for k in range(24):
+        want = ref.bfs_dist_directed(adj, n, int(qs[k]))[int(qt[k])]
+        want = 0 if int(qs[k]) == int(qt[k]) else want
+        want = int(INF_D) if want == ref.INF else int(want)
+        assert int(d_j[k]) == want, (int(qs[k]), int(qt[k]))

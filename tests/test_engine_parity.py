@@ -318,6 +318,54 @@ def test_engine_prepare_catches_stale_cache():
     assert engine.stale_cache_retiles == 2
 
 
+def test_fingerprint_distinguishes_slot_layouts():
+    """Regression (found by the batch-split property test): whole-batch
+    vs split-batch application ends with the same edge multiset in
+    *different slot layouts*. A slot-position-insensitive checksum keys
+    them to the same cached tiling, whose embedded slot permutation then
+    re-tiles the wrong graph's validity mask — distances go to INF. The
+    fingerprint must differ whenever slot layout differs."""
+    n, n_ins, n_del = 18, 3, 2
+    edges = gen.random_connected(n, extra_edges=n // 2, seed=0)
+    g = from_edges(n, edges, edges.shape[0] + 16)
+    ups = gen.random_batch_updates(edges, n, n_ins=n_ins, n_del=n_del,
+                                   seed=3)
+    g_whole = apply_batch(g, make_batch(ups, pad_to=len(ups)))
+    j = len(ups) // 2
+    g_split = apply_batch(apply_batch(g, make_batch(ups[:j], pad_to=j)),
+                          make_batch(ups[j:], pad_to=len(ups) - j))
+    # Same edge set, different slot layout (the collision precondition).
+    assert to_numpy_adj(g_whole) == to_numpy_adj(g_split)
+    assert not np.array_equal(np.asarray(g_whole.src),
+                              np.asarray(g_split.src))
+    fp_w = RelaxEngine._snapshot_fingerprint(g_whole)
+    fp_s = RelaxEngine._snapshot_fingerprint(g_split)
+    assert fp_w != fp_s
+
+    # Behavioral pin: preparing both layouts through ONE engine (shared
+    # plan cache) must yield jnp-identical updates for each.
+    landmarks = select_landmarks_by_degree(g, 3)
+    lab = build_labelling(g, landmarks)
+    engine = RelaxEngine(backend="pallas", block_v=16)
+    batch_w = make_batch(ups, pad_to=len(ups))
+    plan_w = engine.prepare(g_whole)
+    ups_b = ups[j:]
+    batch_a = make_batch(ups[:j], pad_to=j)
+    g_a = apply_batch(g, batch_a)
+    plan_a = engine.prepare(g_a)
+    _, lab_a, _ = batchhl_update(g, batch_a, lab, plan=plan_a, g_new=g_a)
+    plan_s = engine.prepare(g_split)
+    batch_b = make_batch(ups_b, pad_to=len(ups_b))
+    _, lab_s, _ = batchhl_update(g_a, batch_b, lab_a, plan=plan_s,
+                                 g_new=g_split)
+    _, lab_w, _ = batchhl_update(g, batch_w, lab, plan=plan_w,
+                                 g_new=g_whole)
+    np.testing.assert_array_equal(np.asarray(lab_s.dist),
+                                  np.asarray(lab_w.dist))
+    np.testing.assert_array_equal(np.asarray(lab_s.hub),
+                                  np.asarray(lab_w.hub))
+
+
 def test_engine_backend_validation():
     with pytest.raises(ValueError):
         RelaxEngine(backend="cuda")

@@ -1,0 +1,344 @@
+"""Grow-in-place capacity management (DESIGN.md §6).
+
+Fast tests pin the primitives: typed `CapacityError` surfacing at every
+pre-growth call-site (instead of a shape error from inside jit), the
+grow/grow_labelling shape semantics, the policy's geometric + aligned
+steps, growth forcing a clean engine retile, and grown state
+round-tripping through the full-state checkpoint.
+
+Slow tests pin the acceptance contract: a `growth`-scenario serve run
+starting at 1/4 of its final capacity completes with zero dropped
+queries and a post-growth labelling bit-identical to fresh construction
+at the final grown size — in-process on the 1-device mesh for both
+backends, and via the `python -m repro.core.growth` selftest subprocess
+on a forced 8-device host platform (every mesh factorization × both
+backends). The differential soak drives a 50-tick random mixed stream —
+across two capacity growths and one vertex growth — checking every
+tick's full distance matrix against the BFS oracle.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.graphs import generators as gen
+from repro.graphs.coo import (CapacityError, apply_batch,
+                              batch_requirements, from_edges, grow,
+                              make_batch, to_numpy_adj, INF_D)
+from repro.core.batch import batchhl_update
+from repro.core.construct import build_labelling, select_landmarks_by_degree
+from repro.core.engine import RelaxEngine
+from repro.core.growth import GrowthPolicy, ensure_capacity
+from repro.core.labelling import grow_labelling
+from repro.core.query import batched_query
+from repro.core.snapshot import (Snapshot, grow_snapshot, restore_snapshot,
+                                 save_snapshot)
+from repro.core import ref
+from repro.kernels.edge_relax.kernel import aligned_vertex_count
+from repro.launch.serve import ServeConfig, ServeLoop
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _instance(n=40, extra=20, seed=5, r=4, slack=2):
+    edges = gen.random_connected(n, extra_edges=extra, seed=seed)
+    g = from_edges(n, edges, edges.shape[0] + slack)
+    landmarks = select_landmarks_by_degree(g, r)
+    return edges, g, landmarks, build_labelling(g, landmarks)
+
+
+def _assert_labellings_equal(a, b):
+    for f in ("dist", "hub", "highway"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)))
+
+
+# --- typed overflow errors --------------------------------------------------
+
+def test_from_edges_raises_capacity_error():
+    edges = np.array([[0, 1], [1, 2], [2, 3]], np.int32)
+    with pytest.raises(CapacityError, match="exceed capacity") as e:
+        from_edges(4, edges, 2)
+    assert isinstance(e.value, ValueError)  # typed, still a ValueError
+    assert e.value.required_capacity == 3 and e.value.capacity == 2
+
+
+def test_ensure_capacity_raises_with_tick_and_requirements():
+    _, g, _, lab = _instance()
+    snap = Snapshot(0, g, lab, None)
+    batch = make_batch([(0, 1, True), (2, 39, False), (3, 38, False),
+                        (4, 37, False), (5, 36, False)], pad_to=5)
+    req_cap, req_n = batch_requirements(g, batch)
+    # exact: 4 insertions minus the one pair freed by deleting edge (0, 1),
+    # one more than the graph's 2 free pairs
+    assert req_cap == int(jnp.sum(g.valid)) // 2 + 3 and req_n == 40
+    assert req_cap == g.capacity + 1
+    with pytest.raises(CapacityError, match="tick 11") as e:
+        ensure_capacity(snap, batch, GrowthPolicy(), grow=False, tick=11)
+    assert e.value.tick == 11
+    assert e.value.required_capacity == req_cap
+    assert e.value.capacity == g.capacity
+
+
+def test_serve_loop_surfaces_capacity_error():
+    """The serve-loop call-site raises the typed error naming the batch
+    tick — before any device dispatch, not a jit shape error."""
+    cfg = ServeConfig(n=60, deg=1, landmarks=4, batches=3, batch_size=30,
+                      scenario="growth", capacity=64, grow=False,
+                      queries=4, qps=1e6, microbatch=4, quiet=True)
+    with pytest.raises(CapacityError, match="tick 0") as e:
+        ServeLoop(cfg).run()
+    assert e.value.tick == 0 and e.value.required_capacity > 64
+
+
+def test_full_capacity_churn_batch_is_not_rejected():
+    """Exactness of the requirement: at zero free pairs, a batch whose
+    deletions free exactly the pairs its insertions need must pass the
+    grow=False check (deletions are applied first), not be rejected by a
+    deletions-blind over-count."""
+    edges, g, _, lab = _instance(slack=0)        # capacity == edge count
+    n = g.n
+    d0 = (int(edges[0][0]), int(edges[0][1]))
+    d1 = (int(edges[1][0]), int(edges[1][1]))
+    have = {(min(u, v), max(u, v)) for u, v in edges}
+    fresh = [(u, v) for u in range(n) for v in range(u + 1, n)
+             if (u, v) not in have][:2]
+    batch = make_batch([(d0[0], d0[1], True), (d1[0], d1[1], True),
+                        (fresh[0][0], fresh[0][1], False),
+                        (fresh[1][0], fresh[1][1], False)], pad_to=4)
+    req_cap, _ = batch_requirements(g, batch)
+    assert req_cap == g.capacity                 # fits exactly
+    snap, event = ensure_capacity(Snapshot(0, g, lab, None), batch,
+                                  GrowthPolicy(), grow=False, tick=0)
+    assert event is None and snap.graph is g
+    g2 = apply_batch(g, batch)
+    assert to_numpy_adj(g2) == ref.apply_updates(
+        to_numpy_adj(g), [(d0[0], d0[1], True), (d1[0], d1[1], True),
+                          (fresh[0][0], fresh[0][1], False),
+                          (fresh[1][0], fresh[1][1], False)])
+
+
+def test_update_shape_guard_names_growth():
+    """A grown graph with un-grown planes fails at trace time with an
+    error that names the growth helpers, not a gather shape error."""
+    _, g, _, lab = _instance()
+    g_big = grow(g, n=48)
+    batch = make_batch([(0, 1, True)], pad_to=1)
+    with pytest.raises(ValueError, match="grow them together"):
+        batchhl_update(g_big, batch, lab)
+
+
+# --- growth primitives ------------------------------------------------------
+
+def test_grow_preserves_graph_and_widens_labelling():
+    edges, g, landmarks, lab = _instance()
+    g2 = grow(g, capacity=g.capacity + 40, n=g.n + 24)
+    assert g2.capacity == g.capacity + 40 and g2.n == g.n + 24
+    assert to_numpy_adj(g2) == {**to_numpy_adj(g),
+                                **{v: set() for v in range(g.n, g2.n)}}
+    lab2 = grow_labelling(lab, g2.n)
+    assert lab2.dist.shape == (4, g2.n)
+    np.testing.assert_array_equal(np.asarray(lab2.dist[:, :g.n]),
+                                  np.asarray(lab.dist))
+    assert np.all(np.asarray(lab2.dist[:, g.n:]) == int(INF_D))
+    assert not np.any(np.asarray(lab2.hub[:, g.n:]))
+    # grown == fresh construction at the grown size, bit for bit
+    fresh = build_labelling(g2, landmarks)
+    _assert_labellings_equal(lab2, fresh)
+    with pytest.raises(ValueError, match="shrink"):
+        grow(g2, capacity=g.capacity)
+    with pytest.raises(ValueError, match="shrink"):
+        grow_labelling(lab2, g.n)
+
+
+def test_growth_policy_geometric_and_aligned():
+    pol = GrowthPolicy(block_v=64, shards=2, capacity_align=64)
+    # geometric: at least ×2 even when the requirement barely overflows
+    assert pol.next_capacity(100, 101) == 256  # ceil(200/64)*64
+    # requirement dominates when it outruns the geometric step
+    assert pol.next_capacity(100, 1000) == 1024
+    assert pol.next_n(100, 101) == 256          # align 128: ceil(200)→256
+    assert pol.next_n(100, 999) == 1024
+    assert aligned_vertex_count(1, 64, 2) == 128
+    assert aligned_vertex_count(128, 64, 2) == 128
+    assert aligned_vertex_count(129, 64, 2) == 256
+    with pytest.raises(ValueError):
+        aligned_vertex_count(0, 64, 2)
+    with pytest.raises(ValueError):
+        GrowthPolicy(factor=1.0)
+
+
+def test_ensure_capacity_grows_and_update_matches_fresh():
+    """Capacity + vertex growth in one batch; post-update labelling is
+    bit-identical to fresh construction at the grown size, on both
+    backends through one shared engine (growth = clean retile)."""
+    edges, g, landmarks, lab = _instance()
+    n = g.n
+    ups = gen.random_batch_updates(edges, n, n_ins=3, n_del=1, seed=7)
+    ups += [(1, n, False), (n, n + 1, False)]    # two brand-new vertices
+    batch = make_batch(ups, pad_to=len(ups))
+    snap, event = ensure_capacity(Snapshot(0, g, lab, None), batch,
+                                  GrowthPolicy(block_v=16, shards=2),
+                                  tick=4)
+    assert event is not None and event.tick == 4
+    assert snap.version == 0                     # same version: same graph
+    assert snap.graph.n == 96 and snap.graph.n % 32 == 0
+    assert snap.graph.capacity >= event.required_capacity
+
+    engine = RelaxEngine(backend="pallas", block_v=16, shards=2)
+    plan_pre = engine.prepare(g)
+    g_next = apply_batch(snap.graph, batch)
+    plan = engine.prepare(g_next)
+    assert engine.retile_count == 2              # grown fp ≠ pre-growth fp
+    gj, labj, affj = batchhl_update(snap.graph, batch, snap.labelling)
+    gp, labp, affp = batchhl_update(snap.graph, batch, snap.labelling,
+                                    plan=plan, g_new=g_next)
+    np.testing.assert_array_equal(np.asarray(affj), np.asarray(affp))
+    _assert_labellings_equal(labj, labp)
+    fresh_edges = np.asarray(
+        sorted({(min(u, v), max(u, v))
+                for u, adjs in to_numpy_adj(gj).items() for v in adjs}),
+        np.int32)
+    fresh = build_labelling(from_edges(gj.n, fresh_edges, gj.capacity),
+                            landmarks)
+    _assert_labellings_equal(labj, fresh)
+
+
+def test_grown_state_checkpoint_roundtrip(tmp_path):
+    """Grown shapes (capacity and n) survive save → restore bit-exactly;
+    the restore is self-describing, no template needed."""
+    edges, g, landmarks, lab = _instance()
+    snap = grow_snapshot(Snapshot(3, g, lab, None), capacity=g.capacity * 3,
+                         n=g.n + 16)
+    batch = make_batch([(0, g.n + 5, False)], pad_to=1)
+    g2, lab2, _ = batchhl_update(snap.graph, batch, snap.labelling)
+    save_snapshot(str(tmp_path / "ck"), Snapshot(4, g2, lab2, None))
+    back = restore_snapshot(str(tmp_path / "ck"))
+    assert back.version == 4
+    assert back.graph.capacity == g.capacity * 3
+    assert back.graph.n == g.n + 16
+    for f in ("src", "dst", "valid"):
+        np.testing.assert_array_equal(np.asarray(getattr(back.graph, f)),
+                                      np.asarray(getattr(g2, f)))
+    _assert_labellings_equal(back.labelling, lab2)
+
+
+def test_resume_rejects_foreign_config_checkpoint(tmp_path):
+    """A grown checkpoint resumes under its own config (base_n matches),
+    but a checkpoint from a different-n run is rejected even when its
+    graph is large enough to 'fit' — grown n alone cannot tell the two
+    apart, so the base n rides along in the checkpoint."""
+    base = dict(deg=1, landmarks=4, batches=2, batch_size=40,
+                scenario="growth", capacity=96, grow=True, queries=4,
+                qps=1e6, microbatch=4, quiet=True)
+    ck = str(tmp_path / "ck")
+    rep = ServeLoop(ServeConfig(n=80, **base, ckpt_dir=ck)).run()
+    assert len(rep.growth) >= 1                  # the checkpoint is grown
+    # same config resumes (idempotent here: stream already finished)
+    resumed = ServeLoop(ServeConfig(n=80, **base, ckpt_dir=ck,
+                                    resume=True)).run()
+    assert resumed.final.version == rep.final.version
+    with pytest.raises(ValueError, match="n=80"):
+        ServeLoop(ServeConfig(n=60, **base, ckpt_dir=ck,
+                              resume=True)).run()
+
+
+# --- acceptance: growth-scenario serve runs (1/4 final capacity) ------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_growth_scenario_fresh_construction_parity(backend):
+    """A `growth` run starting at 1/4 of its final capacity (128 → 512
+    over two geometric growths) serves every query, keeps the pipeline's
+    staleness ≤ 1, and ends bit-identical to fresh construction at the
+    final grown size."""
+    cfg = ServeConfig(n=120, deg=1, landmarks=8, batches=4, batch_size=45,
+                      scenario="growth", capacity=128, grow=True,
+                      queries=16, qps=5000.0, microbatch=8, pipeline=True,
+                      backend=backend, block_v=64, tile_shards=2,
+                      quiet=True)
+    loop = ServeLoop(cfg)
+    rep = loop.run()
+    # zero dropped queries: every arrival of every tick was answered
+    assert sum(t.queries for t in rep.ticks) == cfg.batches * cfg.queries
+    assert all(m.staleness <= 1 for m in rep.microbatches)
+    assert len(rep.growth) >= 2
+    final = rep.final
+    assert final.graph.capacity == 4 * 128
+    fresh_g = from_edges(final.graph.n,
+                         np.asarray(loop._edge_list, np.int32),
+                         final.graph.capacity)
+    assert to_numpy_adj(fresh_g) == to_numpy_adj(final.graph)
+    fresh_lab = build_labelling(fresh_g, final.labelling.landmarks)
+    _assert_labellings_equal(final.labelling, fresh_lab)
+
+
+@pytest.mark.slow
+def test_growth_selftest_multidevice():
+    """The forced-8-device acceptance leg: grown-update bit-parity on
+    every mesh factorization × both backends, plus the mesh growth serve
+    runs with fresh-construction parity (python -m repro.core.growth)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.core.growth"],
+        env=env, cwd=REPO, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "growth selftest OK on 8 device(s)" in out.stdout, out.stdout
+
+
+# --- differential soak: 50 ticks vs the BFS oracle --------------------------
+
+@pytest.mark.slow
+def test_differential_soak_50_ticks_with_growth():
+    """50-tick random mixed stream; every tick's FULL distance matrix is
+    checked against the BFS oracle, across >= 2 capacity growths and one
+    vertex growth (tick 12 wires in a brand-new vertex)."""
+    n0, r = 40, 4
+    edges = gen.random_connected(n0, extra_edges=20, seed=5)
+    g = from_edges(n0, edges, 64)              # barely above the seed edges
+    landmarks = select_landmarks_by_degree(g, r)
+    lab = build_labelling(g, landmarks)
+    snap = Snapshot(0, g, lab, None)
+    policy = GrowthPolicy(block_v=8, shards=1)
+    cur = {(min(int(u), int(v)), max(int(u), int(v))) for u, v in edges}
+    cap_growths = n_growths = 0
+    for tick in range(50):
+        cur_arr = np.asarray(sorted(cur), np.int32)
+        ups = gen.random_batch_updates(cur_arr, snap.graph.n, n_ins=4,
+                                       n_del=2, seed=1000 + tick)
+        if tick == 12:  # vertex growth: attach a brand-new vertex id >= n
+            ups.append((0, snap.graph.n, False))
+        batch = make_batch(ups, pad_to=8)
+        snap, event = ensure_capacity(snap, batch, policy, tick=tick)
+        if event is not None:
+            cap_growths += event.new_capacity > event.old_capacity
+            n_growths += event.new_n > event.old_n
+        g2, lab2, _ = batchhl_update(snap.graph, batch, snap.labelling)
+        snap = Snapshot(snap.version + 1, g2, lab2, None)
+        for u, v, is_del in ups:
+            k = (min(u, v), max(u, v))
+            cur.discard(k) if is_del else cur.add(k)
+
+        nn = g2.n
+        qs, qt = np.meshgrid(np.arange(nn, dtype=np.int32),
+                             np.arange(nn, dtype=np.int32), indexing="ij")
+        got = np.asarray(batched_query(g2, lab2, jnp.asarray(qs.ravel()),
+                                       jnp.asarray(qt.ravel())),
+                         np.int64).reshape(nn, nn)
+        adj = to_numpy_adj(g2)
+        for s in range(nn):
+            d = ref.bfs_dist(adj, nn, s)
+            want = np.asarray([int(INF_D) if x == ref.INF else int(x)
+                               for x in d], np.int64)
+            np.testing.assert_array_equal(got[s], want,
+                                          err_msg=f"tick {tick} src {s}")
+    assert cap_growths >= 2, cap_growths
+    assert n_growths >= 1, n_growths

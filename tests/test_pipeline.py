@@ -244,7 +244,9 @@ def test_engine_plan_cache_keeps_two_snapshots():
 
 def test_scenario_registry():
     assert set(SCENARIOS) == {"mixed", "insert-heavy", "delete-heavy",
-                              "bursty", "skewed"}
+                              "bursty", "skewed", "growth"}
+    ins, dele = get_scenario("growth").update_counts(0, 100)
+    assert ins == 100 and dele == 0  # pure insertions: only-ever-grows
     with pytest.raises(ValueError, match="unknown scenario"):
         get_scenario("nope")
     ins, dele = get_scenario("insert-heavy").update_counts(0, 100)

@@ -1,0 +1,133 @@
+"""Property-based metamorphic suite for served distances and updates.
+
+Three families of invariants, each pinned on BOTH engine backends (the
+jnp segment-min reference and the interpret-mode Pallas kernel):
+
+  * metric laws of served distances — symmetry d(s,t) = d(t,s) and the
+    triangle inequality d(s,t) <= d(s,u) + d(u,t);
+  * insert∘delete round-trip — updating with a batch of fresh edges and
+    then deleting them restores the labelling bit-for-bit (the labelling
+    is canonical per graph, so round-tripping the graph round-trips it);
+  * batch-split invariance — one batch applied whole equals the same
+    updates applied as two sequential chunks (bit-equal planes).
+
+Unlike the slow-marked oracle suites, this module is sized for the fast
+CI job (`-m "not slow"`): tiny graphs, few examples — the point is the
+metamorphic relations, which need no oracle and catch a different class
+of bug (asymmetric state, slot-layout leakage into answers, batch-size
+dependence) than pointwise BFS checks do.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep; bare checkouts skip
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.graphs import generators as gen
+from repro.graphs.coo import apply_batch, from_edges, make_batch, to_numpy_adj
+from repro.core.batch import batchhl_update
+from repro.core.construct import build_labelling, select_landmarks_by_degree
+from repro.core.engine import RelaxEngine
+from repro.core.query import batched_query
+
+SETTINGS = dict(deadline=None, max_examples=8,
+                suppress_health_check=[HealthCheck.too_slow,
+                                       HealthCheck.differing_executors])
+BACKENDS = ("jnp", "pallas")
+
+
+def _engine(backend: str) -> RelaxEngine | None:
+    return None if backend == "jnp" else RelaxEngine(backend="pallas",
+                                                     block_v=16)
+
+
+def _build(n: int, seed: int, backend: str, slack: int = 16):
+    edges = gen.random_connected(n, extra_edges=n // 2, seed=seed)
+    g = from_edges(n, edges, edges.shape[0] + slack)
+    landmarks = select_landmarks_by_degree(g, 3)
+    engine = _engine(backend)
+    plan = engine.prepare(g) if engine else None
+    lab = build_labelling(g, landmarks, plan=plan)
+    return g, lab, edges, engine, plan
+
+
+def _update(g, lab, ups, engine, pad_to=None):
+    """One engine-routed BatchHL tick (plan prepared post-update)."""
+    batch = make_batch(ups, pad_to=pad_to or max(len(ups), 1))
+    if not ups:  # all-padding batch: a no-op update
+        batch = batch.__class__(batch.src, batch.dst, batch.is_del,
+                                jnp.zeros_like(batch.valid))
+    g_next = apply_batch(g, batch)
+    plan = engine.prepare(g_next) if engine else None
+    g2, lab2, _ = batchhl_update(g, batch, lab, plan=plan, g_new=g_next)
+    return g2, lab2, plan
+
+
+def _assert_labellings_equal(a, b):
+    for f in ("dist", "hub", "highway"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)))
+
+
+# --- metric laws of served distances ---------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 26))
+def test_served_distances_symmetric_and_triangle(backend, seed, n):
+    g, lab, _, _, plan = _build(n, seed, backend)
+    rng = np.random.default_rng(seed + 1)
+    s, t, u = (jnp.asarray(rng.integers(0, n, 16), jnp.int32)
+               for _ in range(3))
+    d_st = np.asarray(batched_query(g, lab, s, t, plan=plan), np.int64)
+    d_ts = np.asarray(batched_query(g, lab, t, s, plan=plan), np.int64)
+    np.testing.assert_array_equal(d_st, d_ts)
+    d_su = np.asarray(batched_query(g, lab, s, u, plan=plan), np.int64)
+    d_ut = np.asarray(batched_query(g, lab, u, t, plan=plan), np.int64)
+    assert np.all(d_st <= d_su + d_ut), (d_st, d_su, d_ut)
+
+
+# --- insert∘delete round-trip ----------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 24),
+       k=st.integers(1, 5))
+def test_insert_then_delete_restores_labelling(backend, seed, n, k):
+    g, lab0, edges, engine, _ = _build(n, seed, backend)
+    rng = np.random.default_rng(seed + 2)
+    existing = {(min(int(u), int(v)), max(int(u), int(v))) for u, v in edges}
+    fresh = []
+    while len(fresh) < k:
+        u, v = int(rng.integers(n)), int(rng.integers(n))
+        key = (min(u, v), max(u, v))
+        if u != v and key not in existing:
+            existing.add(key)
+            fresh.append((u, v))
+    g1, lab1, _ = _update(g, lab0, [(u, v, False) for u, v in fresh], engine)
+    g2, lab2, _ = _update(g1, lab1, [(u, v, True) for u, v in fresh], engine)
+    assert to_numpy_adj(g2) == to_numpy_adj(g)
+    # The labelling is canonical per graph: round-tripping the edge set
+    # round-trips every plane bit-for-bit (== the fresh construction).
+    _assert_labellings_equal(lab2, lab0)
+
+
+# --- batch-split invariance ------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 24),
+       n_ins=st.integers(1, 4), n_del=st.integers(0, 3))
+def test_batch_split_invariance(backend, seed, n, n_ins, n_del):
+    g, lab0, edges, engine, _ = _build(n, seed, backend)
+    ups = gen.random_batch_updates(edges, n, n_ins=n_ins, n_del=n_del,
+                                   seed=seed + 3)
+    g_whole, lab_whole, _ = _update(g, lab0, ups, engine)
+    j = len(ups) // 2
+    g_a, lab_a, _ = _update(g, lab0, ups[:j], engine)
+    g_b, lab_b, _ = _update(g_a, lab_a, ups[j:], engine)
+    assert to_numpy_adj(g_b) == to_numpy_adj(g_whole)
+    _assert_labellings_equal(lab_b, lab_whole)
