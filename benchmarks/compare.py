@@ -7,8 +7,9 @@ Compares candidate rows against the committed baseline by name and fails
 (exit 1) when any gated latency regresses more than --max-regression, or
 when a baseline row vanished from the candidate (coverage loss counts as
 a regression). Only rows matching --prefix (comma-separated; default
-``ticks/,serve/`` — the tick trajectory *and* the serving-pipeline
-query-latency percentiles), above --min-us, and not ending in
+``ticks/,serve/,tune/`` — the tick trajectory, the serving-pipeline
+query-latency percentiles, *and* the autotuner's jnp-vs-tuned sweep
+rows), above --min-us, and not ending in
 --skip-suffix (default ``/construct`` —
 one-shot measurements dominated by trace/compile variance) are gated:
 sub-millisecond rows on shared CI runners are noise, and the paper-table
@@ -52,7 +53,7 @@ def main() -> None:
     ap.add_argument("candidate")
     ap.add_argument("--max-regression", type=float, default=0.25,
                     help="fail when cand/base - 1 exceeds this (default .25)")
-    ap.add_argument("--prefix", default="ticks/,serve/",
+    ap.add_argument("--prefix", default="ticks/,serve/,tune/",
                     help="gate only rows whose name starts with one of "
                          "these comma-separated prefixes")
     ap.add_argument("--skip-suffix", default="/construct",

@@ -30,6 +30,18 @@ lands on a steady-state tick: the q percentiles price serving *through*
 the growth retrace/retile, and the row's `derived` field records the
 growth count and capacity trajectory.
 
+PR 6 adds the autotuner trajectory (DESIGN.md §7): the pallas tick and
+serve rows run with ``autotune=True`` (the engine measures its candidate
+configs once per snapshot shape and serves the winner — the winning impl
+is recorded in each row's ``derived``), pipelined serve rows run the
+fused megakernel chunks, and three new row families pin the jnp-vs-tuned
+comparison directly:
+
+    tune/<dataset>/jnp      reference sweep, steady min-of-k
+    tune/<dataset>/pallas   tuned winner, same wave, same stat
+    tune/crossover          telemetry: smallest benched vertex count
+                            where the tuned config won (unit=vertices)
+
 Rows follow the ``name,us_per_call,derived`` contract of benchmarks/run.py;
 ``python -m benchmarks.run --preset quick --json BENCH_pr5.json`` persists
 them in the bench-trajectory JSON format that `benchmarks/compare.py`
@@ -68,10 +80,11 @@ SERVE_DATASETS = {"ba_2k"}
 
 def _tick_loop(name: str, g0, landmarks, edges, backend: str, mesh,
                ticks: int, batch_size: int, queries: int,
-               block_v: int, tile_shards: int) -> list[str]:
+               block_v: int, tile_shards: int,
+               autotune: bool = False) -> list[str]:
     n = g0.n
     engine = RelaxEngine(backend=backend, block_v=block_v,
-                         shards=tile_shards)
+                         shards=tile_shards, autotune=autotune)
     plan = engine.prepare(g0)
 
     t0 = time.time()
@@ -130,17 +143,48 @@ def _tick_loop(name: str, g0, landmarks, edges, backend: str, mesh,
     warm = 2 if ticks > 2 else 1 if ticks > 1 else 0
     steady_upd = t_upd[warm:]
     steady_q = t_q[warm:]
+    impl = plan.impl if plan is not None and plan.backend == "pallas" \
+        else backend
     rows.append(emit(f"{name}/update", float(np.min(steady_upd)),
-                     f"stat=min;ticks={ticks};batch={batch_size}"))
+                     f"stat=min;ticks={ticks};batch={batch_size};"
+                     f"impl={impl}"))
     rows.append(emit(f"{name}/query", float(np.min(steady_q)),
-                     f"stat=min;ticks={ticks};B={queries}"))
+                     f"stat=min;ticks={ticks};B={queries};impl={impl}"))
     return rows
+
+
+def _tune_rows(ds: str, g, tile_shards: int, block_v: int) -> list[str]:
+    """The `tune/` rows: one autotuner measurement per dataset shape.
+
+    `tune/<ds>/jnp` is the reference wave's steady latency and
+    `tune/<ds>/pallas` the tuned winner's (both min-of-k after warmup —
+    `autotune.measure_compiled`), so the pair *is* the jnp-vs-tuned
+    comparison the PR-6 acceptance reads. The crossover — smallest
+    benched vertex count where the tuned config wins — is recorded in
+    the `derived` field of `tune/crossover` (its value is the vertex
+    count, unit=vertices: telemetry like the staleness rows, sub-min-us
+    by construction so the compare gate never flakes on it moving).
+    """
+    from repro.core import autotune as at
+
+    res = at.tune(g, shards=tile_shards, block_v=block_v, iters=5)
+    cfg = res.config
+    speed = res.jnp_us / res.steady_us if res.steady_us else float("inf")
+    info = f"R=8;cap={g.src.shape[0]};stat=min"
+    rows = [emit(f"tune/{ds}/jnp", res.jnp_us / 1e6, info),
+            emit(f"tune/{ds}/pallas", res.steady_us / 1e6,
+                 f"impl={cfg.impl};block_v={cfg.block_v};"
+                 f"block_e={cfg.block_e};tile_shards={cfg.tile_shards};"
+                 f"compile_us={res.compile_us:.1f};speedup={speed:.2f}x;"
+                 f"stat=min")]
+    return rows, speed
 
 
 def _serve_loop(name: str, n: int, deg: int, backend: str, mode: str,
                 ticks: int, batch_size: int, queries: int, landmarks: int,
                 block_v: int, tile_shards: int, qps: float,
-                microbatch: int, capacity: int | None = None) -> list[str]:
+                microbatch: int, capacity: int | None = None,
+                autotune: bool = False, fused: bool = False) -> list[str]:
     """One ServeLoop run → the serve/ percentile + staleness rows.
 
     Percentiles are computed over the steady-state ticks only (the same
@@ -158,7 +202,8 @@ def _serve_loop(name: str, n: int, deg: int, backend: str, mode: str,
                       scenario="growth" if mode == "growth" else "mixed",
                       capacity=capacity, grow=(mode == "growth"),
                       backend=backend, block_v=block_v,
-                      tile_shards=tile_shards, quiet=True)
+                      tile_shards=tile_shards, autotune=autotune,
+                      fused=fused, quiet=True)
     rep = ServeLoop(cfg).run()
     warm = 2 if ticks > 2 else 1 if ticks > 1 else 0
     mbs = [m for m in rep.microbatches if m.tick >= warm]
@@ -188,18 +233,37 @@ def run(datasets=("ba_2k",), backends=("jnp", "pallas"),
         tile_shards: int = 2, serve_modes=("sync", "pipeline"),
         qps: float = 2000.0, microbatch: int = 32) -> list[str]:
     rows = []
+    crossover = None
     for ds in datasets:
         edges = DATASETS[ds]()
         n = int(edges.max()) + 1
         cap = edges.shape[0] + ticks * batch_size + 64
         g0 = from_edges(n, edges, cap)
         lms = select_landmarks_by_degree(g0, landmarks)
+        # The jnp-vs-tuned sweep comparison at this exact bench shape
+        # (capacity slack included — that slack is where the tuned
+        # sorted impl's win comes from), plus crossover bookkeeping.
+        trows, speedup = _tune_rows(ds, g0, tile_shards, block_v)
+        rows += trows
+        if speedup > 1.0 and (crossover is None or n < crossover):
+            crossover = n
         for backend in backends:
             for mesh_name in meshes:
                 mesh = make_host_mesh() if mesh_name == "host" else None
+                # pallas rows run autotuned: the row tracks the best
+                # config the tuner finds on this runner, not a fixed
+                # hand-picked tiling (impl lands in `derived`).
                 rows += _tick_loop(f"ticks/{ds}/{backend}/{mesh_name}",
                                    g0, lms, edges, backend, mesh, ticks,
-                                   batch_size, queries, block_v, tile_shards)
+                                   batch_size, queries, block_v,
+                                   tile_shards,
+                                   autotune=(backend == "pallas"))
+    # Telemetry, not a latency: smallest benched vertex count where the
+    # tuned pallas config beat the jnp reference (0 = none did).
+    row = (f"tune/crossover,{crossover or 0},unit=vertices;"
+           f"datasets={'+'.join(datasets)}")
+    print(row)
+    rows.append(row)
     # The serving-pipeline trajectory: unsharded sync vs pipeline per
     # backend (the mesh × pipeline composition is smoke-tested by the CI
     # `mesh` job; benching it here would double the preset's runtime),
@@ -214,15 +278,25 @@ def run(datasets=("ba_2k",), backends=("jnp", "pallas"),
         e0 = DATASETS[ds]().shape[0]
         for backend in backends:
             for mode in serve_modes:
+                # pallas serve rows run autotuned, and the pipelined mode
+                # uses the fused megakernel chunks (sync updates are the
+                # monolithic dispatch — nothing to fuse). The growth row
+                # stays untuned: a re-tune fires inside every growth
+                # event (capacity changes the table key), and putting
+                # tuner compiles on the serving path would make the row
+                # track compile noise instead of the growth cost.
                 rows += _serve_loop(f"serve/{ds}/{backend}/{mode}", n, deg,
                                     backend, mode, ticks, batch_size,
                                     queries, landmarks, block_v,
-                                    tile_shards, qps, microbatch)
+                                    tile_shards, qps, microbatch,
+                                    autotune=(backend == "pallas"),
+                                    fused=(mode == "pipeline"))
             rows += _serve_loop(f"serve/{ds}/{backend}/growth", n, deg,
                                 backend, "growth", ticks, batch_size,
                                 queries, landmarks, block_v, tile_shards,
                                 qps, microbatch,
-                                capacity=e0 + 7 * batch_size // 2)
+                                capacity=e0 + 7 * batch_size // 2,
+                                fused=True)
     return rows
 
 

@@ -1,0 +1,283 @@
+"""Kernel autotuner: pick the fastest sweep implementation per snapshot shape.
+
+The relaxation engine's Pallas path has three launch-structure knobs —
+`block_v` (destination-block tile), `block_e` (tile-row width cap; chunks
+power-law hub blocks into bounded rows), `tile_shards` (leading grid axis)
+— plus an *implementation* axis the knobs hang off:
+
+    impl="kernel"  the tiled Pallas `edge_relax` kernel (compiled on TPU,
+                   interpret-mode elsewhere — correct but slow off-TPU),
+    impl="sorted"  the dst-sorted `segment_min(indices_are_sorted=True)`
+                   lowering of the identical sweep math (compiled XLA on
+                   every platform; sweeps only the occupied edge slots
+                   where the jnp reference sweeps all capacity slots).
+
+All candidates are bit-identical (`tests/test_kernel_tuning.py` pins every
+config this module may emit against the jnp reference), so tuning is a
+pure performance decision: measure each candidate's steady-state sweep
+latency on the actual snapshot and keep the winner. Kernel-impl candidates
+are only measured where the kernel compiles (TPU) — interpret-mode
+timings are not speed-representative and would never win anyway.
+
+Timing discipline (the `roofline --sweep` fix rides on this): the first
+call is timed separately as `compile_us`, then `warmup` calls are
+discarded, then `steady_us` = min of `iters` timed calls — matching the
+`stat=min` convention of `benchmarks/ticks.py`. Picking min-of-k *after*
+warmup is what stops the tuner from preferring a config for its compile
+speed.
+
+Winners are cached in a `TuneTable` keyed by `(n, capacity, shards)` —
+the snapshot *shape*, not its contents: edge churn at fixed shape keeps
+the winner, while `coo.grow` / `grow_snapshot` change n/capacity and
+therefore force a fresh tune (the same staleness class PR 5's fingerprint
+collision guarded against). The table round-trips through a small JSON
+file so serve restarts don't re-tune (`launch/serve.py --tune-table`).
+
+CLI (the CI `tune` smoke job):
+
+    PYTHONPATH=src python -m repro.core.autotune \
+        --n 2000 --deg 3 --shards 2 --table experiments/tuning.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.segment import masked_segment_min
+from repro.kernels.edge_relax import ops as er_ops
+
+INF32 = 1 << 29
+
+#: Kernel-impl candidate grid. Small on purpose: each candidate costs a
+#: retile + compile + k timed sweeps, and the table amortizes per shape.
+KERNEL_BLOCK_V = (128, 256, 512)
+KERNEL_BLOCK_E = (None, 1024)
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneConfig:
+    """One point in the tuner's candidate space (hashable, JSON-able)."""
+    impl: str                 # "kernel" | "sorted"
+    block_v: int              # destination-block tile (kernel impl)
+    block_e: int | None       # tile-row width cap; None = widest block
+    tile_shards: int          # leading grid axis of the tiling
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "TuneConfig":
+        return TuneConfig(impl=d["impl"], block_v=int(d["block_v"]),
+                          block_e=(None if d.get("block_e") is None
+                                   else int(d["block_e"])),
+                          tile_shards=int(d["tile_shards"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    config: TuneConfig
+    steady_us: float          # winner's min-of-k steady latency
+    compile_us: float         # winner's first-call (compile) latency
+    jnp_us: float             # jnp reference steady latency, same shape
+    candidates: tuple         # ((config, compile_us, steady_us), ...)
+
+
+def table_key(n: int, capacity: int, shards: int) -> str:
+    """Tuning-table key: the snapshot *shape*. Deliberately excludes the
+    edge-content checksum the plan cache keys on — a tuned winner stays
+    valid across edge churn at fixed shape, but never across grow."""
+    return f"n={n},cap={capacity},s={shards}"
+
+
+def candidate_space(shards: int = 1, block_v: int = 512,
+                    include_kernel: bool | None = None) -> list[TuneConfig]:
+    """Every config the tuner may emit for an engine at (shards, block_v).
+
+    `include_kernel=None` resolves to "is the default backend a TPU" —
+    off-TPU the kernel impl runs interpret-mode and is measured by golden
+    tests only, never by the tuner.
+    """
+    if include_kernel is None:
+        include_kernel = jax.default_backend() == "tpu"
+    cands = [TuneConfig("sorted", block_v, None, shards)]
+    if include_kernel:
+        for bv in KERNEL_BLOCK_V:
+            for be in KERNEL_BLOCK_E:
+                for ts in sorted({1, shards}):
+                    cands.append(TuneConfig("kernel", bv, be, ts))
+    return cands
+
+
+def measure_compiled(fn, *args, warmup: int = 1,
+                     iters: int = 5) -> tuple[float, float]:
+    """(compile_us, steady_us) of fn(*args): first call timed apart, then
+    `warmup` discarded calls, then min of `iters` timed calls."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    compile_us = (time.perf_counter() - t0) * 1e6
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return compile_us, best * 1e6
+
+
+def _sweep_inputs(g, r_planes: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.integers(0, 2 * g.n, (r_planes, g.n), np.int64)
+                       .astype(np.int32))
+    hub = jnp.asarray(rng.random((r_planes, g.n)) < 0.02)
+    return keys, hub
+
+
+def tune(g, *, shards: int = 1, block_v: int = 512, r_planes: int = 8,
+         include_kernel: bool | None = None, warmup: int = 1,
+         iters: int = 3, inf: int = INF32) -> TuneResult:
+    """Measure every candidate on snapshot `g`; return the steady-state
+    winner plus the jnp-reference latency at the same shape (the number
+    the `tune/` bench rows derive the crossover from).
+
+    The measured wave is the production shape: one key2-style sweep
+    (step 2, hub clear) vmapped over `r_planes` landmark planes, mask =
+    the snapshot's live validity.
+    """
+    keys, hub = _sweep_inputs(g, r_planes)
+    mask = g.valid
+
+    @jax.jit
+    def jnp_wave(ks, hb, m):
+        def one(k, h):
+            cand = jnp.minimum(k[g.src] + 2, inf)
+            cand = jnp.where(h[g.dst], cand & ~jnp.int32(1), cand)
+            return masked_segment_min(cand, g.dst, g.n, m, inf)
+        return jax.vmap(one)(ks, hb)
+
+    _, jnp_us = measure_compiled(jnp_wave, keys, hub, mask,
+                                 warmup=warmup, iters=iters)
+
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    keep = np.asarray(g.valid)
+    measured = []
+    for cfg in candidate_space(shards, block_v, include_kernel):
+        if cfg.impl == "sorted":
+            sg = er_ops.prepare_sorted(src, dst, keep, g.n)
+
+            @jax.jit
+            def wave(ks, hb, m, sg=sg):
+                return jax.vmap(lambda k, h: er_ops.relax_sweep_sorted(
+                    k, sg, m, 2, inf, clear_bit=1, hub=h))(ks, hb)
+        else:
+            bg = er_ops.prepare_topology(src, dst, keep, g.n,
+                                         block_v=cfg.block_v,
+                                         shards=cfg.tile_shards,
+                                         block_e=cfg.block_e)
+
+            @jax.jit
+            def wave(ks, hb, m, bg=bg):
+                return jax.vmap(lambda k, h: er_ops.relax_sweep(
+                    k, bg, m, 2, inf, clear_bit=1, hub=h))(ks, hb)
+
+        compile_us, steady_us = measure_compiled(wave, keys, hub, mask,
+                                                 warmup=warmup, iters=iters)
+        measured.append((cfg, compile_us, steady_us))
+
+    best_cfg, best_compile, best_steady = min(measured, key=lambda t: t[2])
+    return TuneResult(config=best_cfg, steady_us=best_steady,
+                      compile_us=best_compile, jnp_us=jnp_us,
+                      candidates=tuple(measured))
+
+
+class TuneTable:
+    """On-disk (n, capacity, shards) → winning TuneConfig map.
+
+    `path=None` keeps the table in memory only. Persistence is
+    whole-file JSON rewrite on every `put` — tables hold a handful of
+    shapes, and atomicity (write + rename) keeps a crashed serve run
+    from truncating the file.
+    """
+
+    def __init__(self, path: str | None = None):
+        self.path = path
+        self.entries: dict[str, dict] = {}
+        if path and os.path.exists(path):
+            self.load(path)
+
+    def load(self, path: str) -> None:
+        with open(path) as f:
+            doc = json.load(f)
+        self.entries = dict(doc.get("entries", {}))
+
+    def save(self, path: str | None = None) -> None:
+        path = path or self.path
+        if not path:
+            return
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"version": 1, "entries": self.entries}, f, indent=1)
+        os.replace(tmp, path)
+
+    def get(self, key: str) -> TuneConfig | None:
+        ent = self.entries.get(key)
+        return TuneConfig.from_dict(ent["config"]) if ent else None
+
+    def put(self, key: str, result: TuneResult) -> None:
+        self.entries[key] = {
+            "config": result.config.to_dict(),
+            "steady_us": round(result.steady_us, 1),
+            "compile_us": round(result.compile_us, 1),
+            "jnp_us": round(result.jnp_us, 1),
+        }
+        self.save()
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="Tune the sweep kernel on a synthetic BA snapshot and "
+                    "persist the winner (the CI `tune` smoke job).")
+    ap.add_argument("--n", type=int, default=2_000)
+    ap.add_argument("--deg", type=int, default=3)
+    ap.add_argument("--extra-capacity", type=int, default=448)
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--block-v", type=int, default=256)
+    ap.add_argument("--r-planes", type=int, default=8)
+    ap.add_argument("--table", default="experiments/tuning.json")
+    args = ap.parse_args()
+
+    from repro.graphs import generators as gen
+    from repro.graphs.coo import from_edges
+
+    edges = gen.barabasi_albert(args.n, args.deg, seed=0)
+    g = from_edges(args.n, edges, edges.shape[0] + args.extra_capacity)
+    res = tune(g, shards=args.shards, block_v=args.block_v,
+               r_planes=args.r_planes)
+    table = TuneTable(args.table)
+    key = table_key(g.n, int(g.src.shape[0]), args.shards)
+    table.put(key, res)
+    speedup = res.jnp_us / res.steady_us if res.steady_us else float("inf")
+    print(f"{key}: winner={res.config.to_dict()} "
+          f"steady={res.steady_us:.1f}us jnp={res.jnp_us:.1f}us "
+          f"({speedup:.2f}x) -> {args.table}")
+    for cfg, cus, sus in res.candidates:
+        print(f"  cand impl={cfg.impl} bv={cfg.block_v} be={cfg.block_e} "
+              f"ts={cfg.tile_shards}: steady={sus:.1f}us compile={cus:.1f}us")
+
+
+if __name__ == "__main__":
+    main()

@@ -43,25 +43,34 @@ import numpy as np
 
 from repro.graphs.coo import Graph
 from repro.graphs.segment import masked_segment_min
+from repro.core import autotune as tune_mod
 from repro.kernels.edge_relax import ops as er_ops
-from repro.kernels.edge_relax.ops import BlockedGraph
+from repro.kernels.edge_relax.ops import BlockedGraph, SortedGraph
 
 BACKENDS = ("jnp", "pallas")
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=("tiles",), meta_fields=("backend",))
+         data_fields=("tiles", "sorted_tiles"), meta_fields=("backend", "impl"))
 @dataclasses.dataclass(frozen=True)
 class RelaxPlan:
     """How to run sweeps on one graph snapshot.
 
-    A pytree: `tiles` (the BlockedGraph, or None on the jnp backend) flows
-    through jit as data; `backend` is metadata, so dispatch below is
-    resolved at trace time — each backend gets its own executable, with no
+    A pytree: `tiles` / `sorted_tiles` (the prepared edge representation
+    for the plan's impl, None otherwise) flow through jit as data;
+    `backend` and `impl` are metadata, so dispatch below is resolved at
+    trace time — each (backend, impl) gets its own executable, with no
     runtime branching inside the compiled sweep loops.
+
+    `impl` selects the Pallas-backend implementation the autotuner picked
+    (see `core/autotune.py`): "kernel" = the tiled Pallas kernel on
+    `tiles`, "sorted" = the dst-sorted compiled segment-min twin on
+    `sorted_tiles`. Both are bit-identical to the jnp reference.
     """
     tiles: BlockedGraph | None
     backend: str
+    sorted_tiles: SortedGraph | None = None
+    impl: str = "kernel"
 
 
 #: Default plan: the pure-jnp reference path, no tiling required.
@@ -87,6 +96,10 @@ def relax_sweep(plan: RelaxPlan | None, g: Graph, keys: jax.Array,
             cand = jnp.where(hub[g.dst], cand & ~jnp.int32(clear_bit), cand)
         return masked_segment_min(cand, g.dst, g.n, mask, inf)
     if plan.backend == "pallas":
+        if plan.impl == "sorted":
+            return er_ops.relax_sweep_sorted(keys, plan.sorted_tiles, mask,
+                                             step, inf, clear_bit=clear_bit,
+                                             hub=hub)
         return er_ops.relax_sweep(keys, plan.tiles, mask, step, inf,
                                   clear_bit=clear_bit, hub=hub)
     raise ValueError(f"unknown backend {plan.backend!r}; pick from {BACKENDS}")
@@ -109,7 +122,9 @@ class RelaxEngine:
     """
 
     def __init__(self, backend: str = "auto", block_v: int = 512,
-                 shards: int = 1, cache_plans: int = 2):
+                 shards: int = 1, cache_plans: int = 2,
+                 block_e: int | None = None, autotune: bool = False,
+                 tune_table: "tune_mod.TuneTable | str | None" = None):
         if backend == "auto":
             backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
         if backend not in BACKENDS:
@@ -122,19 +137,32 @@ class RelaxEngine:
         self.backend = backend
         self.block_v = block_v
         self.shards = shards
+        self.block_e = block_e
         self.cache_plans = cache_plans
-        self._tiles: BlockedGraph | None = None
+        # Autotuning (core/autotune.py): pick impl + tile shape per
+        # snapshot shape, memoized in a TuneTable (optionally on disk so
+        # serve restarts skip the measurement entirely).
+        self.autotune = autotune
+        if isinstance(tune_table, str):
+            tune_table = tune_mod.TuneTable(tune_table)
+        self.tune_table = (tune_table if tune_table is not None
+                           else (tune_mod.TuneTable() if autotune else None))
+        self._tuned_cfg: tune_mod.TuneConfig | None = None
+        self._plan: RelaxPlan | None = None
         self._fingerprint: tuple | None = None
-        # Fingerprint-keyed LRU of tilings. The serving pipeline keeps two
-        # snapshots live at once (committed N answering queries, N+1 under
-        # construction), so re-preparing for either must not thrash an
-        # O(E log E) retile — the default capacity of 2 covers exactly that
-        # pattern. Tiles are immutable, so evicted entries embedded in
-        # older plans/snapshots stay valid.
-        self._plans: dict[tuple, BlockedGraph] = {}
+        # Fingerprint-keyed LRU of prepared plans. The serving pipeline
+        # keeps two snapshots live at once (committed N answering queries,
+        # N+1 under construction), so re-preparing for either must not
+        # thrash an O(E log E) retile — the default capacity of 2 covers
+        # exactly that pattern. The key also carries the tuned config, so
+        # adopting a new winner can never serve tiles shaped for the old
+        # one. Prepared plans are immutable, so evicted entries embedded
+        # in older snapshots stay valid.
+        self._plans: dict[tuple, RelaxPlan] = {}
         self.retile_count = 0  # observability: serve/benchmarks report this
         self.stale_cache_retiles = 0  # fingerprint mismatches caught below
         self.plan_cache_hits = 0  # keyed-cache hits (no retile needed)
+        self.tune_count = 0  # tuner measurement runs (table misses)
 
     @property
     def plan_alignment(self) -> int:
@@ -217,24 +245,65 @@ class RelaxEngine:
         """
         if self.backend == "jnp":
             return JNP_PLAN
-        if self._tiles is not None and not topology_changed:
+        cfg = self._ensure_tuned(g)
+        if self._plan is not None and not topology_changed:
             if not (verify_cache and self._cache_is_stale(g)):
-                return RelaxPlan(tiles=self._tiles, backend="pallas")
+                return self._plan
             self.stale_cache_retiles += 1  # the vouch was wrong — re-key
         fp = self._snapshot_fingerprint(g)
-        tiles = self._plans.pop(fp, None)
-        if tiles is None:
+        key = fp + ((cfg.impl, cfg.block_v, cfg.block_e, cfg.tile_shards)
+                    if cfg else ())
+        plan = self._plans.pop(key, None)
+        if plan is None:
             # Host sync: pull the slot arrays once per topology change and
-            # tile only the occupied slots (free slots get src/dst rewritten
-            # by the insertion that occupies them, forcing a re-prepare).
-            tiles = er_ops.prepare_topology(
-                np.asarray(g.src), np.asarray(g.dst), np.asarray(g.valid),
-                g.n, self.block_v, self.shards)
+            # prepare only the occupied slots (free slots get src/dst
+            # rewritten by the insertion that occupies them, forcing a
+            # re-prepare).
+            src = np.asarray(g.src)
+            dst = np.asarray(g.dst)
+            keep = np.asarray(g.valid)
+            if cfg is not None and cfg.impl == "sorted":
+                plan = RelaxPlan(tiles=None, backend="pallas",
+                                 sorted_tiles=er_ops.prepare_sorted(
+                                     src, dst, keep, g.n),
+                                 impl="sorted")
+            else:
+                tiling_s = cfg.tile_shards if cfg else self.shards
+                plan = RelaxPlan(tiles=er_ops.prepare_topology(
+                    src, dst, keep, g.n, self.block_v, tiling_s,
+                    self.block_e), backend="pallas")
             self.retile_count += 1
         else:
             self.plan_cache_hits += 1
-        self._plans[fp] = tiles  # (re)insert as most-recently used
+        self._plans[key] = plan  # (re)insert as most-recently used
         while len(self._plans) > self.cache_plans:
             self._plans.pop(next(iter(self._plans)))
-        self._tiles, self._fingerprint = tiles, fp
-        return RelaxPlan(tiles=tiles, backend="pallas")
+        self._plan, self._fingerprint = plan, fp
+        return plan
+
+    def _ensure_tuned(self, g: Graph) -> "tune_mod.TuneConfig | None":
+        """Resolve (and adopt) the tuned config for `g`'s shape.
+
+        Table lookups are keyed (n, capacity, shards) — edge churn at
+        fixed shape reuses the winner with zero measurement; growth
+        changes the key and re-tunes (`tune_count` counts measurement
+        runs). Adopting a kernel-impl winner updates `block_v`/`block_e`
+        so `plan_alignment` — the contract `core/growth.py` sizes grown
+        snapshots against — always reflects the tiles actually served.
+        """
+        if not self.autotune:
+            return None
+        key = tune_mod.table_key(g.n, int(g.src.shape[0]), self.shards)
+        cfg = self.tune_table.get(key)
+        if cfg is None:
+            result = tune_mod.tune(g, shards=self.shards,
+                                   block_v=self.block_v)
+            self.tune_table.put(key, result)
+            self.tune_count += 1
+            cfg = result.config
+        if cfg != self._tuned_cfg:
+            self._tuned_cfg = cfg
+            if cfg.impl == "kernel":
+                self.block_v = cfg.block_v
+                self.block_e = cfg.block_e
+        return cfg

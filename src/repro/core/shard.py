@@ -323,6 +323,126 @@ def shard_repair_chunk(mesh, g_new: Graph, cur: jax.Array, aff: jax.Array,
         check_rep=False)(g_new, cur, aff, hub_mask, plan)
 
 
+# --- fused chunk twins (seed + K sweeps in one dispatch; donated planes) ---
+#
+# Mesh versions of `snapshot.fused_*`: same fusion boundaries, same
+# donation contract (the labelling plane argument is donated and must be
+# rebound by the caller after every chunk), with the per-chunk `changed`
+# flag pmax-merged across the maintenance grouping like the unfused
+# chunk twins above.
+
+@partial(jax.jit, static_argnames=("mesh", "improved", "sweeps"))
+def shard_fused_search_start(mesh, g_new: Graph, batch: BatchUpdate,
+                             dist: jax.Array, hub: jax.Array,
+                             landmarks: jax.Array, plan: RelaxPlan | None,
+                             improved: bool = True, sweeps: int = 1):
+    """Mesh twin of `snapshot.fused_search_start` →
+    (best, seed, seeded, bound, hub_mask, changed)."""
+    _check_planes(landmarks.shape[0], _maint_size(mesh), "maintenance")
+    check_labelling_width(g_new, dist)
+
+    def body(g_new, batch, dist, hub, own, landmarks_full, plan):
+        hub_mask = per_plane_hub_mask(landmarks_full, own, g_new.n)
+        if improved:
+            seed, seeded, bound = search_improved_seed(g_new, batch, dist,
+                                                       hub, hub_mask)
+        else:
+            seed, seeded = search_basic_seed(g_new, batch, dist)
+            bound = dist
+        best = seed
+        for _ in range(sweeps):
+            if improved:
+                best = search_improved_step(plan, g_new, best, seed, bound,
+                                            hub_mask)
+            else:
+                best = search_basic_step(plan, g_new, best, seed, bound)
+        changed = jax.lax.pmax(
+            jnp.any(best != seed).astype(jnp.int32), MAINT_AXES)
+        return best, seed, seeded, bound, hub_mask, changed > 0
+
+    rv = P(MAINT_AXES, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), rv, rv, P(MAINT_AXES), P(), P()),
+        out_specs=(rv, rv, rv, rv, rv, P()),
+        check_rep=False)(g_new, batch, dist, hub, landmarks, landmarks,
+                         plan)
+
+
+@partial(jax.jit, static_argnames=("mesh", "improved", "sweeps"),
+         donate_argnums=(2,))
+def shard_fused_search_chunk(mesh, g_new: Graph, best: jax.Array,
+                             seed: jax.Array, bound: jax.Array,
+                             hub_mask: jax.Array, plan: RelaxPlan | None,
+                             improved: bool = True, sweeps: int = 1):
+    """`shard_search_chunk` with the labelling plane donated."""
+
+    def body(g_new, best, seed, bound, hub_mask, plan):
+        cur = best
+        for _ in range(sweeps):
+            if improved:
+                cur = search_improved_step(plan, g_new, cur, seed, bound,
+                                           hub_mask)
+            else:
+                cur = search_basic_step(plan, g_new, cur, seed, bound)
+        changed = jax.lax.pmax(
+            jnp.any(cur != best).astype(jnp.int32), MAINT_AXES)
+        return cur, changed > 0
+
+    rv = P(MAINT_AXES, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), rv, rv, rv, rv, P()),
+        out_specs=(rv, P()),
+        check_rep=False)(g_new, best, seed, bound, hub_mask, plan)
+
+
+@partial(jax.jit, static_argnames=("mesh", "sweeps"))
+def shard_fused_repair_start_chunk(mesh, g_new: Graph, aff: jax.Array,
+                                   dist: jax.Array, hub: jax.Array,
+                                   hub_mask: jax.Array,
+                                   plan: RelaxPlan | None, sweeps: int = 1):
+    """Mesh twin of `snapshot.fused_repair_start_chunk` → (cur, changed)."""
+
+    def body(g_new, aff, dist, hub, hub_mask, plan):
+        cur0 = repair_base(plan, g_new, aff, key2_make(dist, hub), hub_mask)
+        cur = cur0
+        for _ in range(sweeps):
+            cur = repair_step(plan, g_new, cur, aff, hub_mask)
+        changed = jax.lax.pmax(
+            jnp.any(cur != cur0).astype(jnp.int32), MAINT_AXES)
+        return cur, changed > 0
+
+    rv = P(MAINT_AXES, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), rv, rv, rv, rv, P()),
+        out_specs=(rv, P()),
+        check_rep=False)(g_new, aff, dist, hub, hub_mask, plan)
+
+
+@partial(jax.jit, static_argnames=("mesh", "sweeps"), donate_argnums=(2,))
+def shard_fused_repair_chunk(mesh, g_new: Graph, cur: jax.Array,
+                             aff: jax.Array, hub_mask: jax.Array,
+                             plan: RelaxPlan | None, sweeps: int = 1):
+    """`shard_repair_chunk` with the key2 plane donated."""
+
+    def body(g_new, cur, aff, hub_mask, plan):
+        out = cur
+        for _ in range(sweeps):
+            out = repair_step(plan, g_new, out, aff, hub_mask)
+        changed = jax.lax.pmax(
+            jnp.any(out != cur).astype(jnp.int32), MAINT_AXES)
+        return out, changed > 0
+
+    rv = P(MAINT_AXES, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), rv, rv, rv, P()),
+        out_specs=(rv, P()),
+        check_rep=False)(g_new, cur, aff, hub_mask, plan)
+
+
 @partial(jax.jit, static_argnames=("mesh",))
 def shard_update_finish(mesh, aff: jax.Array, settled: jax.Array,
                         dist: jax.Array, hub: jax.Array,

@@ -195,6 +195,95 @@ def repair_chunk(g_new: Graph, cur: jax.Array, aff: jax.Array,
     return out, jnp.any(out != cur)
 
 
+# --- fused chunk variants (one dispatch per pipeline phase boundary) -------
+#
+# The unfused pipeline pays one dispatch for the seed plus one per chunk,
+# and every chunk re-reads its input labelling plane from a fresh buffer.
+# The fused variants collapse the seed→first-K-sweeps prefix of each
+# fixpoint into a single executable and *donate* the labelling plane
+# (`best` / `cur`) on every subsequent chunk, so XLA updates it in place
+# instead of allocating per chunk. Donation contract (DESIGN.md §7): a
+# donated plane is invalid the moment the chunk is dispatched — callers
+# must rebind to the chunk's output and never touch the old reference
+# (the pipeline loop below does exactly that; `tests/test_pipeline.py`
+# runs every fused update twice and compares to prove no freed buffer is
+# ever read). The first chunk is safe to donate *because* it is fused
+# with the seed: the unfused pipeline's first chunk receives `best` and
+# `seed` as the same buffer (donating it would invalidate `seed`, which
+# later chunks still read), while `fused_search_start` returns `best` as
+# a fresh output buffer distinct from `seed`.
+
+@partial(jax.jit, static_argnames=("improved", "sweeps"))
+def fused_search_start(g_new: Graph, batch: BatchUpdate, dist: jax.Array,
+                       hub: jax.Array, landmarks: jax.Array,
+                       plan: RelaxPlan | None, improved: bool = True,
+                       sweeps: int = 1):
+    """Seed + first `sweeps` search waves in ONE dispatch.
+
+    Returns (best, seed, seeded, bound, hub_mask, changed). Convergence
+    flag semantics match the unfused seed-then-chunk pair: the fixpoint
+    is monotone, so `best == seed` after `sweeps` waves means settled.
+    """
+    check_labelling_width(g_new, dist)
+    hub_mask = per_plane_hub_mask(landmarks, landmarks, g_new.n)
+    if improved:
+        seed, seeded, bound = search_improved_seed(g_new, batch, dist, hub,
+                                                   hub_mask)
+    else:
+        seed, seeded = search_basic_seed(g_new, batch, dist)
+        bound = dist
+    best = seed
+    for _ in range(sweeps):
+        if improved:
+            best = search_improved_step(plan, g_new, best, seed, bound,
+                                        hub_mask)
+        else:
+            best = search_basic_step(plan, g_new, best, seed, bound)
+    return best, seed, seeded, bound, hub_mask, jnp.any(best != seed)
+
+
+@partial(jax.jit, static_argnames=("improved", "sweeps"), donate_argnums=(1,))
+def fused_search_chunk(g_new: Graph, best: jax.Array, seed: jax.Array,
+                       bound: jax.Array, hub_mask: jax.Array,
+                       plan: RelaxPlan | None, improved: bool = True,
+                       sweeps: int = 1) -> tuple[jax.Array, jax.Array]:
+    """`search_chunk` with the labelling plane donated (updated in place
+    on backends that honor donation; a perf no-op where they don't)."""
+    cur = best
+    for _ in range(sweeps):
+        if improved:
+            cur = search_improved_step(plan, g_new, cur, seed, bound,
+                                       hub_mask)
+        else:
+            cur = search_basic_step(plan, g_new, cur, seed, bound)
+    return cur, jnp.any(cur != best)
+
+
+@partial(jax.jit, static_argnames=("sweeps",))
+def fused_repair_start_chunk(g_new: Graph, aff: jax.Array, dist: jax.Array,
+                             hub: jax.Array, hub_mask: jax.Array,
+                             plan: RelaxPlan | None, sweeps: int = 1
+                             ) -> tuple[jax.Array, jax.Array]:
+    """Algo-4 boundary seeding + first `sweeps` interior waves in ONE
+    dispatch → (cur, changed); returns a fresh `cur` safe to donate."""
+    cur0 = repair_base(plan, g_new, aff, key2_make(dist, hub), hub_mask)
+    cur = cur0
+    for _ in range(sweeps):
+        cur = repair_step(plan, g_new, cur, aff, hub_mask)
+    return cur, jnp.any(cur != cur0)
+
+
+@partial(jax.jit, static_argnames=("sweeps",), donate_argnums=(1,))
+def fused_repair_chunk(g_new: Graph, cur: jax.Array, aff: jax.Array,
+                       hub_mask: jax.Array, plan: RelaxPlan | None,
+                       sweeps: int = 1) -> tuple[jax.Array, jax.Array]:
+    """`repair_chunk` with the key2 plane donated."""
+    out = cur
+    for _ in range(sweeps):
+        out = repair_step(plan, g_new, out, aff, hub_mask)
+    return out, jnp.any(out != cur)
+
+
 @jax.jit
 def update_finish(aff: jax.Array, settled: jax.Array, dist: jax.Array,
                   hub: jax.Array, landmarks: jax.Array) -> HighwayLabelling:
@@ -213,7 +302,8 @@ def update_finish(aff: jax.Array, settled: jax.Array, dist: jax.Array,
 def pipelined_update(snapshot: Snapshot, batch: BatchUpdate, *,
                      plan: RelaxPlan | None = None,
                      g_new: Graph | None = None, mesh=None,
-                     improved: bool = True, chunk_sweeps: int = 1):
+                     improved: bool = True, chunk_sweeps: int = 1,
+                     fused: bool = False):
     """BatchHL update against `snapshot` as a generator of bounded
     dispatches; returns (snapshot N+1, aff[R, V]) via StopIteration.
 
@@ -226,6 +316,11 @@ def pipelined_update(snapshot: Snapshot, batch: BatchUpdate, *,
     as `g_new` to skip the recompute). With `mesh`, chunks run through
     the `core/shard.py` wrappers on the maintenance plane grouping.
 
+    `fused=True` runs the megakernel chunk variants: each phase's
+    seed + first K sweeps fuse into one dispatch, and subsequent chunks
+    donate the labelling plane so sweeps update it in place (same phase
+    tags, same bit-identical result — the fused-parity tests pin it).
+
     Drive it to completion with `run_pipelined_update`, or manually:
 
         gen = pipelined_update(snap, batch, plan=plan)
@@ -235,42 +330,57 @@ def pipelined_update(snapshot: Snapshot, batch: BatchUpdate, *,
     """
     if mesh is None:
         seed_fn = search_seed
-        chunk_fn = search_chunk
+        chunk_fn = fused_search_chunk if fused else search_chunk
+        fstart_fn = fused_search_start
         rstart_fn = repair_start
-        rchunk_fn = repair_chunk
+        rchunk_fn = fused_repair_chunk if fused else repair_chunk
+        frstart_fn = fused_repair_start_chunk
         finish_fn = update_finish
     else:
         from repro.core import shard
         seed_fn = partial(shard.shard_search_seed, mesh)
-        chunk_fn = partial(shard.shard_search_chunk, mesh)
+        chunk_fn = partial(shard.shard_fused_search_chunk if fused
+                           else shard.shard_search_chunk, mesh)
+        fstart_fn = partial(shard.shard_fused_search_start, mesh)
         rstart_fn = partial(shard.shard_repair_start, mesh)
-        rchunk_fn = partial(shard.shard_repair_chunk, mesh)
+        rchunk_fn = partial(shard.shard_fused_repair_chunk if fused
+                            else shard.shard_repair_chunk, mesh)
+        frstart_fn = partial(shard.shard_fused_repair_start_chunk, mesh)
         finish_fn = partial(shard.shard_update_finish, mesh)
 
     lab = snapshot.labelling
     if g_new is None:
         g_new = apply_batch(snapshot.graph, batch)
 
-    seed, seeded, bound, hub_mask = seed_fn(
-        g_new, batch, lab.dist, lab.hub, lab.landmarks, improved=improved)
+    if fused:
+        best, seed, seeded, bound, hub_mask, changed = fstart_fn(
+            g_new, batch, lab.dist, lab.hub, lab.landmarks, plan,
+            improved=improved, sweeps=chunk_sweeps)
+    else:
+        seed, seeded, bound, hub_mask = seed_fn(
+            g_new, batch, lab.dist, lab.hub, lab.landmarks,
+            improved=improved)
+        best, changed = seed, True
     yield "search-seed"
-    best = seed
-    while True:
+    while bool(changed):
+        # A donated `best` (fused path) is dead after this dispatch; the
+        # rebind below is the only reference kept.
         best, changed = chunk_fn(g_new, best, seed, bound, hub_mask, plan,
                                  improved=improved, sweeps=chunk_sweeps)
         yield "search"
-        if not bool(changed):
-            break
     aff = search_finish(best, seeded, improved=improved)
 
-    cur = rstart_fn(g_new, aff, lab.dist, lab.hub, hub_mask, plan)
+    if fused:
+        cur, changed = frstart_fn(g_new, aff, lab.dist, lab.hub, hub_mask,
+                                  plan, sweeps=chunk_sweeps)
+    else:
+        cur = rstart_fn(g_new, aff, lab.dist, lab.hub, hub_mask, plan)
+        changed = True
     yield "repair-seed"
-    while True:
+    while bool(changed):
         cur, changed = rchunk_fn(g_new, cur, aff, hub_mask, plan,
                                  sweeps=chunk_sweeps)
         yield "repair"
-        if not bool(changed):
-            break
 
     new_lab = finish_fn(aff, cur, lab.dist, lab.hub, lab.landmarks)
     return Snapshot(snapshot.version + 1, g_new, new_lab, plan), aff
@@ -410,16 +520,20 @@ def _selftest() -> None:
     for model in [m for m in (1, 2, 4, 8) if n_dev % m == 0]:
         mesh = make_host_mesh(model=model)
         for backend, pln in (("jnp", None), ("pallas", plan1)):
-            snap = Snapshot(0, g, lab0, pln)
-            nxt, aff = run_pipelined_update(pipelined_update(
-                snap, batch, plan=pln, mesh=mesh, chunk_sweeps=2))
-            np.testing.assert_array_equal(np.asarray(aff), np.asarray(aff1))
-            for f in ("dist", "hub", "highway"):
-                np.testing.assert_array_equal(
-                    np.asarray(getattr(nxt.labelling, f)),
-                    np.asarray(getattr(lab1, f)))
-            print(f"mesh (data={mesh.shape['data']}, model={model}) "
-                  f"backend={backend}: pipelined update bit-parity OK")
+            for fused in (False, True):
+                snap = Snapshot(0, g, lab0, pln)
+                nxt, aff = run_pipelined_update(pipelined_update(
+                    snap, batch, plan=pln, mesh=mesh, chunk_sweeps=2,
+                    fused=fused))
+                np.testing.assert_array_equal(np.asarray(aff),
+                                              np.asarray(aff1))
+                for f in ("dist", "hub", "highway"):
+                    np.testing.assert_array_equal(
+                        np.asarray(getattr(nxt.labelling, f)),
+                        np.asarray(getattr(lab1, f)))
+                print(f"mesh (data={mesh.shape['data']}, model={model}) "
+                      f"backend={backend} fused={fused}: "
+                      f"pipelined update bit-parity OK")
 
     # End-to-end: pipelined serving on a real mesh (if the device count
     # allows a model axis), every answer checked at its served version.

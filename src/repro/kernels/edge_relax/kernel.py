@@ -90,11 +90,21 @@ def block_edges_topology(src: np.ndarray, dst: np.ndarray, keep: np.ndarray,
                          n: int, block_v: int, block_e: int | None = None):
     """Host-side tiling: group the kept edge slots by destination block.
 
-    Returns (src_t [NB, BE], dstloc_t [NB, BE], perm_t [NB, BE],
-    slot_t [NB, BE], block_v). `perm_t` maps each tile slot back to its
-    original edge index so per-sweep masks (validity churn, repair
-    boundary/interior masks) can be re-tiled on device with one gather;
-    `slot_t` is 0 on padding slots. Done once per graph topology.
+    Returns (src_t [NR, BE], dstloc_t [NR, BE], perm_t [NR, BE],
+    slot_t [NR, BE], rowblk [NR], block_v). `perm_t` maps each tile slot
+    back to its original edge index so per-sweep masks (validity churn,
+    repair boundary/interior masks) can be re-tiled on device with one
+    gather; `slot_t` is 0 on padding slots. Done once per graph topology.
+
+    Without `block_e`, BE is the largest per-block edge count and NR = NB:
+    one tile row per destination block (`rowblk` is the identity). On
+    power-law graphs that single hub block inflates every row, so a tuned
+    `block_e` caps BE and *chunks* oversized blocks into ceil(count/BE)
+    rows — `rowblk[r]` names the destination block row r feeds, rows of
+    one block are consecutive, and total padding is bounded by NB·BE
+    instead of NB·max-degree-block. Every block keeps at least one row
+    (possibly all-padding) so reducing rows by `rowblk` yields a value
+    for every block.
     """
     keep = np.asarray(keep, bool)
     idx = np.flatnonzero(keep).astype(np.int64)
@@ -104,19 +114,29 @@ def block_edges_topology(src: np.ndarray, dst: np.ndarray, keep: np.ndarray,
     src_k, dst_k, idx = src_k[order], dst_k[order], idx[order]
     counts = np.bincount(dst_k // block_v, minlength=nb)
     be = block_e or max(int(counts.max() if counts.size else 0), 8)
-    src_t = np.zeros((nb, be), np.int32)
-    dst_t = np.zeros((nb, be), np.int32)
-    perm_t = np.zeros((nb, be), np.int32)
-    slot_t = np.zeros((nb, be), np.int32)
+    rows_per_block = np.maximum(-(-counts // be), 1)
+    nr = int(rows_per_block.sum())
+    src_t = np.zeros((nr, be), np.int32)
+    dst_t = np.zeros((nr, be), np.int32)
+    perm_t = np.zeros((nr, be), np.int32)
+    slot_t = np.zeros((nr, be), np.int32)
+    rowblk = np.repeat(np.arange(nb, dtype=np.int32),
+                       rows_per_block).astype(np.int32)
     starts = np.concatenate([[0], np.cumsum(counts)])
+    row_starts = np.concatenate([[0], np.cumsum(rows_per_block)])
     for b in range(nb):
         lo, hi = starts[b], starts[b + 1]
-        m = min(hi - lo, be)
-        src_t[b, :m] = src_k[lo:lo + m]
-        dst_t[b, :m] = dst_k[lo:lo + m] - b * block_v
-        perm_t[b, :m] = idx[lo:lo + m]
-        slot_t[b, :m] = 1
-    return src_t, dst_t, perm_t, slot_t, block_v
+        for c in range(int(rows_per_block[b])):
+            a = lo + c * be
+            m = min(hi - a, be)
+            if m <= 0:
+                break
+            r = int(row_starts[b]) + c
+            src_t[r, :m] = src_k[a:a + m]
+            dst_t[r, :m] = dst_k[a:a + m] - b * block_v
+            perm_t[r, :m] = idx[a:a + m]
+            slot_t[r, :m] = 1
+    return src_t, dst_t, perm_t, slot_t, rowblk, block_v
 
 
 def aligned_vertex_count(n: int, block_v: int, shards: int) -> int:
@@ -134,42 +154,80 @@ def aligned_vertex_count(n: int, block_v: int, shards: int) -> int:
     return -(-n // unit) * unit
 
 
-def shard_tiling(shards: int, *tiles: np.ndarray):
-    """Split [NB, BE] tile arrays into `shards` contiguous vertex shards.
+def shard_tiling(shards: int, nb: int, rowblk: np.ndarray,
+                 *tiles: np.ndarray):
+    """Split [NR, BE] tile rows into `shards` contiguous vertex shards.
 
-    Pads the block axis to a multiple of `shards` with empty blocks (all
-    zeros — slot_t=0 marks them padding) and reshapes to [S, NB_loc, BE].
-    Shard s then owns the destination range [s·NB_loc·BV, (s+1)·NB_loc·BV):
-    block boundaries are block_v-aligned, so no destination block straddles
-    a shard, block *contents* are untouched, and flattening the [S, NB_loc]
-    axes recovers the exact unsharded block order (padding blocks all land
-    past the last real block). Per-block reductions — and therefore sweep
-    results — are bit-identical for every S.
+    Shard s owns destination blocks [s·NB_loc, (s+1)·NB_loc) — and every
+    tile row feeding them. Block boundaries are block_v-aligned, so no
+    destination block straddles a shard, row *contents* are untouched, and
+    flattening the per-shard block order recovers the exact unsharded
+    order (padding blocks all land past the last real block, past every
+    real vertex). Per-block reductions — and therefore sweep results —
+    are bit-identical for every S.
+
+    Returns (rowblk_t [S, NR_loc] of *local* block ids, nb_loc,
+    *tiles [S, NR_loc, BE]). Shards with fewer rows pad with all-zero
+    rows mapped to the shard's last local block (keeps each shard's
+    rowblk sorted — the row→block reduction relies on it); padding rows
+    have slot_t=0 everywhere, so they only contribute `inf`.
     """
     if shards < 1:
         raise ValueError(f"shards must be >= 1, got {shards}")
-    nb = tiles[0].shape[0]
     nb_loc = max(-(-nb // shards), 1)
-    pad = shards * nb_loc - nb
-    out = []
-    for t in tiles:
-        padded = np.pad(t, ((0, pad), (0, 0)))
-        out.append(padded.reshape(shards, nb_loc, t.shape[1]))
-    return tuple(out)
+    shard_of = rowblk // nb_loc                       # rows sorted by block,
+    row_counts = np.bincount(shard_of, minlength=shards)  # so shards are
+    nr_loc = max(int(row_counts.max()), 1)                # contiguous runs
+    row_starts = np.concatenate([[0], np.cumsum(row_counts)])
+    be = tiles[0].shape[1]
+    rowblk_t = np.full((shards, nr_loc), nb_loc - 1, np.int32)
+    out = [np.zeros((shards, nr_loc, be), t.dtype) for t in tiles]
+    for s in range(shards):
+        lo, hi = int(row_starts[s]), int(row_starts[s + 1])
+        m = hi - lo
+        rowblk_t[s, :m] = rowblk[lo:hi] - s * nb_loc
+        for o, t in zip(out, tiles):
+            o[s, :m] = t[lo:hi]
+    return (rowblk_t, nb_loc) + tuple(out)
 
 
-@functools.partial(jax.jit, static_argnames=("n", "block_v", "interpret"))
+def _reduce_rows(out: jax.Array, rowblk_t: jax.Array | None, nb: int | None,
+                 inf) -> jax.Array:
+    """Fold per-row partial mins [S, NR, BV] into per-block mins [S, NB, BV].
+
+    Rows of one destination block are consecutive and each block has at
+    least one row, so a sorted segment-min per shard recovers exactly the
+    per-block reduction an unchunked tiling computes — min-of-mins over
+    any grouping of the same integer multiset. `rowblk_t=None` means the
+    tiling was not chunked (NR = NB, identity mapping): pass through.
+    Padding blocks (no rows at all only happens past `nb`) clamp to `inf`.
+    """
+    if rowblk_t is None:
+        return out
+    def one(o, rb):
+        return jax.ops.segment_min(o, rb, num_segments=nb,
+                                   indices_are_sorted=True)
+    return jnp.minimum(jax.vmap(one)(out, rowblk_t), inf)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block_v", "nb",
+                                             "interpret"))
 def edge_relax_pallas(keys: jax.Array, src_t: jax.Array, dstloc_t: jax.Array,
                       valid_t: jax.Array, step: jax.Array, n: int,
-                      block_v: int, interpret: bool = True) -> jax.Array:
-    """keys [V] int32 + tiled edges [S, NB, BE] → cand [V] int32."""
-    s, nb, be = src_t.shape
-    npad = s * nb * block_v
+                      block_v: int, interpret: bool = True,
+                      rowblk_t: jax.Array | None = None,
+                      nb: int | None = None) -> jax.Array:
+    """keys [V] int32 + tiled edges [S, NR, BE] → cand [V] int32.
+
+    `rowblk_t`/`nb` describe a block_e-chunked tiling (see
+    `block_edges_topology`); omitted, rows are blocks (NR = NB).
+    """
+    s, nr, be = src_t.shape
     step_arr = jnp.full((1,), step, jnp.int32)
 
     out = pl.pallas_call(
         _relax_kernel,
-        grid=(s, nb),
+        grid=(s, nr),
         in_specs=[
             pl.BlockSpec(keys.shape, lambda j, i: (0,) * keys.ndim),
             pl.BlockSpec((1, 1, be), lambda j, i: (j, i, 0)),
@@ -178,35 +236,40 @@ def edge_relax_pallas(keys: jax.Array, src_t: jax.Array, dstloc_t: jax.Array,
             pl.BlockSpec((1,), lambda j, i: (0,)),
         ],
         out_specs=pl.BlockSpec((1, 1, block_v), lambda j, i: (j, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((s, nb, block_v), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((s, nr, block_v), jnp.int32),
         interpret=interpret,
     )(keys, src_t, dstloc_t, valid_t, step_arr)
-    return out.reshape(npad)[:n]
+    out = _reduce_rows(out, rowblk_t, nb, INF32)
+    return out.reshape(-1)[:n]
 
 
-@functools.partial(jax.jit, static_argnames=("n", "block_v", "interpret"))
+@functools.partial(jax.jit, static_argnames=("n", "block_v", "nb",
+                                             "interpret"))
 def relax_sweep_pallas(keys: jax.Array, hub_t: jax.Array, src_t: jax.Array,
                        dstloc_t: jax.Array, mask_t: jax.Array,
                        step: jax.Array, inf: jax.Array, clear_bit: jax.Array,
-                       n: int, block_v: int,
-                       interpret: bool = True) -> jax.Array:
-    """Generalized sweep: keys [V] + hub tiles [S, NB, BV] + tiled edges
-    [S, NB, BE] → [V].
+                       n: int, block_v: int, interpret: bool = True,
+                       rowblk_t: jax.Array | None = None,
+                       nb: int | None = None) -> jax.Array:
+    """Generalized sweep: keys [V] + per-row hub tiles [S, NR, BV] + tiled
+    edges [S, NR, BE] → [V].
 
     cand[v] = min over masked edges (u, v) of
         clear_hub_bit_if_hub(v, min(keys[u] + step, inf));  `inf` if none.
-    The grid walks (vertex shard, destination block); each step owns one
-    disjoint [BV] output tile, so S is a pure launch-structure knob.
+    The grid walks (vertex shard, tile row); each step owns one disjoint
+    [BV] output tile, so S is a pure launch-structure knob. With a
+    block_e-chunked tiling (`rowblk_t`/`nb` set) several rows feed one
+    destination block and a sorted segment-min folds the per-row partials
+    — bit-identical to the unchunked reduction (min-of-mins).
     """
-    s, nb, be = src_t.shape
-    npad = s * nb * block_v
+    s, nr, be = src_t.shape
     params = jnp.stack([jnp.asarray(step, jnp.int32),
                         jnp.asarray(inf, jnp.int32),
                         jnp.asarray(clear_bit, jnp.int32)])
 
     out = pl.pallas_call(
         _relax_sweep_kernel,
-        grid=(s, nb),
+        grid=(s, nr),
         in_specs=[
             pl.BlockSpec(keys.shape, lambda j, i: (0,) * keys.ndim),
             pl.BlockSpec((1, 1, block_v), lambda j, i: (j, i, 0)),
@@ -216,7 +279,8 @@ def relax_sweep_pallas(keys: jax.Array, hub_t: jax.Array, src_t: jax.Array,
             pl.BlockSpec((3,), lambda j, i: (0,)),
         ],
         out_specs=pl.BlockSpec((1, 1, block_v), lambda j, i: (j, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((s, nb, block_v), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((s, nr, block_v), jnp.int32),
         interpret=interpret,
     )(keys, hub_t, src_t, dstloc_t, mask_t, params)
-    return out.reshape(npad)[:n]
+    out = _reduce_rows(out, rowblk_t, nb, jnp.asarray(inf, jnp.int32))
+    return out.reshape(-1)[:n]

@@ -2,9 +2,13 @@
 
 `BlockedGraph` carries the one-off destination-block tiling, organized as
 `shards` contiguous block_v-aligned vertex shards (leading [S] axis on every
-tile array; S=1 is the classic unsharded tiling). The tiling is purely
-topological (src / local-dst / original-slot permutation): per-sweep edge
-validity — which churns with every batch update and with the repair
+tile array; S=1 is the classic unsharded tiling). Tile rows are
+[S, NR, BE]: without a `block_e` cap one row per destination block
+(NR = NB), with one a tuned cap that chunks oversized blocks into several
+consecutive rows (`rowblk_t` names each row's block — see
+`kernel.block_edges_topology`). The tiling is purely topological
+(src / local-dst / original-slot permutation): per-sweep edge validity —
+which churns with every batch update and with the repair
 boundary/interior masks — is re-tiled on device with a single gather
 through `perm_t`, so re-tiling on host is needed only when topology slots
 change (insertions rewrite src/dst), not per wave and not per deletion.
@@ -12,6 +16,15 @@ Because no destination block straddles a shard boundary, sweep results are
 bit-identical for every S — the shard axis only shapes the launch grid
 (and, under a mesh, which slice a device owns). `core/engine.py` owns the
 cache; this module owns the kernel launch.
+
+`SortedGraph` is the second prepared representation the autotuner can
+pick (`impl="sorted"`): the kept edge slots fully sorted by destination.
+Its sweep is the same math lowered through XLA's sorted segment-min — a
+compiled executable on every platform, where the Pallas kernel runs
+interpret-mode off-TPU. Besides the sorted-reduction lowering it sweeps
+only the *occupied* slots (the jnp reference sweeps every capacity slot),
+which is where the measured win over the reference comes from on
+slack-provisioned serving snapshots.
 """
 from __future__ import annotations
 
@@ -26,54 +39,101 @@ from repro.kernels.edge_relax import kernel, ref
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=("src_t", "dstloc_t", "valid_t", "perm_t", "slot_t"),
-         meta_fields=("n", "block_v"))
+         data_fields=("src_t", "dstloc_t", "valid_t", "perm_t", "slot_t",
+                      "rowblk_t"),
+         meta_fields=("n", "block_v", "nb"))
 @dataclasses.dataclass(frozen=True)
 class BlockedGraph:
-    src_t: jax.Array     # int32[S, NB, BE] source vertex per tile slot
-    dstloc_t: jax.Array  # int32[S, NB, BE] destination local to the block
-    valid_t: jax.Array   # int32[S, NB, BE] validity baked at prepare time
-    perm_t: jax.Array    # int32[S, NB, BE] original edge-slot index
-    slot_t: jax.Array    # int32[S, NB, BE] 1 on real slots, 0 on padding
+    src_t: jax.Array     # int32[S, NR, BE] source vertex per tile slot
+    dstloc_t: jax.Array  # int32[S, NR, BE] destination local to the block
+    valid_t: jax.Array   # int32[S, NR, BE] validity baked at prepare time
+    perm_t: jax.Array    # int32[S, NR, BE] original edge-slot index
+    slot_t: jax.Array    # int32[S, NR, BE] 1 on real slots, 0 on padding
+    rowblk_t: jax.Array  # int32[S, NR] local destination block of each row
     n: int
     block_v: int
+    nb: int              # destination blocks per shard (NR >= nb)
 
     @property
     def shards(self) -> int:
         """Vertex-shard count S of the tiling (leading tile axis)."""
         return self.src_t.shape[0]
 
+    @property
+    def chunked(self) -> bool:
+        """True when some destination block spans several tile rows."""
+        return self.src_t.shape[1] != self.nb
+
     def tile_mask(self, edge_mask: jax.Array) -> jax.Array:
         """Re-tile a per-edge mask (original slot order) on device."""
+        if edge_mask.shape[0] == 0:  # zero-capacity graph: all-pad tiles
+            return jnp.zeros_like(self.slot_t)
         return jnp.where(self.slot_t != 0,
                          edge_mask[self.perm_t], False).astype(jnp.int32)
 
     def tile_plane(self, plane: jax.Array, fill) -> jax.Array:
         """Pad + reshape a per-vertex plane [V] to dst tiles [S, NB, BV]."""
-        s, nb, _ = self.src_t.shape
-        npad = s * nb * self.block_v
+        s = self.src_t.shape[0]
+        npad = s * self.nb * self.block_v
         padded = jnp.full((npad,), fill, plane.dtype).at[:self.n].set(plane)
-        return padded.reshape(s, nb, self.block_v)
+        return padded.reshape(s, self.nb, self.block_v)
+
+    def tile_plane_rows(self, plane: jax.Array, fill) -> jax.Array:
+        """Per-vertex plane [V] → per-*row* dst tiles [S, NR, BV].
+
+        The chunked kernel grid walks tile rows, so per-destination data
+        (hub flags) is gathered out to one tile per row; rows of the same
+        block share the block's tile. Collapses to `tile_plane` when the
+        tiling is unchunked.
+        """
+        blocks = self.tile_plane(plane, fill)
+        if not self.chunked:
+            return blocks
+        return jnp.take_along_axis(blocks, self.rowblk_t[..., None], axis=1)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("src_s", "dst_s", "perm_s"),
+         meta_fields=("n",))
+@dataclasses.dataclass(frozen=True)
+class SortedGraph:
+    """Kept edge slots fully sorted by destination (the `sorted` impl).
+
+    `perm_s` maps each sorted position back to its original edge slot, so
+    per-sweep masks re-tile with one gather — the same contract as
+    `BlockedGraph.tile_mask`. Sorting is total (by dst vertex, not dst
+    block), which is what lets the sweep lower through
+    `segment_min(indices_are_sorted=True)`.
+    """
+    src_s: jax.Array   # int32[M] source vertex, dst-sorted order
+    dst_s: jax.Array   # int32[M] destination vertex, ascending
+    perm_s: jax.Array  # int32[M] original edge-slot index
+    n: int
 
 
 def prepare(src, dst, valid, n: int, block_v: int = 512,
-            shards: int = 1) -> BlockedGraph:
+            shards: int = 1, block_e: int | None = None) -> BlockedGraph:
     """Tile every edge slot; bake `valid` into valid_t (legacy entry)."""
     src = np.asarray(src)
     dst = np.asarray(dst)
     valid = np.asarray(valid, bool)
-    src_t, dstloc_t, perm_t, slot_t, bv = kernel.block_edges_topology(
-        src, dst, np.ones(len(src), bool), n, block_v)
-    valid_t = np.where(slot_t != 0, valid[perm_t].astype(np.int32), 0)
-    src_t, dstloc_t, valid_t, perm_t, slot_t = kernel.shard_tiling(
-        shards, src_t, dstloc_t, valid_t.astype(np.int32), perm_t, slot_t)
+    src_t, dstloc_t, perm_t, slot_t, rowblk, bv = kernel.block_edges_topology(
+        src, dst, np.ones(len(src), bool), n, block_v, block_e)
+    valid_t = (np.where(slot_t != 0, valid[perm_t].astype(np.int32), 0)
+               if len(valid) else np.zeros_like(slot_t))
+    nb = -(-n // bv)
+    rowblk_t, nb_loc, src_t, dstloc_t, valid_t, perm_t, slot_t = \
+        kernel.shard_tiling(shards, nb, rowblk, src_t, dstloc_t,
+                            valid_t.astype(np.int32), perm_t, slot_t)
     return BlockedGraph(jnp.asarray(src_t), jnp.asarray(dstloc_t),
                         jnp.asarray(valid_t), jnp.asarray(perm_t),
-                        jnp.asarray(slot_t), n, bv)
+                        jnp.asarray(slot_t), jnp.asarray(rowblk_t),
+                        n, bv, nb_loc)
 
 
 def prepare_topology(src, dst, keep, n: int, block_v: int = 512,
-                     shards: int = 1) -> BlockedGraph:
+                     shards: int = 1,
+                     block_e: int | None = None) -> BlockedGraph:
     """Tile only the `keep` slots (host sync; amortized by core/engine.py).
 
     `keep` should be the currently-occupied slots: future deletions only
@@ -82,7 +142,9 @@ def prepare_topology(src, dst, keep, n: int, block_v: int = 512,
 
     `shards` splits the destination-block tiling into that many contiguous
     vertex shards (the leading [S] tile axis — see `kernel.shard_tiling`);
-    results are bit-identical for every S.
+    `block_e` caps the tile-row width, chunking oversized destination
+    blocks into several rows. Results are bit-identical for every S and
+    every block_e — both are launch-structure knobs the autotuner sweeps.
 
     The returned tiling sets `valid_t` to slot *occupancy*, not edge
     validity — it must only be consumed through `relax_sweep`, which
@@ -90,13 +152,29 @@ def prepare_topology(src, dst, keep, n: int, block_v: int = 512,
     Feeding it to the legacy `edge_relax` (which trusts `valid_t`) would
     treat edges deleted after prepare time as still present.
     """
-    src_t, dstloc_t, perm_t, slot_t, bv = kernel.block_edges_topology(
-        np.asarray(src), np.asarray(dst), np.asarray(keep, bool), n, block_v)
-    src_t, dstloc_t, perm_t, slot_t = kernel.shard_tiling(
-        shards, src_t, dstloc_t, perm_t, slot_t)
+    src_t, dstloc_t, perm_t, slot_t, rowblk, bv = kernel.block_edges_topology(
+        np.asarray(src), np.asarray(dst), np.asarray(keep, bool), n, block_v,
+        block_e)
+    nb = -(-n // bv)
+    rowblk_t, nb_loc, src_t, dstloc_t, perm_t, slot_t = kernel.shard_tiling(
+        shards, nb, rowblk, src_t, dstloc_t, perm_t, slot_t)
     return BlockedGraph(jnp.asarray(src_t), jnp.asarray(dstloc_t),
                         jnp.asarray(slot_t), jnp.asarray(perm_t),
-                        jnp.asarray(slot_t), n, bv)
+                        jnp.asarray(slot_t), jnp.asarray(rowblk_t),
+                        n, bv, nb_loc)
+
+
+def prepare_sorted(src, dst, keep, n: int) -> SortedGraph:
+    """Sort the kept edge slots by destination (host sync, once per
+    topology — the `sorted` twin of `prepare_topology`)."""
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    keep = np.asarray(keep, bool)
+    idx = np.flatnonzero(keep)
+    order = np.argsort(dst[idx], kind="stable")
+    perm = idx[order].astype(np.int32)
+    return SortedGraph(jnp.asarray(src[perm]), jnp.asarray(dst[perm]),
+                       jnp.asarray(perm), n)
 
 
 def edge_relax(keys: jax.Array, bg: BlockedGraph, step,
@@ -104,17 +182,19 @@ def edge_relax(keys: jax.Array, bg: BlockedGraph, step,
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
     interpret = jax.default_backend() != "tpu"
+    rowblk_t = bg.rowblk_t if bg.chunked else None
     if use_pallas or interpret is False:
         return kernel.edge_relax_pallas(keys, bg.src_t, bg.dstloc_t,
                                         bg.valid_t, step, bg.n, bg.block_v,
-                                        interpret=interpret)
+                                        interpret=interpret,
+                                        rowblk_t=rowblk_t, nb=bg.nb)
     # jnp fallback on the tiled representation (same math, XLA segment_min).
-    s, nb, _ = bg.src_t.shape
-    flat_dst = (bg.dstloc_t
-                + (jnp.arange(s * nb) * bg.block_v).reshape(s, nb, 1))
+    s, nr, _ = bg.src_t.shape
+    blk = bg.rowblk_t + (jnp.arange(s) * bg.nb)[:, None]      # global block
+    flat_dst = bg.dstloc_t + blk[..., None] * bg.block_v
     return ref.edge_relax(keys, bg.src_t.reshape(-1), flat_dst.reshape(-1),
                           bg.valid_t.reshape(-1) != 0, step,
-                          s * nb * bg.block_v)[:bg.n]
+                          s * bg.nb * bg.block_v)[:bg.n]
 
 
 def relax_sweep(keys: jax.Array, bg: BlockedGraph, edge_mask: jax.Array,
@@ -132,11 +212,37 @@ def relax_sweep(keys: jax.Array, bg: BlockedGraph, edge_mask: jax.Array,
     """
     mask_t = bg.tile_mask(edge_mask)
     if hub is None:
-        s, nb, _ = bg.src_t.shape
-        hub_t = jnp.zeros((s, nb, bg.block_v), jnp.int32)
+        s, nr, _ = bg.src_t.shape
+        hub_t = jnp.zeros((s, nr, bg.block_v), jnp.int32)
     else:
-        hub_t = bg.tile_plane(hub.astype(jnp.int32), 0)
+        hub_t = bg.tile_plane_rows(hub.astype(jnp.int32), 0)
     interpret = jax.default_backend() != "tpu"
+    rowblk_t = bg.rowblk_t if bg.chunked else None
     return kernel.relax_sweep_pallas(keys, hub_t, bg.src_t, bg.dstloc_t,
                                      mask_t, step, inf, clear_bit,
-                                     bg.n, bg.block_v, interpret=interpret)
+                                     bg.n, bg.block_v, interpret=interpret,
+                                     rowblk_t=rowblk_t, nb=bg.nb)
+
+
+def relax_sweep_sorted(keys: jax.Array, sg: SortedGraph,
+                       edge_mask: jax.Array, step, inf, clear_bit=0,
+                       hub: jax.Array | None = None) -> jax.Array:
+    """The `sorted` impl of the same sweep: compiled XLA everywhere.
+
+    Identical math to `relax_sweep` over the identical edge multiset —
+    gather, extend, mask, min-reduce by destination — so results are
+    bit-identical to both the kernel path and the jnp reference
+    (`tests/test_kernel_tuning.py` pins all three). The reduction is a
+    `segment_min` over the destination-sorted slots with
+    `indices_are_sorted=True`, and only the occupied slots participate.
+    """
+    mask = edge_mask[sg.perm_s]
+    gathered = jnp.take(keys, sg.src_s, axis=0)
+    cand = jnp.minimum(gathered + step, inf)
+    if hub is not None:
+        hub_e = jnp.take(hub, sg.dst_s, axis=0)
+        cand = jnp.where(hub_e, cand & ~jnp.int32(clear_bit), cand)
+    cand = jnp.where(mask, cand, inf)
+    out = jax.ops.segment_min(cand, sg.dst_s, num_segments=sg.n,
+                              indices_are_sorted=True)
+    return jnp.minimum(out, inf)   # empty segments fill with int32-max

@@ -104,9 +104,17 @@ class ServeConfig:
     backend: str = "auto"
     block_v: int = 512
     tile_shards: int = 1
+    block_e: int | None = None   # tile-row width cap of the pallas tiling
     use_minplus_kernel: bool = False
     mesh: str = "none"
     shards: int = 1
+    # autotuning + fusion (DESIGN.md §7)
+    autotune: bool = False       # measure & adopt the fastest sweep impl
+                                 # per snapshot shape (core/autotune.py)
+    tune_table: str | None = None  # on-disk tuning table; restarts skip
+                                   # the measurement entirely
+    fused: bool = False          # pipelined chunks as fused megakernel
+                                 # dispatches with donated planes
     # capacity / grow-in-place (DESIGN.md §6)
     capacity: int | None = None  # initial edge capacity (None = provision
                                  # for the scenario's worst-case inserts)
@@ -198,13 +206,10 @@ class ServeLoop:
             self.mesh = make_host_mesh(model=cfg.shards)
             validate_landmark_sharding(self.mesh, cfg.landmarks)
         self.engine = RelaxEngine(backend=cfg.backend, block_v=cfg.block_v,
-                                  shards=cfg.tile_shards)
-        # Grow-in-place policy: align grown vertex counts to the engine's
-        # tiling unit (engine.plan_alignment = block_v · shards) so grown
-        # and fresh tilings share shape invariants, backend-independent.
-        self.growth_policy = GrowthPolicy(factor=cfg.growth_factor,
-                                          block_v=self.engine.block_v,
-                                          shards=self.engine.shards)
+                                  shards=cfg.tile_shards,
+                                  block_e=cfg.block_e,
+                                  autotune=cfg.autotune,
+                                  tune_table=cfg.tune_table)
         self.store: SnapshotStore | None = None
         self.report: ServeReport | None = None
         # host-side current edge set, maintained incrementally: a
@@ -214,6 +219,18 @@ class ServeLoop:
         self._edge_list: list[tuple[int, int]] = []
         self._edge_pos: dict[tuple[int, int], int] = {}
         self._oracle_adj: dict[int, dict] = {}  # version -> adjacency
+
+    @property
+    def growth_policy(self) -> GrowthPolicy:
+        """Grow-in-place policy, aligned to the engine's *current* tiling
+        unit (engine.plan_alignment = block_v · shards) so grown and fresh
+        tilings share shape invariants, backend-independent. A property —
+        not frozen at construction — because adopting an autotuned
+        kernel-impl winner updates the engine's block_v, and grown vertex
+        counts must respect the alignment of the tiles actually served."""
+        return GrowthPolicy(factor=self.cfg.growth_factor,
+                            block_v=self.engine.block_v,
+                            shards=self.engine.shards)
 
     def _log(self, msg: str) -> None:
         if not self.cfg.quiet:
@@ -386,7 +403,8 @@ class ServeLoop:
         cfg = self.cfg
         upd = pipelined_update(snap, batch, plan=plan, g_new=g_next,
                                mesh=self.mesh, improved=True,
-                               chunk_sweeps=cfg.chunk_sweeps)
+                               chunk_sweeps=cfg.chunk_sweeps,
+                               fused=cfg.fused)
         head = snap.version + 1
         while True:
             try:
@@ -618,6 +636,22 @@ def main() -> None:
                     help="vertex-shard count of the pallas tiling (the "
                          "kernel grid's leading axis; bit-identical for "
                          "every value)")
+    ap.add_argument("--block-e", type=int, default=None,
+                    help="tile-row width cap of the pallas tiling; chunks "
+                         "power-law hub blocks into bounded rows (default: "
+                         "widest block)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="measure sweep-impl candidates per snapshot shape "
+                         "and adopt the fastest (core/autotune.py); winners "
+                         "are cached per (n, capacity, shards)")
+    ap.add_argument("--tune-table", default=None,
+                    help="path of the on-disk tuning table; a restart with "
+                         "the same table re-tunes nothing (implies "
+                         "--autotune)")
+    ap.add_argument("--fused", action="store_true",
+                    help="run pipelined update chunks as fused megakernel "
+                         "dispatches (seed + K sweeps in one launch, "
+                         "labelling planes donated; DESIGN.md §7)")
     ap.add_argument("--use-minplus-kernel", action="store_true",
                     help="route the Eq.-3 upper bound through the Pallas "
                          "minplus kernel")
@@ -660,6 +694,9 @@ def main() -> None:
         microbatch=args.microbatch, pipeline=args.pipeline,
         chunk_sweeps=args.chunk_sweeps, backend=args.backend,
         block_v=args.block_v, tile_shards=args.tile_shards,
+        block_e=args.block_e,
+        autotune=args.autotune or args.tune_table is not None,
+        tune_table=args.tune_table, fused=args.fused,
         use_minplus_kernel=args.use_minplus_kernel, mesh=args.mesh,
         shards=args.shards, capacity=args.capacity, grow=args.grow,
         growth_factor=args.growth_factor, verify=args.verify,

@@ -1,0 +1,183 @@
+"""Autotuner cache contract: the tuning table is keyed by snapshot
+*shape* and round-trips through disk.
+
+Three behaviors pin the contract (DESIGN.md §7):
+
+  * persistence — a table written by one engine reloads into a fresh
+    engine and yields the same plan with **zero** re-tunes (the serve
+    restart path behind `--tune-table`);
+  * shape sensitivity — edge churn at fixed (n, capacity, shards) reuses
+    the winner, while `coo.grow` / `grow_snapshot` change the key and
+    force a fresh measurement (the same staleness class the PR 5
+    fingerprint guards at the plan level);
+  * LRU interaction — the serving pipeline's two-live-snapshot pattern
+    (committed N answering queries, N+1 under construction) alternates
+    prepares without ever re-tuning or retiling.
+
+Off-TPU the candidate space is the single `sorted` config, so these run
+in the fast job: each tune() is two small jit compilations.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import autotune as at
+from repro.core.construct import build_labelling, select_landmarks_by_degree
+from repro.core.engine import RelaxEngine
+from repro.core.snapshot import Snapshot, grow_snapshot
+from repro.graphs import generators as gen
+from repro.graphs.coo import apply_batch, from_edges, grow, make_batch
+
+
+def _graph(n=90, extra=80, slack=40, seed=5):
+    edges = gen.random_connected(n, extra_edges=extra, seed=seed)
+    return from_edges(n, edges, edges.shape[0] + slack), edges
+
+
+# --- measurement discipline -------------------------------------------------
+
+def test_measure_compiled_call_accounting():
+    """First call timed apart as compile, `warmup` discarded, steady =
+    min over `iters` — so 1 + warmup + iters calls total."""
+    calls = []
+
+    def fn(x):
+        calls.append(1)
+        return np.asarray(x) + 1
+
+    compile_us, steady_us = at.measure_compiled(fn, 3, warmup=2, iters=4)
+    assert len(calls) == 1 + 2 + 4
+    assert compile_us >= 0 and steady_us >= 0
+
+
+def test_tune_returns_winner_from_candidate_space():
+    g, _ = _graph(n=60, extra=40, slack=20)
+    res = at.tune(g, shards=2, block_v=32, include_kernel=False, iters=2)
+    assert res.config == at.TuneConfig("sorted", 32, None, 2)
+    assert res.steady_us > 0 and res.jnp_us > 0 and res.compile_us > 0
+    assert [c for c, _, _ in res.candidates] == [res.config]
+
+
+# --- table round-trip: persist → reload → same plan, zero re-tune -----------
+
+def test_table_roundtrip_zero_retune(tmp_path):
+    g, _ = _graph()
+    path = str(tmp_path / "tuning.json")
+
+    e1 = RelaxEngine(backend="pallas", block_v=32, shards=2,
+                     autotune=True, tune_table=path)
+    p1 = e1.prepare(g)
+    assert e1.tune_count == 1
+    assert p1.impl == "sorted" and p1.sorted_tiles is not None  # off-TPU
+
+    # the table hit disk atomically, in the documented schema
+    with open(path) as f:
+        doc = json.load(f)
+    key = at.table_key(g.n, g.src.shape[0], 2)
+    assert doc["version"] == 1 and key in doc["entries"]
+    assert doc["entries"][key]["config"] == e1._tuned_cfg.to_dict()
+
+    # a fresh engine reloads the table: same plan, zero measurement runs
+    e2 = RelaxEngine(backend="pallas", block_v=32, shards=2,
+                     autotune=True, tune_table=path)
+    p2 = e2.prepare(g)
+    assert e2.tune_count == 0, "table reload must skip the tuner entirely"
+    assert p2.impl == p1.impl
+    np.testing.assert_array_equal(np.asarray(p2.sorted_tiles.perm_s),
+                                  np.asarray(p1.sorted_tiles.perm_s))
+    # and the standalone table API round-trips the config
+    assert at.TuneTable(path).get(key) == e2._tuned_cfg == e1._tuned_cfg
+
+
+def test_edge_churn_at_fixed_shape_reuses_winner():
+    """Applying a batch (same n, same capacity) must not re-tune: the
+    table keys shape, the plan cache keys content."""
+    g, edges = _graph()
+    ups = gen.random_batch_updates(edges, g.n, n_ins=6, n_del=6, seed=9)
+    g2 = apply_batch(g, make_batch(ups, pad_to=12))
+    assert g2.src.shape[0] == g.src.shape[0]
+
+    e = RelaxEngine(backend="pallas", block_v=32, shards=2, autotune=True)
+    e.prepare(g)
+    e.prepare(g2)
+    assert e.tune_count == 1
+    assert e.retile_count == 2  # different content: two plans, one tune
+    assert len(e.tune_table) == 1
+
+
+# --- fingerprint sensitivity: grown shapes must re-tune ---------------------
+
+def test_grow_changes_table_key_and_retunes():
+    g, _ = _graph()
+    e = RelaxEngine(backend="pallas", block_v=32, shards=2, autotune=True)
+    e.prepare(g)
+    assert e.tune_count == 1
+
+    g_cap = grow(g, capacity=g.src.shape[0] + 64)
+    e.prepare(g_cap)
+    assert e.tune_count == 2, "grown capacity must force a fresh tune"
+
+    g_n = grow(g_cap, n=g.n + 32)
+    e.prepare(g_n)
+    assert e.tune_count == 3, "grown n must force a fresh tune"
+
+    keys = {at.table_key(x.n, x.src.shape[0], 2) for x in (g, g_cap, g_n)}
+    assert len(keys) == 3 and set(e.tune_table.entries) == keys
+
+
+def test_grow_snapshot_retunes():
+    g, _ = _graph(n=70, extra=50, slack=24)
+    lab = build_labelling(g, select_landmarks_by_degree(g, 4))
+    e = RelaxEngine(backend="pallas", block_v=32, shards=1, autotune=True)
+    e.prepare(g)
+    snap = grow_snapshot(Snapshot(0, g, lab, None),
+                         capacity=g.src.shape[0] + 48, n=g.n + 2)
+    e.prepare(snap.graph)
+    assert e.tune_count == 2
+    assert len(e.tune_table) == 2
+
+
+# --- LRU interaction: the two-live-snapshot serve pattern -------------------
+
+def test_two_live_snapshots_alternate_without_retuning():
+    """Committed-N / building-N+1 alternation (PR 4's serve case): the
+    keyed plan cache absorbs the alternation and the tuner never runs
+    again — one measurement amortizes over the whole stream."""
+    g, edges = _graph()
+    ups = gen.random_batch_updates(edges, g.n, n_ins=5, n_del=5, seed=2)
+    g2 = apply_batch(g, make_batch(ups, pad_to=10))
+
+    e = RelaxEngine(backend="pallas", block_v=32, shards=2, autotune=True,
+                    cache_plans=2)
+    pa = e.prepare(g)
+    pb = e.prepare(g2)
+    assert e.tune_count == 1 and e.retile_count == 2
+    pa2 = e.prepare(g)
+    pb2 = e.prepare(g2)
+    assert e.retile_count == 2, "keyed cache missed a live snapshot"
+    assert e.plan_cache_hits == 2 and e.tune_count == 1
+    assert pa2.sorted_tiles is pa.sorted_tiles
+    assert pb2.sorted_tiles is pb.sorted_tiles
+
+
+def test_lru_eviction_respects_tuned_key():
+    """Evicting past capacity still re-tunes zero times for known shapes,
+    and the cache key carries the tuned config — a plan prepared under
+    one winner can never be served for another."""
+    g, edges = _graph()
+    ups = gen.random_batch_updates(edges, g.n, n_ins=4, n_del=4, seed=3)
+    g2 = apply_batch(g, make_batch(ups, pad_to=8))
+    ups2 = gen.random_batch_updates(edges, g.n, n_ins=3, n_del=3, seed=4)
+    g3 = apply_batch(g, make_batch(ups2, pad_to=8))
+
+    e = RelaxEngine(backend="pallas", block_v=32, shards=2, autotune=True,
+                    cache_plans=2)
+    for snap in (g, g2, g3):          # 3 same-shape snapshots, capacity 2
+        e.prepare(snap)
+    assert e.tune_count == 1
+    assert e.retile_count == 3
+    e.prepare(g)                      # evicted → retile, still no re-tune
+    assert e.retile_count == 4 and e.tune_count == 1

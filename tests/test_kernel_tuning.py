@@ -1,0 +1,192 @@
+"""Golden tests for every sweep configuration the autotuner may emit.
+
+The autotuner (`core/autotune.py`) is a pure performance decision only if
+every candidate in its space — each (impl, block_v, block_e, tile_shards)
+point — computes the *identical* sweep. These tests pin that: each
+candidate's `relax_sweep` / `relax_sweep_sorted` / `edge_relax` output is
+bit-compared against the plain jnp segment-min reference, on a topology
+with capacity slack, ragged edge counts (block_e not dividing per-block
+counts), a ragged tail destination block, and the degenerate one-block
+tiling. The rectangular min-plus kernel the tuned query path leans on is
+pinned the same way.
+
+Deliberately fast (no `slow` mark): tiny graphs keep interpret-mode
+Pallas in the milliseconds so the fast `-m "not slow"` CI job runs the
+full candidate space on every push.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.autotune import TuneConfig, candidate_space
+from repro.graphs.segment import masked_segment_min
+from repro.kernels.edge_relax import ops as er_ops
+from repro.kernels.minplus.ops import minplus_bound
+
+INF32 = 1 << 29
+
+
+def _topology(n=61, m=240, seed=0):
+    """Random multigraph slots with capacity slack and per-sweep churn.
+
+    `keep` marks occupied slots (what prepare-time sees); `mask` is the
+    live-edge mask of one particular sweep (a strict subset — deletions
+    since prepare). n=61 is deliberately not block_v-aligned so every
+    tiling has a ragged tail block.
+    """
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m).astype(np.int32)
+    dst = rng.integers(0, n, m).astype(np.int32)
+    keep = rng.random(m) < 0.8
+    mask = keep & (rng.random(m) < 0.85)
+    keys = rng.integers(0, 2 * n, n).astype(np.int32)
+    hub = rng.random(n) < 0.3
+    return src, dst, keep, mask, keys, hub
+
+
+def _ref_sweep(keys, src, dst, mask, n, step, inf, clear_bit=0, hub=None):
+    cand = jnp.minimum(jnp.asarray(keys)[np.asarray(src)] + step, inf)
+    if hub is not None and clear_bit:
+        cand = jnp.where(jnp.asarray(hub)[np.asarray(dst)],
+                         cand & ~jnp.int32(clear_bit), cand)
+    return masked_segment_min(cand, jnp.asarray(dst), n,
+                              jnp.asarray(mask), inf)
+
+
+def _run_config(cfg: TuneConfig, src, dst, keep, mask, keys, hub, n,
+                step=2, clear_bit=1):
+    keys_j = jnp.asarray(keys)
+    mask_j = jnp.asarray(mask)
+    hub_j = jnp.asarray(hub)
+    if cfg.impl == "sorted":
+        sg = er_ops.prepare_sorted(src, dst, keep, n)
+        return er_ops.relax_sweep_sorted(keys_j, sg, mask_j, step, INF32,
+                                         clear_bit=clear_bit, hub=hub_j)
+    bg = er_ops.prepare_topology(src, dst, keep, n, block_v=cfg.block_v,
+                                 shards=cfg.tile_shards, block_e=cfg.block_e)
+    return er_ops.relax_sweep(keys_j, bg, mask_j, step, INF32,
+                              clear_bit=clear_bit, hub=hub_j)
+
+
+# --- every config the tuner may emit ---------------------------------------
+
+_SPACE = candidate_space(shards=2, block_v=32, include_kernel=True)
+
+
+@pytest.mark.parametrize(
+    "cfg", _SPACE,
+    ids=[f"{c.impl}-bv{c.block_v}-be{c.block_e}-ts{c.tile_shards}"
+         for c in _SPACE])
+def test_candidate_space_bit_parity(cfg):
+    """Every point in the tuner's candidate space (kernel grid forced on,
+    as on TPU) produces the jnp reference bit-for-bit — including the
+    block_v > n degenerate single-block tilings the KERNEL_BLOCK_V grid
+    collapses to at this size."""
+    src, dst, keep, mask, keys, hub = _topology()
+    got = _run_config(cfg, src, dst, keep, mask, keys, hub, n=61)
+    want = _ref_sweep(keys, src, dst, mask, 61, 2, INF32,
+                      clear_bit=1, hub=hub)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_candidate_space_shape_off_tpu():
+    """Off-TPU the tuner only ever emits the sorted impl (interpret-mode
+    kernel timings are not speed-representative), and every emitted
+    config survives the table's JSON round-trip."""
+    space = candidate_space(shards=2, block_v=64, include_kernel=False)
+    assert space == [TuneConfig("sorted", 64, None, 2)]
+    for cfg in candidate_space(shards=4, block_v=128, include_kernel=True):
+        assert cfg.impl in ("kernel", "sorted")
+        assert TuneConfig.from_dict(cfg.to_dict()) == cfg
+
+
+# --- ragged block_e chunking ------------------------------------------------
+
+@pytest.mark.parametrize("shards", [1, 2])
+@pytest.mark.parametrize("block_e", [1, 7, 13, 1024])
+def test_ragged_block_e_chunking(shards, block_e):
+    """block_e values that do not divide the per-block edge counts (and
+    the two extremes: one edge per row, one row per block) chunk blocks
+    into ragged rows — the segment-min epilogue must reassemble them
+    bit-identically."""
+    src, dst, keep, mask, keys, hub = _topology(seed=shards * 31 + block_e)
+    cfg = TuneConfig("kernel", 16, block_e, shards)
+    got = _run_config(cfg, src, dst, keep, mask, keys, hub, n=61)
+    want = _ref_sweep(keys, src, dst, mask, 61, 2, INF32,
+                      clear_bit=1, hub=hub)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_degenerate_single_block():
+    """block_v >= n: the whole vertex set is one destination block."""
+    src, dst, keep, mask, keys, hub = _topology(n=30, m=90, seed=7)
+    for cfg in (TuneConfig("kernel", 64, None, 1),
+                TuneConfig("kernel", 64, 5, 1)):
+        got = _run_config(cfg, src, dst, keep, mask, keys, hub, n=30)
+        want = _ref_sweep(keys, src, dst, mask, 30, 2, INF32,
+                          clear_bit=1, hub=hub)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("impl", ["kernel", "sorted"])
+def test_no_hub_plain_relaxation(impl):
+    """clear_bit=0 / hub=None variant (construction + BiBFS sweeps)."""
+    src, dst, keep, mask, keys, _ = _topology(seed=11)
+    if impl == "sorted":
+        sg = er_ops.prepare_sorted(src, dst, keep, 61)
+        got = er_ops.relax_sweep_sorted(jnp.asarray(keys), sg,
+                                        jnp.asarray(mask), 1, INF32)
+    else:
+        bg = er_ops.prepare_topology(src, dst, keep, 61, block_v=16,
+                                     shards=2, block_e=7)
+        got = er_ops.relax_sweep(jnp.asarray(keys), bg,
+                                 jnp.asarray(mask), 1, INF32)
+    want = _ref_sweep(keys, src, dst, mask, 61, 1, INF32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("impl", ["kernel", "sorted"])
+def test_all_edges_masked_out(impl):
+    """A sweep whose live-edge mask is empty returns all-INF (jax's
+    segment_min int32-max fill must be clamped, never leaked)."""
+    src, dst, keep, _, keys, hub = _topology(seed=13)
+    mask = np.zeros_like(keep)
+    cfg = (TuneConfig("sorted", 16, None, 1) if impl == "sorted"
+           else TuneConfig("kernel", 16, 7, 2))
+    got = _run_config(cfg, src, dst, keep, mask, keys, hub, n=61)
+    np.testing.assert_array_equal(np.asarray(got), np.full(61, INF32))
+
+
+# --- legacy baked-validity entry (edge_relax) -------------------------------
+
+@pytest.mark.parametrize("block_e", [None, 7])
+def test_edge_relax_chunked_parity(block_e):
+    """The legacy `edge_relax` (validity baked at prepare time) stays
+    bit-identical to its oracle on chunked and unchunked tilings."""
+    src, dst, keep, _, keys, _ = _topology(seed=17)
+    bg = er_ops.prepare(src, dst, keep, 61, block_v=16, shards=2,
+                        block_e=block_e)
+    got = er_ops.edge_relax(jnp.asarray(keys), bg, 1, use_pallas=True)
+    want = _ref_sweep(keys, src, dst, keep, 61, 1, INF32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --- rectangular min-plus ---------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1, 1, 1), (7, 4, 12), (3, 16, 16),
+                                   (5, 9, 2)])
+def test_minplus_rectangular_parity(shape):
+    """The min-plus kernel behind the tuned query path: rectangular
+    S [B,P] × H [P,R] × T [B,R] shapes (including the shard-local P < R
+    slice `core/shard.py` contracts) match the jnp oracle bitwise."""
+    b, p, r = shape
+    rng = np.random.default_rng(b * 100 + p * 10 + r)
+    s = jnp.asarray(rng.integers(0, INF32, (b, p)).astype(np.int32))
+    h = jnp.asarray(rng.integers(0, INF32, (p, r)).astype(np.int32))
+    t = jnp.asarray(rng.integers(0, INF32, (b, r)).astype(np.int32))
+    got = minplus_bound(s, h, t, use_pallas=True)
+    want = minplus_bound(s, h, t, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

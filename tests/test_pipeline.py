@@ -94,6 +94,88 @@ def test_pipelined_update_mesh_matches():
             np.asarray(getattr(labm, f)))
 
 
+# --- fused megakernel chunks ≡ monolithic update ---------------------------
+
+@pytest.mark.parametrize("improved", [True, False])
+@pytest.mark.parametrize("chunk_sweeps", [1, 2, 3])
+def test_fused_update_matches_monolithic(improved, chunk_sweeps):
+    """The fused path (seed + K sweeps in one dispatch, later chunks
+    donating the labelling plane) is bit-identical to `batchhl_update`
+    for every chunk size × variant."""
+    g, lab, batch = _instance()
+    gm, labm, affm = batchhl_update(g, batch, lab, improved=improved)
+    nxt, aff = run_pipelined_update(pipelined_update(
+        Snapshot(0, g, lab, None), batch, improved=improved,
+        chunk_sweeps=chunk_sweeps, fused=True))
+    np.testing.assert_array_equal(np.asarray(aff), np.asarray(affm))
+    for f in ("dist", "hub", "highway"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(nxt.labelling, f)),
+            np.asarray(getattr(labm, f)))
+    np.testing.assert_array_equal(np.asarray(nxt.graph.valid),
+                                  np.asarray(gm.valid))
+
+
+@pytest.mark.parametrize("impl", ["kernel", "sorted"])
+def test_fused_update_pallas_plans(impl):
+    """Fused chunks compose with both Pallas plan impls: the tiled
+    kernel tiling and the autotuned dst-sorted twin."""
+    g, lab, batch = _instance()
+    gm, labm, affm = batchhl_update(g, batch, lab)
+    g_next = apply_batch(g, batch)
+    if impl == "kernel":
+        engine = RelaxEngine(backend="pallas", block_v=32, shards=2)
+    else:
+        engine = RelaxEngine(backend="pallas", block_v=32, autotune=True)
+    plan = engine.prepare(g_next)
+    assert plan.impl == impl
+    nxt, aff = run_pipelined_update(pipelined_update(
+        Snapshot(0, g, lab, None), batch, plan=plan, g_new=g_next,
+        fused=True, chunk_sweeps=2))
+    np.testing.assert_array_equal(np.asarray(aff), np.asarray(affm))
+    np.testing.assert_array_equal(np.asarray(nxt.labelling.dist),
+                                  np.asarray(labm.dist))
+
+
+def test_fused_update_mesh_matches():
+    """Fused mesh twins (pmax convergence + donated mesh plane) ≡ the
+    unsharded monolith on this session's device mesh; the full
+    factorization sweep lives in `repro.core.snapshot._selftest`."""
+    from repro.launch.mesh import make_host_mesh
+    g, lab, batch = _instance()
+    gm, labm, affm = batchhl_update(g, batch, lab)
+    nxt, aff = run_pipelined_update(pipelined_update(
+        Snapshot(0, g, lab, None), batch, mesh=make_host_mesh(),
+        chunk_sweeps=2, fused=True))
+    np.testing.assert_array_equal(np.asarray(aff), np.asarray(affm))
+    for f in ("dist", "hub", "highway"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(nxt.labelling, f)),
+            np.asarray(getattr(labm, f)))
+
+
+def test_fused_donation_safety():
+    """Donation must never alias live inputs: running the identical
+    fused update twice from the same snapshot gives the same bits, and
+    the input labelling survives both runs untouched (a donated-buffer
+    reuse would corrupt one or the other)."""
+    g, lab, batch = _instance()
+    before = {f: np.array(getattr(lab, f)) for f in ("dist", "hub",
+                                                     "highway")}
+    outs = []
+    for _ in range(2):
+        nxt, aff = run_pipelined_update(pipelined_update(
+            Snapshot(0, g, lab, None), batch, fused=True, chunk_sweeps=1))
+        outs.append((np.asarray(aff),
+                     {f: np.asarray(getattr(nxt.labelling, f))
+                      for f in before}))
+    np.testing.assert_array_equal(outs[0][0], outs[1][0])
+    for f in before:
+        np.testing.assert_array_equal(outs[0][1][f], outs[1][1][f])
+        np.testing.assert_array_equal(np.asarray(getattr(lab, f)),
+                                      before[f])
+
+
 # --- pipelined serving: exact at the served version ------------------------
 
 @pytest.mark.parametrize("backend", ["jnp", "pallas"])
