@@ -153,7 +153,8 @@ def _tick_loop(name: str, g0, landmarks, edges, backend: str, mesh,
     return rows
 
 
-def _tune_rows(ds: str, g, tile_shards: int, block_v: int) -> list[str]:
+def _tune_rows(ds: str, g, tile_shards: int,
+               block_v: int) -> tuple[list[str], float]:
     """The `tune/` rows: one autotuner measurement per dataset shape.
 
     `tune/<ds>/jnp` is the reference wave's steady latency and

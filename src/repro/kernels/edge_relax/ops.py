@@ -41,7 +41,7 @@ from repro.kernels.edge_relax import kernel, ref
 @partial(jax.tree_util.register_dataclass,
          data_fields=("src_t", "dstloc_t", "valid_t", "perm_t", "slot_t",
                       "rowblk_t"),
-         meta_fields=("n", "block_v", "nb"))
+         meta_fields=("n", "block_v", "nb", "chunked"))
 @dataclasses.dataclass(frozen=True)
 class BlockedGraph:
     src_t: jax.Array     # int32[S, NR, BE] source vertex per tile slot
@@ -53,16 +53,16 @@ class BlockedGraph:
     n: int
     block_v: int
     nb: int              # destination blocks per shard (NR >= nb)
+    chunked: bool        # some destination block spans several tile rows
+    # `chunked` is recorded at prepare time from the pre-shard row count:
+    # post-shard shapes cannot distinguish a chunked tiling whose extra
+    # rows fit inside a short last shard (NR_loc == nb_loc) from an
+    # unchunked one, and skipping the row fold there drops relaxations.
 
     @property
     def shards(self) -> int:
         """Vertex-shard count S of the tiling (leading tile axis)."""
         return self.src_t.shape[0]
-
-    @property
-    def chunked(self) -> bool:
-        """True when some destination block spans several tile rows."""
-        return self.src_t.shape[1] != self.nb
 
     def tile_mask(self, edge_mask: jax.Array) -> jax.Array:
         """Re-tile a per-edge mask (original slot order) on device."""
@@ -122,13 +122,14 @@ def prepare(src, dst, valid, n: int, block_v: int = 512,
     valid_t = (np.where(slot_t != 0, valid[perm_t].astype(np.int32), 0)
                if len(valid) else np.zeros_like(slot_t))
     nb = -(-n // bv)
+    chunked = len(rowblk) != nb
     rowblk_t, nb_loc, src_t, dstloc_t, valid_t, perm_t, slot_t = \
         kernel.shard_tiling(shards, nb, rowblk, src_t, dstloc_t,
                             valid_t.astype(np.int32), perm_t, slot_t)
     return BlockedGraph(jnp.asarray(src_t), jnp.asarray(dstloc_t),
                         jnp.asarray(valid_t), jnp.asarray(perm_t),
                         jnp.asarray(slot_t), jnp.asarray(rowblk_t),
-                        n, bv, nb_loc)
+                        n, bv, nb_loc, chunked)
 
 
 def prepare_topology(src, dst, keep, n: int, block_v: int = 512,
@@ -156,12 +157,13 @@ def prepare_topology(src, dst, keep, n: int, block_v: int = 512,
         np.asarray(src), np.asarray(dst), np.asarray(keep, bool), n, block_v,
         block_e)
     nb = -(-n // bv)
+    chunked = len(rowblk) != nb
     rowblk_t, nb_loc, src_t, dstloc_t, perm_t, slot_t = kernel.shard_tiling(
         shards, nb, rowblk, src_t, dstloc_t, perm_t, slot_t)
     return BlockedGraph(jnp.asarray(src_t), jnp.asarray(dstloc_t),
                         jnp.asarray(slot_t), jnp.asarray(perm_t),
                         jnp.asarray(slot_t), jnp.asarray(rowblk_t),
-                        n, bv, nb_loc)
+                        n, bv, nb_loc, chunked)
 
 
 def prepare_sorted(src, dst, keep, n: int) -> SortedGraph:

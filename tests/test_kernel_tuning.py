@@ -120,6 +120,31 @@ def test_ragged_block_e_chunking(shards, block_e):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+def test_chunked_rows_hidden_in_short_last_shard():
+    """Chunked tiling whose extra rows fit inside a short last shard.
+
+    n=24, block_v=8, shards=2: three destination blocks, so the last
+    shard owns only one (nb_loc=2, one block short). block_e=4 chunks
+    that shard's lone block into two rows — exactly filling the short
+    shard, so NR_loc == nb_loc and post-shard shapes look unchunked.
+    The tiling must still report chunked and fold the per-row partials;
+    inferring chunkedness from shapes silently dropped relaxations here.
+    """
+    n = 24
+    rng = np.random.default_rng(0)
+    dst = np.array([1, 9, 16, 17, 18, 19, 20, 21, 2, 10], np.int32)
+    src = rng.integers(0, n, len(dst)).astype(np.int32)
+    keep = np.ones(len(dst), bool)
+    keys = rng.integers(0, 2 * n, n).astype(np.int32)
+    bg = er_ops.prepare_topology(src, dst, keep, n, block_v=8, shards=2,
+                                 block_e=4)
+    assert bg.chunked and bg.src_t.shape[1] == bg.nb
+    got = er_ops.relax_sweep(jnp.asarray(keys), bg, jnp.asarray(keep),
+                             1, INF32)
+    want = _ref_sweep(keys, src, dst, keep, n, 1, INF32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_degenerate_single_block():
     """block_v >= n: the whole vertex set is one destination block."""
     src, dst, keep, mask, keys, hub = _topology(n=30, m=90, seed=7)
