@@ -28,12 +28,20 @@ BA_PARAMS = {
     "ba_20k": (20_000, 5),
 }
 
+#: (n, max_weight) of the weighted road-grid datasets (DESIGN.md §8);
+#: the realized vertex count is the grid's rows·cols >= n.
+ROAD_PARAMS = {
+    "road_2k": (2_025, 8),
+}
+
 DATASETS = {
     # name: (builder, kwargs)  — ordered small → large
     "ba_2k": lambda: gen.barabasi_albert(*BA_PARAMS["ba_2k"], seed=0),
     "ba_10k": lambda: gen.barabasi_albert(*BA_PARAMS["ba_10k"], seed=1),
     "ba_20k": lambda: gen.barabasi_albert(*BA_PARAMS["ba_20k"], seed=2),
     "er_5k": lambda: gen.erdos_renyi(5_000, 0.0015, seed=3),
+    # weighted planar road grid, edges [E, 3] = (u, v, w)
+    "road_2k": lambda: gen.road_grid(*ROAD_PARAMS["road_2k"], seed=0),
 }
 
 
@@ -57,7 +65,7 @@ def build_instance(name: str, n_landmarks: int = 16,
     if key in _CACHE:
         return _CACHE[key]
     edges = DATASETS[name]()
-    n = int(edges.max()) + 1
+    n = int(edges[:, :2].max()) + 1
     g = from_edges(n, edges, edges.shape[0] + extra_capacity)
     landmarks = select_landmarks_by_degree(g, n_landmarks)
     t0 = time.time()

@@ -30,7 +30,8 @@ def _affected_counts(inst, ups, batch_size):
     from repro.core.batch import batchhl_update
     for i in range(len(ups)):
         single = BatchUpdate(b.src[i:i + 1], b.dst[i:i + 1],
-                             b.is_del[i:i + 1], b.valid[i:i + 1])
+                             b.is_del[i:i + 1], b.valid[i:i + 1],
+                             b.w[i:i + 1], b.is_rew[i:i + 1])
         g2s = apply_batch(g, single)
         uhl += int(jnp.sum(batch_search_improved(g, g2s, single, lab)))
         g, lab, _ = batchhl_update(g, single, lab)

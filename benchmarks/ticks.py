@@ -42,6 +42,12 @@ comparison directly:
     tune/crossover          telemetry: smallest benched vertex count
                             where the tuned config won (unit=vertices)
 
+PR 7 adds the weighted-metric trajectory (DESIGN.md §8): tick rows on
+the weighted road grid (``ticks/road_2k/<backend>/none``) and the
+``traffic`` serving rows (``serve/road_2k/<backend>/traffic``) — weight
+churn dominates each batch, every 4th tick is weight-change-only, and
+the Dijkstra-exact answers ride the same percentile contract.
+
 Rows follow the ``name,us_per_call,derived`` contract of benchmarks/run.py;
 ``python -m benchmarks.run --preset quick --json BENCH_pr5.json`` persists
 them in the bench-trajectory JSON format that `benchmarks/compare.py`
@@ -61,7 +67,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import BA_PARAMS, DATASETS, emit
+from benchmarks.common import BA_PARAMS, DATASETS, ROAD_PARAMS, emit
 from repro.graphs import generators as gen
 from repro.graphs.coo import apply_batch, from_edges, make_batch
 from repro.core.batch import batchhl_update
@@ -96,7 +102,9 @@ def _tick_loop(name: str, g0, landmarks, edges, backend: str, mesh,
     rows = [emit(f"{name}/construct", time.time() - t0, f"R={len(landmarks)}")]
 
     rng = np.random.default_rng(11)
-    g, cur_edges = g0, edges
+    # Weighted datasets carry an [E, 3] edge array; the host-side fold
+    # only tracks membership (weights live in the device graph).
+    g, cur_edges = g0, (edges[:, :2] if edges.shape[1] > 2 else edges)
     t_upd, t_q = [], []
     for tick in range(ticks):
         ups = gen.random_batch_updates(cur_edges, n, n_ins=batch_size // 2,
@@ -185,7 +193,9 @@ def _serve_loop(name: str, n: int, deg: int, backend: str, mode: str,
                 ticks: int, batch_size: int, queries: int, landmarks: int,
                 block_v: int, tile_shards: int, qps: float,
                 microbatch: int, capacity: int | None = None,
-                autotune: bool = False, fused: bool = False) -> list[str]:
+                autotune: bool = False, fused: bool = False,
+                scenario: str | None = None,
+                graph: str = "ba") -> list[str]:
     """One ServeLoop run → the serve/ percentile + staleness rows.
 
     Percentiles are computed over the steady-state ticks only (the same
@@ -197,10 +207,12 @@ def _serve_loop(name: str, n: int, deg: int, backend: str, mode: str,
     the row tracks the cost of serving *through* a growth event (shape
     retrace + retile on the growth tick) rather than steady state only.
     """
-    cfg = ServeConfig(n=n, deg=deg, landmarks=landmarks, batches=ticks,
+    cfg = ServeConfig(n=n, deg=deg, graph=graph, landmarks=landmarks,
+                      batches=ticks,
                       batch_size=batch_size, queries=queries, qps=qps,
                       microbatch=microbatch, pipeline=(mode != "sync"),
-                      scenario="growth" if mode == "growth" else "mixed",
+                      scenario=scenario or (
+                          "growth" if mode == "growth" else "mixed"),
                       capacity=capacity, grow=(mode == "growth"),
                       backend=backend, block_v=block_v,
                       tile_shards=tile_shards, autotune=autotune,
@@ -237,7 +249,7 @@ def run(datasets=("ba_2k",), backends=("jnp", "pallas"),
     crossover = None
     for ds in datasets:
         edges = DATASETS[ds]()
-        n = int(edges.max()) + 1
+        n = int(edges[:, :2].max()) + 1
         cap = edges.shape[0] + ticks * batch_size + 64
         g0 = from_edges(n, edges, cap)
         lms = select_landmarks_by_degree(g0, landmarks)
@@ -298,6 +310,27 @@ def run(datasets=("ba_2k",), backends=("jnp", "pallas"),
                                 qps, microbatch,
                                 capacity=e0 + 7 * batch_size // 2,
                                 fused=True)
+    # The weighted trajectory (DESIGN.md §8): tick rows on the road grid
+    # (mesh composition is covered by the ba rows above; benching it
+    # again on road would double the preset) and the `traffic` serving
+    # rows — weight churn dominates each batch and every 4th tick is
+    # weight-change-only, so the update row prices the no-retile path.
+    road_edges = DATASETS["road_2k"]()
+    road_n = int(road_edges[:, :2].max()) + 1
+    road_cap = road_edges.shape[0] + ticks * batch_size + 64
+    g0r = from_edges(road_n, road_edges, road_cap)
+    lms_r = select_landmarks_by_degree(g0r, landmarks)
+    for backend in backends:
+        rows += _tick_loop(f"ticks/road_2k/{backend}/none", g0r, lms_r,
+                           road_edges, backend, None, ticks, batch_size,
+                           queries, block_v, tile_shards,
+                           autotune=(backend == "pallas"))
+        rows += _serve_loop(f"serve/road_2k/{backend}/traffic",
+                            ROAD_PARAMS["road_2k"][0], 3, backend,
+                            "pipeline", ticks, batch_size, queries,
+                            landmarks, block_v, tile_shards, qps,
+                            microbatch, autotune=(backend == "pallas"),
+                            fused=True, scenario="traffic", graph="road")
     return rows
 
 

@@ -53,6 +53,7 @@ def _graph_shapes(c: BatchHLConfig):
         "src": jax.ShapeDtypeStruct((e2,), jnp.int32),
         "dst": jax.ShapeDtypeStruct((e2,), jnp.int32),
         "valid": jax.ShapeDtypeStruct((e2,), jnp.bool_),
+        "w": jax.ShapeDtypeStruct((e2,), jnp.int32),
     }
 
 
@@ -77,13 +78,13 @@ def build_cell(shape_name: str, pod: bool) -> cc.Cell:
     bax = cc.batch_axes(pod)
     gsh = _graph_shapes(c)
     lsh = _labelling_shapes(c)
-    g_spec = {"src": P(bax), "dst": P(bax), "valid": P(bax)}
+    g_spec = {"src": P(bax), "dst": P(bax), "valid": P(bax), "w": P(bax)}
     lab_spec = {"landmarks": P(None), "dist": P("model", bax),
                 "hub": P("model", bax), "highway": P(None, None)}
 
     def g_struct(shapes):
         return Graph(src=shapes["src"], dst=shapes["dst"],
-                     valid=shapes["valid"], n=c.n_vertices)
+                     valid=shapes["valid"], w=shapes["w"], n=c.n_vertices)
 
     def lab_struct(shapes):
         return HighwayLabelling(**shapes)
@@ -95,6 +96,8 @@ def build_cell(shape_name: str, pod: bool) -> cc.Cell:
             "dst": jax.ShapeDtypeStruct((u,), jnp.int32),
             "is_del": jax.ShapeDtypeStruct((u,), jnp.bool_),
             "valid": jax.ShapeDtypeStruct((u,), jnp.bool_),
+            "w": jax.ShapeDtypeStruct((u,), jnp.int32),
+            "is_rew": jax.ShapeDtypeStruct((u,), jnp.bool_),
         }
         u_spec = {k: P(None) for k in ush}
 
@@ -102,7 +105,8 @@ def build_cell(shape_name: str, pod: bool) -> cc.Cell:
             g2, lab2, aff = batchhl_update(
                 Graph(**g, n=c.n_vertices), BatchUpdate(**batch),
                 HighwayLabelling(**lab), improved=c.improved)
-            return ({"src": g2.src, "dst": g2.dst, "valid": g2.valid},
+            return ({"src": g2.src, "dst": g2.dst, "valid": g2.valid,
+                     "w": g2.w},
                     {"landmarks": lab2.landmarks, "dist": lab2.dist,
                      "hub": lab2.hub, "highway": lab2.highway},
                     jnp.sum(aff))
@@ -122,7 +126,8 @@ def build_cell(shape_name: str, pod: bool) -> cc.Cell:
             # collective-free; only the final answers gather.
             q_ax = ("pod", "data", "model") if pod else ("data", "model")
             q_spec = {"s": P(q_ax), "t": P(q_ax)}
-            g_spec_q = {"src": P(None), "dst": P(None), "valid": P(None)}
+            g_spec_q = {"src": P(None), "dst": P(None), "valid": P(None),
+                        "w": P(None)}
             lab_spec_q = {"landmarks": P(None), "dist": P(None, None),
                           "hub": P(None, None), "highway": P(None, None)}
             out_spec = P(q_ax)

@@ -157,7 +157,8 @@ def tune(g, *, shards: int = 1, block_v: int = 512, r_planes: int = 8,
     @jax.jit
     def jnp_wave(ks, hb, m):
         def one(k, h):
-            cand = jnp.minimum(k[g.src] + 2, inf)
+            s = k[g.src] + 2 * g.w
+            cand = jnp.minimum(jnp.where(s < 0, inf, s), inf)
             cand = jnp.where(h[g.dst], cand & ~jnp.int32(1), cand)
             return masked_segment_min(cand, g.dst, g.n, m, inf)
         return jax.vmap(one)(ks, hb)
@@ -176,7 +177,7 @@ def tune(g, *, shards: int = 1, block_v: int = 512, r_planes: int = 8,
             @jax.jit
             def wave(ks, hb, m, sg=sg):
                 return jax.vmap(lambda k, h: er_ops.relax_sweep_sorted(
-                    k, sg, m, 2, inf, clear_bit=1, hub=h))(ks, hb)
+                    k, sg, m, 2, inf, clear_bit=1, hub=h, w=g.w))(ks, hb)
         else:
             bg = er_ops.prepare_topology(src, dst, keep, g.n,
                                          block_v=cfg.block_v,
@@ -186,7 +187,7 @@ def tune(g, *, shards: int = 1, block_v: int = 512, r_planes: int = 8,
             @jax.jit
             def wave(ks, hb, m, bg=bg):
                 return jax.vmap(lambda k, h: er_ops.relax_sweep(
-                    k, bg, m, 2, inf, clear_bit=1, hub=h))(ks, hb)
+                    k, bg, m, 2, inf, clear_bit=1, hub=h, w=g.w))(ks, hb)
 
         compile_us, steady_us = measure_compiled(wave, keys, hub, mask,
                                                  warmup=warmup, iters=iters)

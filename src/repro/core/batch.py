@@ -21,13 +21,15 @@ Variants (paper §7 naming):
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.graphs.coo import Graph, BatchUpdate, INF_D, apply_batch
+from repro.graphs.coo import (Graph, BatchUpdate, INF_D, apply_batch,
+                              resolve_seed_weights)
 from repro.core.engine import RelaxEngine, RelaxPlan, relax_sweep
 from repro.core.labelling import (
     HighwayLabelling, INF_KEY2, INF_KEY4,
@@ -99,7 +101,11 @@ def search_basic_seed(g_new: Graph, batch: BatchUpdate, dist_g: jax.Array
     nontrivial = (da != db) & batch.valid[None, :]
     anchor = jnp.where(da < db, batch.dst[None, :], batch.src[None, :])
     d_pre = jnp.minimum(da, db)
-    seed_d = jnp.minimum(d_pre + 1, INF_D)
+    # Weighted seed: the anchor's candidate distance crosses the update's
+    # edge at its seed weight (coo.resolve_seed_weights picks the superset-
+    # safe one per op). No wrap guard needed: d_pre ≤ INF_D and w ≤ INF_D
+    # keep the sum well under int32 max.
+    seed_d = jnp.minimum(d_pre + batch.w[None, :], INF_D)
     seed_d = jnp.where(nontrivial, seed_d, INF_D)
 
     # Scatter-min seeds into per-plane planes.
@@ -163,9 +169,12 @@ def search_improved_seed(g_new: Graph, batch: BatchUpdate,
     pre = jnp.where(a_is_pre, batch.src[None, :], batch.dst[None, :])
 
     key2_pre = jnp.take_along_axis(key2_g, pre, axis=1)       # [P, U]
-    k4 = key4_from_key2(key2_pre, batch.is_del[None, :])
+    # Re-weights take the deletion-flavoured e-flag: like deletions they
+    # can lengthen existing shortest paths, and e=True yields the smaller
+    # (more inclusive) key4 — the superset-safe choice.
+    k4 = key4_from_key2(key2_pre, (batch.is_del | batch.is_rew)[None, :])
     anchor_is_hub = jnp.take_along_axis(hub_mask, anchor, axis=1)
-    seed_k4 = key4_extend(k4, anchor_is_hub)
+    seed_k4 = key4_extend(k4, anchor_is_hub, w=batch.w[None, :])
     seed_k4 = jnp.where(nontrivial, seed_k4, INF_KEY4)
 
     def scatter_seeds(anchors, vals):
@@ -299,6 +308,10 @@ def batchhl_update(g_old: Graph, batch: BatchUpdate,
     check_labelling_width(g_old, labelling.dist)
     if g_new is None:
         g_new = apply_batch(g_old, batch)
+    # Seeds for deletions / re-weights must cross the edge at its
+    # pre-update weight (resp. min of old/new) — resolved against g_old;
+    # apply_batch above takes the *original* batch (post-update weights).
+    batch = resolve_seed_weights(g_old, batch)
     search = batch_search_improved if improved else batch_search_basic
     aff = search(g_old, g_new, batch, labelling, plan)
     new_labelling = batch_repair(g_new, aff, labelling, plan)
@@ -314,10 +327,13 @@ def batchhl_update_split(g_old: Graph, batch: BatchUpdate,
     intermediate insertion-applied snapshot, and the deletion sub-batch then
     reuses it unchanged (deletions never move topology slots).
     """
-    ins = BatchUpdate(batch.src, batch.dst, batch.is_del,
-                      batch.valid & ~batch.is_del)
-    dele = BatchUpdate(batch.src, batch.dst, batch.is_del,
-                       batch.valid & batch.is_del)
+    # Re-weights ride the deletion sub-batch: like deletions they touch a
+    # live slot and never move topology, so the tiling prepared for the
+    # insertion-applied snapshot stays valid through them.
+    ins = dataclasses.replace(
+        batch, valid=batch.valid & ~batch.is_del & ~batch.is_rew)
+    dele = dataclasses.replace(
+        batch, valid=batch.valid & (batch.is_del | batch.is_rew))
     plan = None
     g_ins = None
     if engine is not None:
@@ -348,13 +364,17 @@ def uhl_update(g_old: Graph, batch: BatchUpdate,
     # inside it (bool(~batch.is_del[i] & ...)) would force a blocking sync
     # per update, serializing the unit-update baseline on transfer latency.
     is_del_h = np.asarray(batch.is_del)
+    is_rew_h = np.asarray(batch.is_rew)
     valid_h = np.asarray(batch.valid)
     for i in range(u):
         single = BatchUpdate(batch.src[i:i + 1], batch.dst[i:i + 1],
-                             batch.is_del[i:i + 1], batch.valid[i:i + 1])
+                             batch.is_del[i:i + 1], batch.valid[i:i + 1],
+                             batch.w[i:i + 1], batch.is_rew[i:i + 1])
         plan, g_next = None, None
         if engine is not None:
-            is_ins = bool(~is_del_h[i] & valid_h[i])
+            # Only insertions move topology slots; deletions and
+            # re-weights touch live slots in place.
+            is_ins = bool(~is_del_h[i] & ~is_rew_h[i] & valid_h[i])
             g_next = apply_batch(g, single)
             # Deletion steps only flip validity bits of the snapshot the
             # engine last tiled — structurally safe, so skip the

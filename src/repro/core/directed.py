@@ -37,45 +37,61 @@ from repro.core.construct import build_labelling
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=("src", "dst", "valid"), meta_fields=("n",))
+         data_fields=("src", "dst", "valid", "w"), meta_fields=("n",))
 @dataclasses.dataclass(frozen=True)
 class DirectedGraph:
     src: jax.Array    # int32[cap] arc tails
     dst: jax.Array    # int32[cap] arc heads
     valid: jax.Array  # bool[cap]
+    w: jax.Array      # int32[cap] arc weight; 0 on free slots
     n: int
 
     def fwd(self) -> Graph:
-        return Graph(self.src, self.dst, self.valid, self.n)
+        return Graph(self.src, self.dst, self.valid, self.w, self.n)
 
     def rev(self) -> Graph:
-        return Graph(self.dst, self.src, self.valid, self.n)
+        return Graph(self.dst, self.src, self.valid, self.w, self.n)
 
 
 def from_arcs(n: int, arcs: np.ndarray, capacity: int) -> DirectedGraph:
-    arcs = np.asarray(arcs, np.int32).reshape(-1, 2)
+    """[m, 2] arcs (unit weight) or [m, 3] (tail, head, weight) rows."""
+    arcs = np.asarray(arcs, np.int32)
+    arcs = (arcs.reshape(-1, 2) if arcs.ndim < 2 or arcs.shape[1] == 2
+            else arcs.reshape(-1, 3))
     m = arcs.shape[0]
     if m > capacity:
         raise ValueError(f"{m} arcs exceed capacity {capacity}")
     src = np.zeros(capacity, np.int32)
     dst = np.zeros(capacity, np.int32)
     valid = np.zeros(capacity, bool)
+    w = np.zeros(capacity, np.int32)
     src[:m], dst[:m] = arcs[:, 0], arcs[:, 1]
+    w[:m] = arcs[:, 2] if arcs.shape[1] == 3 else 1
     valid[:m] = True
     return DirectedGraph(jnp.asarray(src), jnp.asarray(dst),
-                         jnp.asarray(valid), n)
+                         jnp.asarray(valid), jnp.asarray(w), n)
 
 
 def apply_batch_directed(g: DirectedGraph, b: BatchUpdate) -> DirectedGraph:
-    """Exact-arc deletion + free-slot insertion (single slots)."""
+    """Exact-arc deletion + in-place re-weight + free-slot insertion."""
     del_mask = b.is_del & b.valid
     d_src = jnp.where(del_mask, b.src, -1)
     d_dst = jnp.where(del_mask, b.dst, -1)
     hit = jnp.any((g.src[:, None] == d_src[None, :])
                   & (g.dst[:, None] == d_dst[None, :]), axis=1)
     valid = g.valid & ~hit
+    w = jnp.where(hit, 0, g.w)   # freed slots drop their weight
 
-    ins_mask = (~b.is_del) & b.valid
+    rew_mask = b.is_rew & b.valid
+    r_src = jnp.where(rew_mask, b.src, -1)
+    r_dst = jnp.where(rew_mask, b.dst, -1)
+    rhit = ((g.src[:, None] == r_src[None, :])
+            & (g.dst[:, None] == r_dst[None, :]))            # [cap, U]
+    rrow = jnp.argmax(rhit, axis=1)
+    rany = jnp.any(rhit, axis=1) & valid
+    w = jnp.where(rany, b.w[rrow], w)
+
+    ins_mask = (~b.is_del) & (~b.is_rew) & b.valid
     u = b.src.shape[0]
     free_idx = jnp.nonzero(~valid, size=u, fill_value=valid.shape[0] - 1)[0]
     rank = jnp.cumsum(ins_mask) - 1
@@ -85,7 +101,30 @@ def apply_batch_directed(g: DirectedGraph, b: BatchUpdate) -> DirectedGraph:
     src = g.src.at[slot].set(b.src, mode="drop")
     dst = g.dst.at[slot].set(b.dst, mode="drop")
     valid = valid.at[slot].set(True, mode="drop")
-    return DirectedGraph(src, dst, valid, g.n)
+    w = w.at[slot].set(b.w, mode="drop")
+    return DirectedGraph(src, dst, valid, w, g.n)
+
+
+def resolve_seed_weights_directed(g_old: DirectedGraph,
+                                  b: BatchUpdate) -> BatchUpdate:
+    """Directed twin of `coo.resolve_seed_weights`: exact-arc matching.
+
+    Deletions seed at the arc's pre-update weight, re-weights at
+    min(old, new) — the superset-safe seed either way; insertions keep
+    the batch's (new) weight.
+    """
+    need_old = (b.is_del | b.is_rew) & b.valid
+    bs = jnp.where(need_old, b.src, -1)
+    bd = jnp.where(need_old, b.dst, -1)
+    m = ((bs[:, None] == g_old.src[None, :])
+         & (bd[:, None] == g_old.dst[None, :])
+         & g_old.valid[None, :])                              # [U, cap]
+    w_old = jnp.max(jnp.where(m, g_old.w[None, :], 0), axis=1)
+    w_old = jnp.where(w_old == 0, 1, w_old)                   # unmatched
+    w_eff = jnp.where(b.is_del, w_old,
+                      jnp.where(b.is_rew, jnp.minimum(w_old, b.w), b.w))
+    return dataclasses.replace(
+        b, w=jnp.where(b.valid, w_eff, 1).astype(jnp.int32))
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -110,10 +149,15 @@ def build_directed_labelling(g: DirectedGraph, landmarks: jax.Array,
                                              plan=plan_bwd))
 
 
-def _directed_search(g_new: Graph, batch_src, batch_dst, batch_is_del,
-                     batch_valid, labelling: HighwayLabelling,
+def _directed_search(g_new: Graph, batch_src, batch_dst, batch_e,
+                     batch_valid, batch_w, labelling: HighwayLabelling,
                      plan: RelaxPlan | None = None) -> jax.Array:
-    """Improved batch search on one plane; anchors fixed at arc heads."""
+    """Improved batch search on one plane; anchors fixed at arc heads.
+
+    `batch_e` is the key4 e-flag (deletion-like: deletions and re-weights,
+    which can lengthen paths); `batch_w` the per-update seed weight
+    (resolved by `resolve_seed_weights_directed`).
+    """
     n = g_new.n
     dist_g = labelling.dist
     key2_g = labelling.key2()
@@ -123,14 +167,16 @@ def _directed_search(g_new: Graph, batch_src, batch_dst, batch_is_del,
     da = dist_g[:, batch_src]                                # [R, U] (pre)
     db = dist_g[:, batch_dst]
     # Arc a→b can only change paths through b; skip if it cannot shorten /
-    # was not potentially on a shortest path (superset-safe check).
-    nontrivial = (da + 1 <= db) & (da < INF_D) & batch_valid[None, :]
+    # was not potentially on a shortest path at its seed weight
+    # (superset-safe check; w ≡ 1 recovers the unweighted da+1 <= db).
+    nontrivial = ((da + batch_w[None, :] <= db) & (da < INF_D)
+                  & batch_valid[None, :])
     key2_pre = jnp.take_along_axis(key2_g, batch_src[None, :].repeat(
         dist_g.shape[0], 0), axis=1)
-    k4 = key4_from_key2(key2_pre, batch_is_del[None, :])
+    k4 = key4_from_key2(key2_pre, batch_e[None, :])
     anchor_is_hub = jnp.take_along_axis(
         hub_mask, batch_dst[None, :].repeat(dist_g.shape[0], 0), axis=1)
-    seed_k4 = key4_extend(k4, anchor_is_hub)
+    seed_k4 = key4_extend(k4, anchor_is_hub, w=batch_w[None, :])
     seed_k4 = jnp.where(nontrivial, seed_k4, INF_KEY4)
 
     def scatter_seeds(vals):
@@ -170,13 +216,15 @@ def batchhl_update_directed(g: DirectedGraph, batch: BatchUpdate,
     `tests/test_directed_engine.py` pins backend bit-parity.
     """
     g2 = apply_batch_directed(g, batch)
+    batch_res = resolve_seed_weights_directed(g, batch)
+    e_flag = batch.is_del | batch.is_rew
     # forward plane: arcs as-is, anchor = head
-    aff_f = _directed_search(g2.fwd(), batch.src, batch.dst, batch.is_del,
-                             batch.valid, lab.fwd, plan_fwd)
+    aff_f = _directed_search(g2.fwd(), batch.src, batch.dst, e_flag,
+                             batch.valid, batch_res.w, lab.fwd, plan_fwd)
     new_f = batch_repair(g2.fwd(), aff_f, lab.fwd, plan_fwd)
     # backward plane: reversed arcs, anchor = tail
-    aff_b = _directed_search(g2.rev(), batch.dst, batch.src, batch.is_del,
-                             batch.valid, lab.bwd, plan_bwd)
+    aff_b = _directed_search(g2.rev(), batch.dst, batch.src, e_flag,
+                             batch.valid, batch_res.w, lab.bwd, plan_bwd)
     new_b = batch_repair(g2.rev(), aff_b, lab.bwd, plan_bwd)
     return g2, DirectedLabelling(new_f, new_b), aff_f | aff_b
 
@@ -210,41 +258,48 @@ def directed_query(g: DirectedGraph, lab: DirectedLabelling, s: jax.Array,
     ds = jnp.where(blocked[s][:, None], inf, ds)
     dt = jnp.where(blocked[t][:, None], inf, dt)
 
-    def expand(dist_x, level, og, plan):
-        # Frontier lifted to a key plane (level on the frontier, INF
-        # elsewhere): one engine-dispatched relaxation sweep computes
-        # level+1 exactly at vertices with a frontier in-neighbour — the
-        # same primitive (and kernel) as the undirected bounded BiBFS.
-        frontier_keys = jnp.where(dist_x == level, level, inf)
+    # Weighted termination bound, as in the undirected bounded_bibfs: a
+    # path still unaccounted for after ls+lt waves has ≥ ls+lt+1 arcs.
+    wmin = jnp.clip(jnp.min(jnp.where(g.valid, g.w, INF_D), initial=INF_D),
+                    1, 1 << 20)
+
+    def expand(dist_x, og, plan):
+        # One Bellman-Ford wave over the whole plane — the same
+        # engine-dispatched primitive (and kernel) as the undirected
+        # bounded BiBFS; with w ≡ 1 it reproduces the level-synchronous
+        # frontier expansion bit-identically.
         cand = jax.vmap(
-            lambda k: relax_sweep(plan, og, k, 1, inf))(frontier_keys)
-        newly = (cand < inf) & (dist_x == inf) & ~blocked[None, :]
-        return jnp.where(newly, level + 1, dist_x)
+            lambda k: relax_sweep(plan, og, k, 1, inf))(dist_x)
+        cand = jnp.where(blocked[None, :], inf, cand)
+        return jnp.minimum(dist_x, cand)
 
     def cond(state):
-        ds, dt, ls, lt, best, step = state
-        return (jnp.any((ls + lt + 2) <= jnp.minimum(best, d_top))
+        ds, dt, ls, lt, fs, ft, best, step = state
+        return (jnp.any((ls + lt + 1) * wmin < jnp.minimum(best, d_top))
                 & (step < max_steps))
 
     def body(state):
-        ds, dt, ls, lt, best, step = state
-        exp_s = jnp.sum(ds == ls) <= jnp.sum(dt == lt)
+        ds, dt, ls, lt, fs, ft, best, step = state
+        exp_s = fs <= ft
 
         def s_side(a):
-            ds, dt, ls, lt = a
-            return expand(ds, ls, g.fwd(), plan_fwd), dt, ls + 1, lt
+            ds, dt, ls, lt, fs, ft = a
+            nd = expand(ds, g.fwd(), plan_fwd)
+            return nd, dt, ls + 1, lt, jnp.sum(nd != ds), ft
 
         def t_side(a):
-            ds, dt, ls, lt = a
-            return ds, expand(dt, lt, g.rev(), plan_bwd), ls, lt + 1
+            ds, dt, ls, lt, fs, ft = a
+            nd = expand(dt, g.rev(), plan_bwd)
+            return ds, nd, ls, lt + 1, fs, jnp.sum(nd != dt)
 
-        ds, dt, ls, lt = jax.lax.cond(exp_s, s_side, t_side,
-                                      (ds, dt, ls, lt))
+        ds, dt, ls, lt, fs, ft = jax.lax.cond(exp_s, s_side, t_side,
+                                              (ds, dt, ls, lt, fs, ft))
         best = jnp.minimum(best, jnp.min(jnp.minimum(ds + dt, inf), axis=1))
-        return ds, dt, ls, lt, best, step + 1
+        return ds, dt, ls, lt, fs, ft, best, step + 1
 
     best0 = jnp.min(jnp.minimum(ds + dt, inf), axis=1)
     state = (ds, dt, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+             jnp.sum(ds == 0), jnp.sum(dt == 0),
              best0, jnp.zeros((), jnp.int32))
     *_, best, _ = jax.lax.while_loop(cond, body, state)
     out = jnp.minimum(best, d_top)

@@ -88,10 +88,16 @@ def relax_sweep(plan: RelaxPlan | None, g: Graph, keys: jax.Array,
     so results are bit-identical across backends — the parity tests assert
     this). `edge_mask` defaults to g.valid and is always in original
     edge-slot order; `hub`/`clear_bit` realize key2/key4 path extension.
+
+    The metric is weighted: the extend adds step·w(u,v) from the graph's
+    per-slot weight column and saturates at `inf` (int32 wrap → inf).
+    Unweighted graphs carry w ≡ 1 on occupied slots, which makes the
+    weighted extend bit-identical to the historical `keys + step`.
     """
     mask = g.valid if edge_mask is None else edge_mask
     if plan is None or plan.backend == "jnp":
-        cand = jnp.minimum(keys[g.src] + step, inf)
+        s = keys[g.src] + step * g.w
+        cand = jnp.minimum(jnp.where(s < 0, inf, s), inf)
         if hub is not None and clear_bit:
             cand = jnp.where(hub[g.dst], cand & ~jnp.int32(clear_bit), cand)
         return masked_segment_min(cand, g.dst, g.n, mask, inf)
@@ -99,9 +105,9 @@ def relax_sweep(plan: RelaxPlan | None, g: Graph, keys: jax.Array,
         if plan.impl == "sorted":
             return er_ops.relax_sweep_sorted(keys, plan.sorted_tiles, mask,
                                              step, inf, clear_bit=clear_bit,
-                                             hub=hub)
+                                             hub=hub, w=g.w)
         return er_ops.relax_sweep(keys, plan.tiles, mask, step, inf,
-                                  clear_bit=clear_bit, hub=hub)
+                                  clear_bit=clear_bit, hub=hub, w=g.w)
     raise ValueError(f"unknown backend {plan.backend!r}; pick from {BACKENDS}")
 
 

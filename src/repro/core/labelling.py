@@ -49,9 +49,12 @@ def key2_hub(key2):
     return (key2 & 1) == 0
 
 
-def key2_extend(key2, dst_is_hub, inf=INF_KEY2):
-    """(d,l) ⊕ w : +1 step; force l=True when w is a landmark (≠ r)."""
-    out = jnp.minimum(key2 + 2, inf)
+def key2_extend(key2, dst_is_hub, inf=INF_KEY2, w=1):
+    """(d,l) ⊕ edge : +w step; force l=True when the head is a landmark
+    (≠ r). `w` is the edge weight (1 = the unweighted metric); the add
+    saturates at `inf` (non-negative operands, so int32 wrap < 0)."""
+    s = key2 + 2 * w
+    out = jnp.minimum(jnp.where(s < 0, inf, s), inf)
     out = jnp.where(dst_is_hub, out & ~jnp.int32(1), out)
     return out
 
@@ -67,9 +70,11 @@ def key4_from_key2(key2, e):
     return 2 * key2 + (1 - e.astype(jnp.int32))
 
 
-def key4_extend(key4, dst_is_hub, inf=INF_KEY4):
-    """((d,l) ⊕ w, e): step keeps the deletion flag."""
-    out = jnp.minimum(key4 + 4, inf)
+def key4_extend(key4, dst_is_hub, inf=INF_KEY4, w=1):
+    """((d,l) ⊕ edge, e): +w step keeps the deletion flag. Saturating,
+    like `key2_extend`."""
+    s = key4 + 4 * w
+    out = jnp.minimum(jnp.where(s < 0, inf, s), inf)
     out = jnp.where(dst_is_hub, out & ~jnp.int32(2), out)
     return out
 

@@ -84,12 +84,19 @@ def query_upper_bound(labelling: HighwayLabelling, s: jax.Array,
 def bounded_bibfs(g: Graph, landmarks: jax.Array, s: jax.Array, t: jax.Array,
                   bound: jax.Array, max_steps: int = 64,
                   plan: RelaxPlan | None = None) -> jax.Array:
-    """Distance-bounded bidirectional BFS on G[V\\R], batched over queries.
+    """Distance-bounded bidirectional search on G[V\\R], batched over
+    queries.
 
     Returns d_{G[V\\R]}(s,t) clamped at `bound` (if the sparsified distance
     is >= bound the return is >= bound, which is all the caller needs).
-    Frontier expansion is an engine-dispatched relaxation sweep vmapped
-    over the query batch; `plan` selects the backend (None = jnp).
+    Expansion is a Bellman-Ford wave — an engine-dispatched relaxation
+    sweep over each side's whole distance plane, vmapped over the query
+    batch (`plan` selects the backend, None = jnp). After k waves a side
+    is exact on every shortest path of ≤ k edges, so once both sides have
+    run ls/lt waves any path still unaccounted for has ≥ ls+lt+1 edges
+    and therefore weight ≥ (ls+lt+1)·wmin — the weighted termination
+    bound. With w ≡ 1 (wmin = 1) the waves and the bound degenerate to
+    the level-synchronous BiBFS this replaces, bit-identically.
     """
     n = g.n
     b = s.shape[0]
@@ -104,53 +111,61 @@ def bounded_bibfs(g: Graph, landmarks: jax.Array, s: jax.Array, t: jax.Array,
     dist_s = jnp.where(s_ok[:, None], dist_s, inf)
     dist_t = jnp.where(t_ok[:, None], dist_t, inf)
 
-    def expand(dist_x, level):
-        """One BFS level from frontier {v: dist_x[v] == level}.
+    # Smallest live edge weight, for the termination bound. Clipped: ≥ 1
+    # so the bound still advances on w ≡ 1 graphs, and ≤ 2^20 so the
+    # product (ls+lt+1)·wmin — at most (max_steps+1)·wmin — stays far from
+    # int32 wrap even on near-INF_D weights (an edgeless graph min()s to
+    # INF_D before the clip).
+    wmin = jnp.clip(jnp.min(jnp.where(g.valid, g.w, INF_D), initial=INF_D),
+                    1, 1 << 20)
 
-        The frontier is lifted to a key plane (level on frontier vertices,
-        INF elsewhere) so one relaxation sweep computes level+1 exactly at
-        vertices with a frontier in-neighbour — the same sweep primitive
-        (and the same kernel) as the update-side searches.
-        """
-        frontier_keys = jnp.where(dist_x == level, level, inf)  # [B, V]
+    def expand(dist_x):
+        """One Bellman-Ford wave: relax every live edge from the current
+        plane — the same sweep primitive (and the same kernel) as the
+        update-side searches. Landmark vertices never acquire a distance
+        (the search runs on G[V\\R])."""
         cand = jax.vmap(
-            lambda k: relax_sweep(plan, g, k, 1, inf))(frontier_keys)
-        newly = (cand < inf) & (dist_x == inf) & ~blocked[None, :]
-        return jnp.where(newly, level + 1, dist_x)
+            lambda k: relax_sweep(plan, g, k, 1, inf))(dist_x)
+        cand = jnp.where(blocked[None, :], inf, cand)
+        return jnp.minimum(dist_x, cand)
 
     def best_meet(ds, dt):
         return jnp.min(jnp.minimum(ds + dt, inf), axis=1)     # [B]
 
     def cond(state):
-        ds, dt, ls, lt, best, step = state
-        can_improve = (ls + lt + 2) <= jnp.minimum(best, bound)
+        ds, dt, ls, lt, fs, ft, best, step = state
+        can_improve = (ls + lt + 1) * wmin < jnp.minimum(best, bound)
         return jnp.any(can_improve) & (step < max_steps)
 
     def body(state):
-        ds, dt, ls, lt, best, step = state
-        # Expand the side with the smaller current frontier (paper's BiBFS
-        # optimization); lax.cond executes only the chosen side's sweep —
-        # the edge-array read per wave is the memory floor here.
-        size_s = jnp.sum(ds == ls)
-        size_t = jnp.sum(dt == lt)
-        expand_s = size_s <= size_t
+        ds, dt, ls, lt, fs, ft, best, step = state
+        # Expand the side whose last wave changed fewer entries (the
+        # paper's smaller-frontier BiBFS optimization; on w ≡ 1 graphs
+        # the changed count IS the new frontier size). lax.cond executes
+        # only the chosen side's sweep — the edge-array read per wave is
+        # the memory floor here.
+        expand_s = fs <= ft
 
         def s_side(args):
-            ds, dt, ls, lt = args
-            return expand(ds, ls), dt, ls + 1, lt
+            ds, dt, ls, lt, fs, ft = args
+            nd = expand(ds)
+            return nd, dt, ls + 1, lt, jnp.sum(nd != ds), ft
 
         def t_side(args):
-            ds, dt, ls, lt = args
-            return ds, expand(dt, lt), ls, lt + 1
+            ds, dt, ls, lt, fs, ft = args
+            nd = expand(dt)
+            return ds, nd, ls, lt + 1, fs, jnp.sum(nd != dt)
 
-        ds, dt, ls, lt = jax.lax.cond(expand_s, s_side, t_side,
-                                      (ds, dt, ls, lt))
+        ds, dt, ls, lt, fs, ft = jax.lax.cond(expand_s, s_side, t_side,
+                                              (ds, dt, ls, lt, fs, ft))
         best = jnp.minimum(best, best_meet(ds, dt))
-        return ds, dt, ls, lt, best, step + 1
+        return ds, dt, ls, lt, fs, ft, best, step + 1
 
     best0 = best_meet(dist_s, dist_t)
     state = (dist_s, dist_t, jnp.zeros((), jnp.int32),
-             jnp.zeros((), jnp.int32), best0, jnp.zeros((), jnp.int32))
+             jnp.zeros((), jnp.int32),
+             jnp.sum(dist_s == 0), jnp.sum(dist_t == 0),
+             best0, jnp.zeros((), jnp.int32))
     *_, best, _ = jax.lax.while_loop(cond, body, state)
     return best
 

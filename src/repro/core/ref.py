@@ -1,15 +1,18 @@
 """Pure-Python oracle for BatchHL invariants (host-side, test-only).
 
-Implements from first principles (plain BFS / DP, no JAX):
-  * exact distances,
+Implements from first principles (plain BFS / Dijkstra / DP, no JAX):
+  * exact distances — BFS for the hop-count metric, binary-heap Dijkstra
+    for the weighted metric (adjacency `{u: {v: w}}`, weights >= 1),
   * landmark lengths d^L(r, v) = (distance, hub flag) with the paper's
     True < False ordering (flag True iff ANY shortest r->v path passes
-    through a landmark other than r; endpoints count, r excluded),
+    through a landmark other than r; endpoints count, r excluded) — the
+    weighted predecessor test is dist[u] + w(u, v) == dist[v],
   * the unique minimal highway-cover labelling,
   * affected / LD-affected sets (Definitions 5.1 and 5.12).
 """
 from __future__ import annotations
 
+import heapq
 from collections import deque
 
 INF = float("inf")
@@ -115,6 +118,93 @@ def apply_updates(adj: dict[int, set[int]], updates) -> dict[int, set[int]]:
 
 def pair_distance(adj, n: int, s: int, t: int) -> float:
     return bfs_dist(adj, n, s)[t]
+
+
+# --- weighted oracle (Dijkstra; adjacency {u: {v: w}}, weights >= 1) --------
+
+def dijkstra_dist(wadj: dict[int, dict[int, int]], n: int,
+                  src: int) -> list[float]:
+    """Single-source shortest paths under positive integer edge weights."""
+    dist = [INF] * n
+    dist[src] = 0
+    heap = [(0, src)]
+    while heap:
+        d, u = heapq.heappop(heap)
+        if d > dist[u]:
+            continue
+        for v, w in wadj.get(u, {}).items():
+            nd = d + w
+            if nd < dist[v]:
+                dist[v] = nd
+                heapq.heappush(heap, (nd, v))
+    return dist
+
+
+def unit_wadj(adj: dict[int, set[int]]) -> dict[int, dict[int, int]]:
+    """Lift an unweighted adjacency to the weighted form with w ≡ 1."""
+    return {u: {v: 1 for v in s} for u, s in adj.items()}
+
+
+def landmark_length_w(wadj: dict[int, dict[int, int]], n: int,
+                      landmarks: list[int],
+                      r: int) -> tuple[list[float], list[bool]]:
+    """Weighted d^L(r, ·): (distance, hub flag) per vertex. The hub DP
+    visits vertices in distance order; u precedes v on a shortest path
+    iff dist[u] + w(u, v) == dist[v]."""
+    others = set(landmarks) - {r}
+    dist = dijkstra_dist(wadj, n, r)
+    order = sorted((v for v in range(n) if dist[v] < INF),
+                   key=lambda v: dist[v])
+    hub = [False] * n
+    for v in order:
+        if v == r:
+            continue
+        if v in others:
+            hub[v] = True
+            continue
+        hub[v] = any(hub[u] for u, w in wadj.get(v, {}).items()
+                     if dist[u] + w == dist[v])
+    return dist, hub
+
+
+def minimal_labelling_w(wadj: dict[int, dict[int, int]], n: int,
+                        landmarks: list[int]):
+    """Weighted (dist[R][V], hub[R][V], highway[R][R], label_mask[R][V])."""
+    r_count = len(landmarks)
+    dist, hub, mask = [], [], []
+    for r in landmarks:
+        d, h = landmark_length_w(wadj, n, landmarks, r)
+        dist.append(d)
+        hub.append(h)
+        mask.append([d[v] < INF and not h[v] and v not in landmarks
+                     for v in range(n)])
+    highway = [[dist[i][landmarks[j]] for j in range(r_count)]
+               for i in range(r_count)]
+    return dist, hub, highway, mask
+
+
+def apply_updates_w(wadj: dict[int, dict[int, int]],
+                    updates) -> dict[int, dict[int, int]]:
+    """updates: (u, v, op[, w]) with op 0=insert, 1=delete, 2=reweight
+    (insert and reweight default to w=1). Returns a new weighted
+    adjacency; reweighting an absent edge inserts it, matching
+    `coo.apply_batch`'s slot semantics only for edges that exist — tests
+    only reweight live edges, so keep the simple set-the-weight rule."""
+    new = {v: dict(d) for v, d in wadj.items()}
+    for up in updates:
+        u, v, op = up[0], up[1], int(up[2])
+        w = int(up[3]) if len(up) > 3 else 1
+        if op == 1:
+            new[u].pop(v, None)
+            new[v].pop(u, None)
+        else:
+            new[u][v] = w
+            new[v][u] = w
+    return new
+
+
+def pair_distance_w(wadj, n: int, s: int, t: int) -> float:
+    return dijkstra_dist(wadj, n, s)[t]
 
 
 # --- directed-graph oracle (paper §6) ---------------------------------------

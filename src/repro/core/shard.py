@@ -58,7 +58,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.graphs.coo import Graph, BatchUpdate, INF_D, apply_batch
+from repro.graphs.coo import (Graph, BatchUpdate, INF_D, apply_batch,
+                              resolve_seed_weights)
 from repro.core.batch import (check_labelling_width, repair_base,
                               repair_merge, repair_planes,
                               repair_step, search_basic_planes,
@@ -173,6 +174,10 @@ def shard_batchhl_update(mesh, g_old: Graph, batch: BatchUpdate,
     check_labelling_width(g_old, labelling.dist)
     if g_new is None:
         g_new = apply_batch(g_old, batch)
+    # Same seed-weight contract as the unsharded batchhl_update: seeds
+    # cross deletion/re-weight edges at their pre-update weight, resolved
+    # against g_old; apply_batch above took the original batch.
+    batch = resolve_seed_weights(g_old, batch)
 
     def body(g_new, batch, dist, hub, own, landmarks_full, plan):
         hub_mask = per_plane_hub_mask(landmarks_full, own, g_new.n)

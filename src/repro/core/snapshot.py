@@ -49,7 +49,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.graphs.coo import Graph, BatchUpdate, INF_D, apply_batch, grow
+from repro.graphs.coo import (Graph, BatchUpdate, INF_D, apply_batch, grow,
+                              resolve_seed_weights)
 from repro.checkpoint import manager as ckpt
 from repro.core.batch import (check_labelling_width, repair_base,
                               repair_merge, repair_step,
@@ -59,6 +60,15 @@ from repro.core.engine import RelaxPlan
 from repro.core.labelling import (HighwayLabelling, INF_KEY4, grow_labelling,
                                   key2_dist, key2_hub, key2_make,
                                   per_plane_hub_mask)
+
+
+class UnweightedCheckpointError(FileNotFoundError):
+    """A checkpoint from before the weighted-metric format (no graph_w).
+
+    Named so callers can distinguish "old format" from "no checkpoint" /
+    "corrupt shapes" — the weight column cannot be defaulted silently
+    (w ≡ 1 would be a *guess* about the stream that produced the state).
+    """
 
 
 # ---------------------------------------------------------------------------
@@ -351,6 +361,10 @@ def pipelined_update(snapshot: Snapshot, batch: BatchUpdate, *,
     lab = snapshot.labelling
     if g_new is None:
         g_new = apply_batch(snapshot.graph, batch)
+    # Seeds must cross deletion/re-weight edges at their pre-update weight
+    # (see coo.resolve_seed_weights); apply_batch above already consumed
+    # the original post-update weights.
+    batch = resolve_seed_weights(snapshot.graph, batch)
 
     if fused:
         best, seed, seeded, bound, hub_mask, changed = fstart_fn(
@@ -416,6 +430,7 @@ def snapshot_state(snap: Snapshot) -> dict:
         "version": np.int64(snap.version),
         "n": np.int64(g.n),
         "graph_src": g.src, "graph_dst": g.dst, "graph_valid": g.valid,
+        "graph_w": g.w,
         "landmarks": lab.landmarks, "dist": lab.dist, "hub": lab.hub,
         "highway": lab.highway,
     }
@@ -470,8 +485,15 @@ def restore_snapshot(ckpt_dir: str, step: int | None = None) -> Snapshot:
         raise FileNotFoundError(
             f"checkpoint {d} lacks graph state {missing}: it predates the "
             "full-state format and cannot resume a serve loop")
+    if not os.path.exists(os.path.join(d, "graph_w.npy")):
+        raise UnweightedCheckpointError(
+            f"checkpoint {d} lacks the edge-weight column graph_w: it "
+            "predates the weighted-metric format. Re-serve from the "
+            "original stream (or re-save the snapshot) to migrate; the "
+            "weight column cannot be reconstructed from topology alone.")
     g = Graph(jnp.asarray(load("graph_src")), jnp.asarray(load("graph_dst")),
-              jnp.asarray(load("graph_valid")), int(load("n")))
+              jnp.asarray(load("graph_valid")), jnp.asarray(load("graph_w")),
+              int(load("n")))
     lab = HighwayLabelling(jnp.asarray(load("landmarks")),
                            jnp.asarray(load("dist")),
                            jnp.asarray(load("hub")),

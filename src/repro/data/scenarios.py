@@ -27,6 +27,12 @@ Registry (`SCENARIOS` / `get_scenario`):
                 below the final size and exercise grow-in-place
                 (DESIGN.md §6); without --grow it is the scenario that
                 deterministically raises CapacityError
+  traffic       road-network churn (weighted metric, DESIGN.md §8): most
+                of each tick re-weights live edges (congestion spikes and
+                decays) around a sparse insert/delete trickle, and every
+                `rew_only_period`-th tick is weight-change-only — zero
+                slot churn, so served capacity must not shrink. Pair with
+                `--graph road` so weights actually vary
 
 `launch/serve.py --scenario <name>` drives these; `benchmarks/ticks.py`
 reports the serving trajectory under them.
@@ -54,14 +60,28 @@ class Scenario:
     quiet_frac: float = 0.1
     #: > 0: Zipf exponent for query *sources* (targets stay uniform)
     query_skew: float = 0.0
+    #: fraction of each tick's batch that re-weights existing edges
+    #: (weighted metric; the remainder splits by ins_frac)
+    rew_frac: float = 0.0
+    #: > 0: every rew_only_period-th tick (tick > 0) is weight-change
+    #: only — no insertions or deletions, so no slot churn
+    rew_only_period: int = 0
+    #: > 1: inserts/reweights draw uniform weights in [1, max_weight]
+    max_weight: int = 1
 
-    def update_counts(self, tick: int, batch_size: int) -> tuple[int, int]:
-        """(n_ins, n_del) for this tick's batch."""
+    def update_counts(self, tick: int,
+                      batch_size: int) -> tuple[int, int, int]:
+        """(n_ins, n_del, n_rew) for this tick's batch."""
         size = batch_size
         if self.burst_period and tick % self.burst_period:
             size = max(2, int(round(batch_size * self.quiet_frac)))
-        n_ins = int(round(size * self.ins_frac))
-        return n_ins, size - n_ins
+        if self.rew_only_period and tick > 0 \
+                and tick % self.rew_only_period == 0:
+            return 0, 0, size
+        n_rew = int(round(size * self.rew_frac))
+        rest = size - n_rew
+        n_ins = int(round(rest * self.ins_frac))
+        return n_ins, rest - n_ins, n_rew
 
     def max_inserts(self, ticks: int, batch_size: int) -> int:
         """Upper bound on total insertions — sizes the graph capacity."""
@@ -93,6 +113,10 @@ SCENARIOS: dict[str, Scenario] = {s.name: s for s in (
     Scenario("growth", "pure insertions: the edge count climbs every tick "
                        "(grow-in-place stress; pair with --capacity/--grow)",
              ins_frac=1.0),
+    Scenario("traffic", "road-network weight churn: spikes/decays on live "
+                        "edges + sparse insert/delete trickle; every 4th "
+                        "tick is weight-change-only (no slot churn)",
+             ins_frac=0.5, rew_frac=0.75, rew_only_period=4, max_weight=8),
 )}
 
 

@@ -6,6 +6,8 @@ GraphCast-style configs; molecule batches feed SchNet/DimeNet/MACE.
 """
 from __future__ import annotations
 
+import math
+
 import numpy as np
 
 
@@ -52,6 +54,21 @@ def grid_mesh(rows: int, cols: int) -> np.ndarray:
     return np.concatenate(e).astype(np.int32)
 
 
+def road_grid(n: int, max_weight: int = 8, seed: int = 0) -> np.ndarray:
+    """Road-like weighted planar graph: a 4-connected grid of ~n vertices
+    with uniform integer weights in [1, max_weight] per edge — the
+    road-network regime (large diameter, bounded degree) the weighted
+    metric targets, as opposed to the small-diameter power-law regime of
+    `barabasi_albert`. Returns edges [E, 3] = (u, v, w); the vertex count
+    is rows·cols = `edges[:, :2].max() + 1` (the grid is connected)."""
+    rows = max(2, int(math.isqrt(n)))
+    cols = max(2, (n + rows - 1) // rows)
+    e = grid_mesh(rows, cols)
+    rng = np.random.default_rng(seed)
+    w = rng.integers(1, max_weight + 1, size=e.shape[0])
+    return np.concatenate([e, w[:, None]], axis=1).astype(np.int32)
+
+
 def molecule_batch(n_mols: int, atoms_per_mol: int, seed: int = 0
                    ) -> tuple[np.ndarray, np.ndarray]:
     """Batched random molecules: positions [N,3] + radius-graph edges."""
@@ -69,19 +86,26 @@ def molecule_batch(n_mols: int, atoms_per_mol: int, seed: int = 0
 
 
 def random_batch_updates(edges: np.ndarray, n: int, n_ins: int, n_del: int,
-                         seed: int = 0,
-                         existing=None) -> list[tuple[int, int, bool]]:
+                         seed: int = 0, existing=None, n_rew: int = 0,
+                         max_weight: int = 1) -> list[tuple]:
     """Valid updates: deletions sampled from existing edges, insertions are
-    fresh non-edges (paper §3: invalid updates are ignored).
+    fresh non-edges (paper §3: invalid updates are ignored), reweights
+    (`n_rew` > 0) re-draw the weight of existing edges not already chosen
+    for deletion. With `max_weight` > 1 inserts/reweights carry a uniform
+    weight in [1, max_weight] as 4-tuples (u, v, op, w); the default
+    (n_rew=0, max_weight=1) emits the legacy (u, v, is_del) 3-tuples from
+    a bit-identical rng sequence.
 
     `existing` optionally passes a prebuilt membership set/dict of
     canonical (min, max) edge keys, sparing the O(E) rebuild per call for
     callers that maintain one incrementally (launch/serve.py).
     """
     rng = np.random.default_rng(seed)
+    pairs = edges[:, :2] if getattr(edges, "ndim", 0) == 2 \
+        and edges.shape[0] and edges.shape[1] > 2 else edges
     if existing is None:
-        existing = {(min(u, v), max(u, v)) for u, v in edges}
-    out: list[tuple[int, int, bool]] = []
+        existing = {(min(u, v), max(u, v)) for u, v in pairs}
+    out: list[tuple] = []
     if n_del:
         sel = rng.choice(len(edges), size=min(n_del, len(edges)),
                          replace=False)
@@ -100,7 +124,20 @@ def random_batch_updates(edges: np.ndarray, n: int, n_ins: int, n_del: int,
         if u == v or key in existing or key in chosen:
             continue
         chosen.add(key)
-        out.append((u, v, False))
+        if max_weight > 1:
+            out.append((u, v, 0, int(rng.integers(1, max_weight + 1))))
+        else:
+            out.append((u, v, False))
+    if n_rew and len(edges):
+        sel = rng.choice(len(edges), size=min(n_rew, len(edges)),
+                         replace=False)
+        for i in sel:
+            u, v = int(edges[i, 0]), int(edges[i, 1])
+            key = (min(u, v), max(u, v))
+            if key in chosen:
+                continue
+            chosen.add(key)
+            out.append((u, v, 2, int(rng.integers(1, max(2, max_weight + 1)))))
     rng.shuffle(out)
     return out
 

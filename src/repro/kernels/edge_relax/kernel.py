@@ -57,7 +57,8 @@ def _relax_kernel(keys_ref, src_ref, dstloc_ref, valid_ref, step_ref, o_ref):
     step = step_ref[0]
 
     gathered = jnp.take(keys, src, axis=0)
-    cand = jnp.minimum(gathered + step, INF32)
+    s = gathered + step
+    cand = jnp.minimum(jnp.where(s < 0, INF32, s), INF32)
     cand = jnp.where(valid != 0, cand, INF32)
     out = jnp.full((o_ref.shape[-1],), INF32, jnp.int32)
     out = out.at[dstloc].min(cand)
@@ -65,19 +66,26 @@ def _relax_kernel(keys_ref, src_ref, dstloc_ref, valid_ref, step_ref, o_ref):
 
 
 def _relax_sweep_kernel(keys_ref, hub_ref, src_ref, dstloc_ref, mask_ref,
-                        params_ref, o_ref):
-    """Generalized sweep: extend (step / inf-clamp / hub bit-clear) + mask."""
+                        w_ref, params_ref, o_ref):
+    """Generalized sweep: weighted extend (step·w / saturate-at-inf /
+    hub bit-clear) + mask."""
     keys = keys_ref[...]          # [V] int32 (full shard)
     hub = hub_ref[0, 0]           # [BV] int32: dst-block hub flags
     src = src_ref[0, 0]           # [BE]
     dstloc = dstloc_ref[0, 0]     # [BE] local dst in [0, BV)
     mask = mask_ref[0, 0]         # [BE] int32: per-sweep edge validity
+    w = w_ref[0, 0]               # [BE] int32: per-sweep edge weight
     step = params_ref[0]
     inf = params_ref[1]
     clear = params_ref[2]
 
     gathered = jnp.take(keys, src, axis=0)
-    cand = jnp.minimum(gathered + step, inf)
+    # Saturating weighted extend: keys and step·w are both non-negative
+    # (step ≤ 4, w ≤ INF_D keeps the product in range), so the int32 sum
+    # overflows iff it wraps negative — clamp those to inf rather than
+    # letting a near-inf key pass a max-weight edge as a small key.
+    s = gathered + step * w
+    cand = jnp.minimum(jnp.where(s < 0, inf, s), inf)
     hub_e = jnp.take(hub, dstloc, axis=0)
     cand = jnp.where(hub_e != 0, cand & ~clear, cand)
     cand = jnp.where(mask != 0, cand, inf)
@@ -247,15 +255,17 @@ def edge_relax_pallas(keys: jax.Array, src_t: jax.Array, dstloc_t: jax.Array,
                                              "interpret"))
 def relax_sweep_pallas(keys: jax.Array, hub_t: jax.Array, src_t: jax.Array,
                        dstloc_t: jax.Array, mask_t: jax.Array,
+                       w_t: jax.Array,
                        step: jax.Array, inf: jax.Array, clear_bit: jax.Array,
                        n: int, block_v: int, interpret: bool = True,
                        rowblk_t: jax.Array | None = None,
                        nb: int | None = None) -> jax.Array:
     """Generalized sweep: keys [V] + per-row hub tiles [S, NR, BV] + tiled
-    edges [S, NR, BE] → [V].
+    edges/weights [S, NR, BE] → [V].
 
     cand[v] = min over masked edges (u, v) of
-        clear_hub_bit_if_hub(v, min(keys[u] + step, inf));  `inf` if none.
+        clear_hub_bit_if_hub(v, sat(keys[u] + step·w(u,v), inf));
+    `inf` if none. The add saturates at `inf` (int32 wrap → inf).
     The grid walks (vertex shard, tile row); each step owns one disjoint
     [BV] output tile, so S is a pure launch-structure knob. With a
     block_e-chunked tiling (`rowblk_t`/`nb` set) several rows feed one
@@ -276,11 +286,12 @@ def relax_sweep_pallas(keys: jax.Array, hub_t: jax.Array, src_t: jax.Array,
             pl.BlockSpec((1, 1, be), lambda j, i: (j, i, 0)),
             pl.BlockSpec((1, 1, be), lambda j, i: (j, i, 0)),
             pl.BlockSpec((1, 1, be), lambda j, i: (j, i, 0)),
+            pl.BlockSpec((1, 1, be), lambda j, i: (j, i, 0)),
             pl.BlockSpec((3,), lambda j, i: (0,)),
         ],
         out_specs=pl.BlockSpec((1, 1, block_v), lambda j, i: (j, i, 0)),
         out_shape=jax.ShapeDtypeStruct((s, nr, block_v), jnp.int32),
         interpret=interpret,
-    )(keys, hub_t, src_t, dstloc_t, mask_t, params)
+    )(keys, hub_t, src_t, dstloc_t, mask_t, w_t, params)
     out = _reduce_rows(out, rowblk_t, nb, jnp.asarray(inf, jnp.int32))
     return out.reshape(-1)[:n]

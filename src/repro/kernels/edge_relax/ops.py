@@ -71,6 +71,19 @@ class BlockedGraph:
         return jnp.where(self.slot_t != 0,
                          edge_mask[self.perm_t], False).astype(jnp.int32)
 
+    def tile_w(self, w: jax.Array | None) -> jax.Array:
+        """Re-tile per-edge weights (original slot order) on device.
+
+        `w=None` means the unweighted metric: slot_t doubles as the unit
+        weight tile (1 on real slots, 0 on padding — padding is masked to
+        inf anyway). Weights churn with re-weight batches the way validity
+        churns with deletions, so they ride the same stored permutation and
+        never force a host-side re-tile.
+        """
+        if w is None or w.shape[0] == 0:
+            return self.slot_t
+        return jnp.where(self.slot_t != 0, w[self.perm_t], 0).astype(jnp.int32)
+
     def tile_plane(self, plane: jax.Array, fill) -> jax.Array:
         """Pad + reshape a per-vertex plane [V] to dst tiles [S, NB, BV]."""
         s = self.src_t.shape[0]
@@ -201,18 +214,22 @@ def edge_relax(keys: jax.Array, bg: BlockedGraph, step,
 
 def relax_sweep(keys: jax.Array, bg: BlockedGraph, edge_mask: jax.Array,
                 step, inf, clear_bit=0,
-                hub: jax.Array | None = None) -> jax.Array:
+                hub: jax.Array | None = None,
+                w: jax.Array | None = None) -> jax.Array:
     """Generalized relaxation sweep on the tiled graph (Pallas path).
 
     cand[v] = min over edges (u, v) with edge_mask of
-        extend(keys[u]) = clear_bit-cleared-if-hub[v] min(keys[u]+step, inf)
+        extend(keys[u]) = clear_bit-cleared-if-hub[v]
+                          sat(keys[u] + step·w(u,v), inf)
 
-    `edge_mask` is in original edge-slot order (length = edge capacity);
+    `edge_mask` and `w` are in original edge-slot order (length = edge
+    capacity); `w=None` is the unweighted metric (w ≡ 1 on real slots).
     `hub` is a per-vertex bool plane [V] (or None for plain relaxation).
     Runs interpret-mode Pallas off-TPU so parity tests exercise the same
     kernel that runs compiled on TPU.
     """
     mask_t = bg.tile_mask(edge_mask)
+    w_t = bg.tile_w(w)
     if hub is None:
         s, nr, _ = bg.src_t.shape
         hub_t = jnp.zeros((s, nr, bg.block_v), jnp.int32)
@@ -221,26 +238,29 @@ def relax_sweep(keys: jax.Array, bg: BlockedGraph, edge_mask: jax.Array,
     interpret = jax.default_backend() != "tpu"
     rowblk_t = bg.rowblk_t if bg.chunked else None
     return kernel.relax_sweep_pallas(keys, hub_t, bg.src_t, bg.dstloc_t,
-                                     mask_t, step, inf, clear_bit,
+                                     mask_t, w_t, step, inf, clear_bit,
                                      bg.n, bg.block_v, interpret=interpret,
                                      rowblk_t=rowblk_t, nb=bg.nb)
 
 
 def relax_sweep_sorted(keys: jax.Array, sg: SortedGraph,
                        edge_mask: jax.Array, step, inf, clear_bit=0,
-                       hub: jax.Array | None = None) -> jax.Array:
+                       hub: jax.Array | None = None,
+                       w: jax.Array | None = None) -> jax.Array:
     """The `sorted` impl of the same sweep: compiled XLA everywhere.
 
     Identical math to `relax_sweep` over the identical edge multiset —
-    gather, extend, mask, min-reduce by destination — so results are
-    bit-identical to both the kernel path and the jnp reference
-    (`tests/test_kernel_tuning.py` pins all three). The reduction is a
-    `segment_min` over the destination-sorted slots with
+    gather, weighted saturating extend, mask, min-reduce by destination —
+    so results are bit-identical to both the kernel path and the jnp
+    reference (`tests/test_kernel_tuning.py` pins all three). The
+    reduction is a `segment_min` over the destination-sorted slots with
     `indices_are_sorted=True`, and only the occupied slots participate.
     """
     mask = edge_mask[sg.perm_s]
     gathered = jnp.take(keys, sg.src_s, axis=0)
-    cand = jnp.minimum(gathered + step, inf)
+    sw = step if w is None else step * jnp.take(w, sg.perm_s, axis=0)
+    s = gathered + sw
+    cand = jnp.minimum(jnp.where(s < 0, inf, s), inf)
     if hub is not None:
         hub_e = jnp.take(hub, sg.dst_s, axis=0)
         cand = jnp.where(hub_e, cand & ~jnp.int32(clear_bit), cand)

@@ -8,9 +8,17 @@ INF32 = 1 << 29  # plain int: pallas kernels must not capture traced constants
 
 
 def edge_relax(keys: jax.Array, src: jax.Array, dst: jax.Array,
-               valid: jax.Array, step, n: int) -> jax.Array:
-    """cand[v] = min over valid edges (u,v) of keys[u] + step; INF if none."""
-    cand = jnp.minimum(keys[src] + step, INF32)
+               valid: jax.Array, step, n: int,
+               w: jax.Array | None = None) -> jax.Array:
+    """cand[v] = min over valid edges (u,v) of keys[u] + step·w; INF if none.
+
+    The add saturates: keys and step·w are both non-negative, so an int32
+    overflow shows up as a negative sum — clamp those to INF32 instead of
+    letting a near-INF key pass a heavy edge as a small key.
+    """
+    sw = step if w is None else step * w
+    s = keys[src] + sw
+    cand = jnp.minimum(jnp.where(s < 0, INF32, s), INF32)
     cand = jnp.where(valid, cand, INF32)
     out = jax.ops.segment_min(cand, dst, num_segments=n)
     return jnp.minimum(out, INF32)

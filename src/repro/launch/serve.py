@@ -59,6 +59,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import math
 import time
 
 import jax
@@ -66,7 +67,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.graphs import generators as gen
-from repro.graphs.coo import apply_batch, from_edges, make_batch, to_numpy_adj
+from repro.graphs.coo import (apply_batch, from_edges, make_batch,
+                              to_numpy_wadj)
 from repro.core.construct import build_labelling, select_landmarks_by_degree
 from repro.core.batch import batchhl_update
 from repro.core.engine import RelaxEngine
@@ -89,6 +91,10 @@ class ServeConfig:
     """Everything the serving loop needs; `main()` maps CLI flags here."""
     n: int = 2000
     deg: int = 4
+    #: initial graph family: "ba" (power-law, unit weights) or "road"
+    #: (weighted planar grid, DESIGN.md §8). Road rounds n up to the grid
+    #: size rows·cols at loop construction.
+    graph: str = "ba"
     landmarks: int = 16
     batches: int = 5
     batch_size: int = 100
@@ -201,6 +207,16 @@ class ServeLoop:
     def __init__(self, cfg: ServeConfig):
         self.cfg = cfg
         self.scenario = get_scenario(cfg.scenario)
+        if cfg.graph not in ("ba", "road"):
+            raise ValueError(f"unknown graph family {cfg.graph!r}; "
+                             f"choose 'ba' or 'road'")
+        if cfg.graph == "road":
+            # The grid generator realizes rows·cols >= n vertices; the
+            # whole loop (queries, update sampling, landmarks) must agree
+            # on the realized count.
+            rows = max(2, int(math.isqrt(cfg.n)))
+            cols = max(2, (cfg.n + rows - 1) // rows)
+            cfg.n = rows * cols
         self.mesh = None
         if cfg.mesh == "host":
             self.mesh = make_host_mesh(model=cfg.shards)
@@ -215,9 +231,11 @@ class ServeLoop:
         # host-side current edge set, maintained incrementally: a
         # swap-remove list + position map keeps each tick O(batch); the
         # *order* is serve state (deletion sampling depends on it), so it
-        # rides along in every checkpoint.
+        # rides along in every checkpoint, together with the per-edge
+        # weights (the serve-side mirror of the graph's w column).
         self._edge_list: list[tuple[int, int]] = []
         self._edge_pos: dict[tuple[int, int], int] = {}
+        self._edge_w: dict[tuple[int, int], int] = {}
         self._oracle_adj: dict[int, dict] = {}  # version -> adjacency
 
     @property
@@ -240,7 +258,11 @@ class ServeLoop:
 
     def _fresh_snapshot(self) -> Snapshot:
         cfg = self.cfg
-        edges = gen.barabasi_albert(cfg.n, cfg.deg, seed=0)
+        if cfg.graph == "road":
+            edges = gen.road_grid(cfg.n, max_weight=max(
+                2, self.scenario.max_weight), seed=0)
+        else:
+            edges = gen.barabasi_albert(cfg.n, cfg.deg, seed=0)
         # Explicit --capacity starts the run at that size (the grow-in-place
         # entry point: pair with --grow to start small and let the stream
         # grow the slots); the default provisions the scenario's worst case
@@ -258,8 +280,10 @@ class ServeLoop:
             lab = build_labelling(g, landmarks, plan=plan)
         jax.block_until_ready(lab.dist)
         self._edge_list = [(int(min(a, b)), int(max(a, b)))
-                           for a, b in edges]
+                           for a, b in edges[:, :2]]
         self._edge_pos = {e: i for i, e in enumerate(self._edge_list)}
+        self._edge_w = {e: (int(row[2]) if edges.shape[1] > 2 else 1)
+                        for e, row in zip(self._edge_list, edges)}
         self._log(f"constructed labelling: {cfg.n} vertices, "
                   f"{edges.shape[0]} edges, R={cfg.landmarks}, "
                   f"size={int(lab.label_size())}, {time.time() - t0:.2f}s "
@@ -285,8 +309,10 @@ class ServeLoop:
                 f"checkpoint is from a run with n={base_n} "
                 f"(grown to {snap.graph.n}), config has n={cfg.n}")
         edge_arr = restore_extra(cfg.ckpt_dir, ("edge_list",))["edge_list"]
-        self._edge_list = [(int(u), int(v)) for u, v in edge_arr]
+        self._edge_list = [(int(r[0]), int(r[1])) for r in edge_arr]
         self._edge_pos = {e: i for i, e in enumerate(self._edge_list)}
+        self._edge_w = {e: (int(r[2]) if edge_arr.shape[1] > 2 else 1)
+                        for e, r in zip(self._edge_list, edge_arr)}
         snap = dataclasses.replace(snap, plan=self.engine.prepare(snap.graph))
         self._log(f"resumed at version {snap.version}: {cfg.n} vertices, "
                   f"{len(self._edge_list)} edges, "
@@ -422,7 +448,7 @@ class ServeLoop:
 
     def _oracle(self, version: int, graph) -> dict:
         if version not in self._oracle_adj:
-            self._oracle_adj[version] = to_numpy_adj(graph)
+            self._oracle_adj[version] = to_numpy_wadj(graph)
             # A tick only ever verifies against its own two versions;
             # evict older adjacencies so --verify stays O(E) host memory
             # on long runs instead of O(ticks × E).
@@ -433,8 +459,9 @@ class ServeLoop:
     def _verify_tick(self, tick: int, out: list[MicrobatchRecord],
                      snapshots: dict[int, Snapshot]) -> int:
         """Check the first min(64, Q) answered queries of the tick against
-        the BFS oracle *at the version each was answered* — the staleness
-        contract says stale answers are exact at their own version."""
+        the Dijkstra oracle *at the version each was answered* — the
+        staleness contract says stale answers are exact at their own
+        version (for w ≡ 1 graphs the oracle degenerates to BFS)."""
         n_check = min(64, self.cfg.queries)
         wrong = checked = 0
         for m in out:
@@ -446,9 +473,10 @@ class ServeLoop:
                     break
                 got = float(m.answers[i])
                 # len(adj) is the snapshot's own n — a grown snapshot has
-                # more vertices than cfg.n, and the BFS must see them all.
-                want = ref.pair_distance(adj, len(adj), int(m.qs[i]),
-                                         int(m.qt[i]))
+                # more vertices than cfg.n, and the search must see them
+                # all.
+                want = ref.pair_distance_w(adj, len(adj), int(m.qs[i]),
+                                           int(m.qt[i]))
                 want = got if (want == ref.INF and got >= 1e8) else want
                 if int(m.qs[i]) == int(m.qt[i]):
                     want = 0
@@ -476,14 +504,19 @@ class ServeLoop:
 
         for tick in range(snap0.version, cfg.batches):
             snap = self.store.committed
-            n_ins, n_del = self.scenario.update_counts(tick, cfg.batch_size)
+            n_ins, n_del, n_rew = self.scenario.update_counts(
+                tick, cfg.batch_size)
             cur_edges = np.asarray(self._edge_list, np.int32)
             ups = gen.random_batch_updates(
                 cur_edges, cfg.n, n_ins=n_ins, n_del=n_del,
-                seed=100 + tick, existing=self._edge_pos)
+                seed=100 + tick, existing=self._edge_pos, n_rew=n_rew,
+                max_weight=self.scenario.max_weight)
             batch = make_batch(ups, pad_to=cfg.batch_size)
             offsets, qs, qt = self._tick_queries(tick)
-            has_ins = any(not is_del for (_, _, is_del) in ups)
+            # Insert ops alone move topology slots; deletions flip
+            # validity in place and reweights touch only the w column,
+            # so a reweight-only tick reuses the committed tiling.
+            has_ins = any(not int(up[2]) for up in ups)
 
             # Grow-in-place check *before* any dispatch (DESIGN.md §6): an
             # overflowing batch grows the working snapshot — same version,
@@ -524,19 +557,27 @@ class ServeLoop:
                 tick, tick_t0, offsets, qs, qt, served_box[0],
                 nxt.version, out)
 
-            # Fold the tick's updates into the incremental edge set.
-            for u, v, is_del in ups:
+            # Fold the tick's updates into the incremental edge set
+            # (op 0 = insert, 1 = delete, 2 = reweight).
+            for up in ups:
+                u, v, op = up[0], up[1], int(up[2])
+                w = int(up[3]) if len(up) > 3 else 1
                 k = (min(u, v), max(u, v))
-                if is_del:
+                if op == 1:
                     i = self._edge_pos.pop(k, None)
                     if i is not None:
+                        self._edge_w.pop(k, None)
                         last = self._edge_list.pop()
                         if i < len(self._edge_list):
                             self._edge_list[i] = last
                             self._edge_pos[last] = i
+                elif op == 2:
+                    if k in self._edge_pos:
+                        self._edge_w[k] = w
                 elif k not in self._edge_pos:
                     self._edge_pos[k] = len(self._edge_list)
                     self._edge_list.append(k)
+                    self._edge_w[k] = w
 
             tick_mbs = [m for m in out if m.tick == tick]
             lat = (np.concatenate([m.latencies for m in tick_mbs])
@@ -565,10 +606,13 @@ class ServeLoop:
             ticks.append(stats)
 
             if cfg.ckpt_dir:
+                edge_rows = np.asarray(
+                    [(u, v, self._edge_w.get((u, v), 1))
+                     for u, v in self._edge_list],
+                    np.int32).reshape(-1, 3)
                 save_snapshot(
                     cfg.ckpt_dir, nxt,
-                    extra={"edge_list": np.asarray(self._edge_list,
-                                                   np.int32),
+                    extra={"edge_list": edge_rows,
                            "base_n": np.int64(cfg.n)})
 
         self.report = ServeReport(config=cfg, ticks=ticks, microbatches=out,
@@ -606,6 +650,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=2000)
     ap.add_argument("--deg", type=int, default=4)
+    ap.add_argument("--graph", default="ba", choices=("ba", "road"),
+                    help="initial graph family: ba = power-law unit "
+                         "weights, road = weighted planar grid (rounds n "
+                         "up to rows*cols; pair with --scenario traffic)")
     ap.add_argument("--landmarks", type=int, default=16)
     ap.add_argument("--batches", type=int, default=5)
     ap.add_argument("--batch-size", type=int, default=100)
@@ -688,7 +736,7 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = ServeConfig(
-        n=args.n, deg=args.deg, landmarks=args.landmarks,
+        n=args.n, deg=args.deg, graph=args.graph, landmarks=args.landmarks,
         batches=args.batches, batch_size=args.batch_size,
         scenario=args.scenario, queries=args.queries, qps=args.qps,
         microbatch=args.microbatch, pipeline=args.pipeline,

@@ -326,19 +326,25 @@ def test_engine_plan_cache_keeps_two_snapshots():
 
 def test_scenario_registry():
     assert set(SCENARIOS) == {"mixed", "insert-heavy", "delete-heavy",
-                              "bursty", "skewed", "growth"}
-    ins, dele = get_scenario("growth").update_counts(0, 100)
-    assert ins == 100 and dele == 0  # pure insertions: only-ever-grows
+                              "bursty", "skewed", "growth", "traffic"}
+    ins, dele, rew = get_scenario("growth").update_counts(0, 100)
+    assert (ins, dele, rew) == (100, 0, 0)  # pure insertions
     with pytest.raises(ValueError, match="unknown scenario"):
         get_scenario("nope")
-    ins, dele = get_scenario("insert-heavy").update_counts(0, 100)
-    assert ins == 90 and dele == 10
-    ins, dele = get_scenario("delete-heavy").update_counts(0, 100)
-    assert ins == 10 and dele == 90
+    ins, dele, rew = get_scenario("insert-heavy").update_counts(0, 100)
+    assert (ins, dele, rew) == (90, 10, 0)
+    ins, dele, rew = get_scenario("delete-heavy").update_counts(0, 100)
+    assert (ins, dele, rew) == (10, 90, 0)
     bursty = get_scenario("bursty")
-    assert bursty.update_counts(0, 100) == (50, 50)      # burst tick
+    assert bursty.update_counts(0, 100) == (50, 50, 0)   # burst tick
     assert sum(bursty.update_counts(1, 100)) == 10       # trickle tick
     assert bursty.max_inserts(3, 100) >= 55
+    traffic = get_scenario("traffic")
+    ins, dele, rew = traffic.update_counts(1, 100)
+    assert rew == 75 and ins + dele == 25 and traffic.max_weight == 8
+    # every 4th tick (tick > 0) is weight-change-only: zero slot churn
+    assert traffic.update_counts(4, 100) == (0, 0, 100)
+    assert traffic.update_counts(0, 100)[2] == 75
     rng = np.random.default_rng(0)
     qs, qt = get_scenario("skewed").sample_queries(rng, 50, 256)
     assert qs.min() >= 0 and qs.max() < 50 and qt.max() < 50

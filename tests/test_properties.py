@@ -1,7 +1,7 @@
 """Property-based metamorphic suite for served distances and updates.
 
-Three families of invariants, each pinned on BOTH engine backends (the
-jnp segment-min reference and the interpret-mode Pallas kernel):
+Invariant families, each pinned on BOTH engine backends (the jnp
+segment-min reference and the interpret-mode Pallas kernel):
 
   * metric laws of served distances — symmetry d(s,t) = d(t,s) and the
     triangle inequality d(s,t) <= d(s,u) + d(u,t);
@@ -9,7 +9,12 @@ jnp segment-min reference and the interpret-mode Pallas kernel):
     then deleting them restores the labelling bit-for-bit (the labelling
     is canonical per graph, so round-tripping the graph round-trips it);
   * batch-split invariance — one batch applied whole equals the same
-    updates applied as two sequential chunks (bit-equal planes).
+    updates applied as two sequential chunks (bit-equal planes);
+  * the weighted metric (DESIGN.md §8) — served distances on weighted
+    graphs equal the host Dijkstra oracle exactly (plus the metric laws),
+    weight-change ∘ weight-restore round-trips the labelling bit-for-bit,
+    and batch-split invariance holds for batches that mix insert/delete
+    with re-weight ops.
 
 Unlike the slow-marked oracle suites, this module is sized for the fast
 CI job (`-m "not slow"`): tiny graphs, few examples — the point is the
@@ -19,6 +24,8 @@ dependence) than pointwise BFS checks do.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -27,7 +34,9 @@ pytest.importorskip("hypothesis")  # optional dep; bare checkouts skip
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.graphs import generators as gen
-from repro.graphs.coo import apply_batch, from_edges, make_batch, to_numpy_adj
+from repro.graphs.coo import (apply_batch, from_edges, make_batch,
+                              to_numpy_adj, to_numpy_wadj)
+from repro.core import ref
 from repro.core.batch import batchhl_update
 from repro.core.construct import build_labelling, select_landmarks_by_degree
 from repro.core.engine import RelaxEngine
@@ -58,8 +67,8 @@ def _update(g, lab, ups, engine, pad_to=None):
     """One engine-routed BatchHL tick (plan prepared post-update)."""
     batch = make_batch(ups, pad_to=pad_to or max(len(ups), 1))
     if not ups:  # all-padding batch: a no-op update
-        batch = batch.__class__(batch.src, batch.dst, batch.is_del,
-                                jnp.zeros_like(batch.valid))
+        batch = dataclasses.replace(batch,
+                                    valid=jnp.zeros_like(batch.valid))
     g_next = apply_batch(g, batch)
     plan = engine.prepare(g_next) if engine else None
     g2, lab2, _ = batchhl_update(g, batch, lab, plan=plan, g_new=g_next)
@@ -130,4 +139,88 @@ def test_batch_split_invariance(backend, seed, n, n_ins, n_del):
     g_a, lab_a, _ = _update(g, lab0, ups[:j], engine)
     g_b, lab_b, _ = _update(g_a, lab_a, ups[j:], engine)
     assert to_numpy_adj(g_b) == to_numpy_adj(g_whole)
+    _assert_labellings_equal(lab_b, lab_whole)
+
+
+# --- weighted metric (DESIGN.md §8) ----------------------------------------
+
+def _build_weighted(n: int, seed: int, backend: str, max_w: int = 8,
+                    slack: int = 16):
+    edges = gen.random_connected(n, extra_edges=n // 2, seed=seed)
+    rng = np.random.default_rng(seed + 7)
+    w = rng.integers(1, max_w + 1, size=edges.shape[0])
+    ew = np.concatenate([edges, w[:, None]], axis=1).astype(np.int32)
+    g = from_edges(n, ew, edges.shape[0] + slack)
+    landmarks = select_landmarks_by_degree(g, 3)
+    engine = _engine(backend)
+    plan = engine.prepare(g) if engine else None
+    lab = build_labelling(g, landmarks, plan=plan)
+    return g, lab, ew, engine, plan
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 22),
+       max_w=st.integers(2, 9))
+def test_weighted_distances_match_dijkstra(backend, seed, n, max_w):
+    """Served distances on a weighted graph are Dijkstra-exact, symmetric,
+    and satisfy the triangle inequality."""
+    g, lab, _, _, plan = _build_weighted(n, seed, backend, max_w)
+    wadj = to_numpy_wadj(g)
+    rng = np.random.default_rng(seed + 1)
+    s, t, u = (jnp.asarray(rng.integers(0, n, 12), jnp.int32)
+               for _ in range(3))
+    d_st = np.asarray(batched_query(g, lab, s, t, plan=plan), np.int64)
+    for i in range(12):
+        want = ref.pair_distance_w(wadj, n, int(s[i]), int(t[i]))
+        got = float(d_st[i])
+        assert (got == want) or (want == ref.INF and got >= 1 << 28), \
+            (int(s[i]), int(t[i]), got, want)
+    d_ts = np.asarray(batched_query(g, lab, t, s, plan=plan), np.int64)
+    np.testing.assert_array_equal(d_st, d_ts)
+    d_su = np.asarray(batched_query(g, lab, s, u, plan=plan), np.int64)
+    d_ut = np.asarray(batched_query(g, lab, u, t, plan=plan), np.int64)
+    assert np.all(d_st <= d_su.astype(np.int64) + d_ut)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 22),
+       k=st.integers(1, 4))
+def test_weight_change_then_restore_roundtrips(backend, seed, n, k):
+    """Re-weighting k edges and then restoring their original weights
+    returns the labelling bit-for-bit — and the intermediate labelling
+    equals fresh construction on the re-weighted graph."""
+    g, lab0, ew, engine, _ = _build_weighted(n, seed, backend)
+    rng = np.random.default_rng(seed + 11)
+    idx = rng.choice(ew.shape[0], size=min(k, ew.shape[0]), replace=False)
+    spike = [(int(ew[i, 0]), int(ew[i, 1]), 2, int(ew[i, 2]) + 3)
+             for i in idx]
+    restore = [(int(ew[i, 0]), int(ew[i, 1]), 2, int(ew[i, 2]))
+               for i in idx]
+    g1, lab1, plan1 = _update(g, lab0, spike, engine)
+    lab1_fresh = build_labelling(g1, lab0.landmarks, plan=plan1)
+    _assert_labellings_equal(lab1, lab1_fresh)
+    g2, lab2, _ = _update(g1, lab1, restore, engine)
+    assert to_numpy_wadj(g2) == to_numpy_wadj(g)
+    _assert_labellings_equal(lab2, lab0)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 22),
+       n_ins=st.integers(1, 3), n_del=st.integers(0, 2),
+       n_rew=st.integers(1, 3))
+def test_weighted_batch_split_invariance(backend, seed, n, n_ins, n_del,
+                                         n_rew):
+    """Whole-batch ≡ split-batch for batches mixing insert/delete with
+    re-weight ops on a weighted graph (bit-equal planes and weights)."""
+    g, lab0, ew, engine, _ = _build_weighted(n, seed, backend)
+    ups = gen.random_batch_updates(ew, n, n_ins=n_ins, n_del=n_del,
+                                   seed=seed + 3, n_rew=n_rew, max_weight=6)
+    g_whole, lab_whole, _ = _update(g, lab0, ups, engine)
+    j = len(ups) // 2
+    g_a, lab_a, _ = _update(g, lab0, ups[:j], engine)
+    g_b, lab_b, _ = _update(g_a, lab_a, ups[j:], engine)
+    assert to_numpy_wadj(g_b) == to_numpy_wadj(g_whole)
     _assert_labellings_equal(lab_b, lab_whole)

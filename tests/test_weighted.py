@@ -1,0 +1,216 @@
+"""Weighted-metric satellites (DESIGN.md §8).
+
+Pins the contracts the weighted refactor added on top of the hop-count
+path:
+
+  * saturating relaxation — a plane sitting near INF_D relaxed through a
+    maximum-weight edge clamps at the sweep inf on every impl (jnp /
+    sorted / pallas) instead of wrapping negative in int32;
+  * weighted kernel parity — the three sweep impls agree bit-for-bit on
+    weighted graphs, and with w ≡ 1 each equals its legacy unweighted
+    call bit-for-bit (the w ≡ 1 regression pin);
+  * checkpoint format versioning — the weight column round-trips through
+    save/restore, and a pre-weighted checkpoint (no graph_w) is rejected
+    with the *named* UnweightedCheckpointError, not a shape error;
+  * the traffic serving scenario — served distances on the road grid
+    match the Dijkstra oracle at every tick, and the weight-change-only
+    ticks leave the slot arrays' validity untouched (re-weights consume
+    no capacity).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.graphs import generators as gen
+from repro.graphs.coo import (INF_D, apply_batch, from_edges, make_batch,
+                              to_numpy_wadj)
+from repro.kernels.edge_relax import ops as er_ops
+from repro.kernels.edge_relax.ref import edge_relax
+from repro.core.batch import batchhl_update
+from repro.core.construct import build_labelling, select_landmarks_by_degree
+from repro.core.engine import RelaxEngine
+from repro.core.snapshot import (Snapshot, UnweightedCheckpointError,
+                                 restore_snapshot, save_snapshot)
+from repro.launch.serve import ServeConfig, ServeLoop
+
+INF32 = 1 << 29
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _fresh_compile_caches():
+    """This module runs at the tail of the suite, on top of a few hundred
+    accumulated XLA executables; drop them first so its dispatches compile
+    from a fresh client (the re-compiles it pays for are all tiny)."""
+    jax.clear_caches()
+    yield
+
+
+def _sweep_all_impls(keys, src, dst, keep, mask, n, step, w):
+    """(jnp, sorted, pallas) outputs of the same weighted sweep."""
+    keys_j = jnp.asarray(keys)
+    mask_j = jnp.asarray(mask)
+    w_full = jnp.asarray(w)
+    out_jnp = edge_relax(keys_j, jnp.asarray(src), jnp.asarray(dst),
+                         mask_j, step, n, w=w_full)
+    sg = er_ops.prepare_sorted(src, dst, keep, n)
+    out_sorted = er_ops.relax_sweep_sorted(keys_j, sg, mask_j, step, INF32,
+                                           w=w_full)
+    bg = er_ops.prepare_topology(src, dst, keep, n, block_v=8)
+    out_pallas = er_ops.relax_sweep(keys_j, bg, mask_j, step, INF32,
+                                    w=w_full)
+    return out_jnp, out_sorted, out_pallas
+
+
+@pytest.mark.parametrize("step", (1, 2, 4))
+def test_saturating_relaxation_near_inf(step):
+    """Relax a near-INF_D plane through maximum-weight (INF_D) edges:
+    step · w reaches 2^30 and key + step · w overflows int32 for step 4 —
+    every impl must clamp at inf, never go negative, and stay in
+    bit-parity doing so."""
+    n = 6
+    src = np.array([0, 1, 2, 3], np.int32)
+    dst = np.array([1, 2, 3, 4], np.int32)
+    keep = np.ones(4, bool)
+    w = np.full(4, INF_D, np.int32)
+    # The plane's own INF_KEY for this step (2·INF_D+1 for key2, …):
+    # key + step·w reaches 2·step·INF_D ≈ 2^31 at step 4 — a real int32
+    # wrap without the guard.
+    keys = np.full(n, step * INF_D + step - 1, np.int32)
+    outs = _sweep_all_impls(keys, src, dst, keep, keep, n, step, w)
+    for out in outs:
+        arr = np.asarray(out)
+        assert (arr >= 0).all(), arr
+        assert (arr <= INF32).all(), arr
+        assert arr[1] == INF32  # 0→1 relax saturated, not wrapped
+    np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(outs[1]))
+    np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(outs[2]))
+
+
+def test_weighted_sweep_parity_and_unit_weight_pin():
+    """On a random weighted graph the three impls agree bit-for-bit; with
+    w ≡ 1 each equals its legacy unweighted (w=None) call bit-for-bit."""
+    rng = np.random.default_rng(5)
+    n, m = 40, 160
+    src = rng.integers(0, n, m).astype(np.int32)
+    dst = rng.integers(0, n, m).astype(np.int32)
+    keep = rng.random(m) < 0.8
+    mask = keep & (rng.random(m) < 0.9)
+    keys = rng.integers(0, 4 * n, n).astype(np.int32)
+    w = rng.integers(1, 9, m).astype(np.int32)
+    a, b, c = _sweep_all_impls(keys, src, dst, keep, mask, n, 2, w)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+    ones = np.ones(m, np.int32)
+    w1 = _sweep_all_impls(keys, src, dst, keep, mask, n, 2, ones)
+    legacy_jnp = edge_relax(jnp.asarray(keys), jnp.asarray(src),
+                            jnp.asarray(dst), jnp.asarray(mask), 2, n)
+    sg = er_ops.prepare_sorted(src, dst, keep, n)
+    legacy_sorted = er_ops.relax_sweep_sorted(jnp.asarray(keys), sg,
+                                              jnp.asarray(mask), 2, INF32)
+    bg = er_ops.prepare_topology(src, dst, keep, n, block_v=8)
+    legacy_pallas = er_ops.relax_sweep(jnp.asarray(keys), bg,
+                                       jnp.asarray(mask), 2, INF32)
+    for got, legacy in zip(w1, (legacy_jnp, legacy_sorted, legacy_pallas)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(legacy))
+
+
+def _weighted_instance(n=30, seed=2, max_w=7):
+    edges = gen.random_connected(n, extra_edges=n // 2, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    w = rng.integers(1, max_w + 1, size=edges.shape[0])
+    ew = np.concatenate([edges, w[:, None]], axis=1).astype(np.int32)
+    g = from_edges(n, ew, edges.shape[0] + 8)
+    landmarks = select_landmarks_by_degree(g, 4)
+    lab = build_labelling(g, landmarks)
+    return g, lab, ew
+
+
+def test_weighted_update_parity_across_backends():
+    """A mixed insert/delete/re-weight batch updates to bit-identical
+    labellings on the jnp and pallas backends, equal to fresh
+    construction on the post-update graph."""
+    g, lab, ew = _weighted_instance()
+    ups = gen.random_batch_updates(ew, g.n, n_ins=2, n_del=1, seed=3,
+                                   n_rew=2, max_weight=6)
+    assert any(int(u[2]) == 2 for u in ups)  # the batch does re-weight
+    batch = make_batch(ups, pad_to=8)
+    results = []
+    for backend in ("jnp", "pallas"):
+        engine = None if backend == "jnp" else RelaxEngine(
+            backend="pallas", block_v=16)
+        g_next = apply_batch(g, batch)
+        plan = engine.prepare(g_next) if engine else None
+        g2, lab2, _ = batchhl_update(g, batch, lab, improved=True,
+                                     plan=plan, g_new=g_next)
+        results.append((g2, lab2))
+    fresh = build_labelling(results[0][0], lab.landmarks)
+    for g2, lab2 in results:
+        assert to_numpy_wadj(g2) == to_numpy_wadj(results[0][0])
+        for f in ("dist", "hub", "highway"):
+            np.testing.assert_array_equal(np.asarray(getattr(lab2, f)),
+                                          np.asarray(getattr(fresh, f)))
+
+
+# --- checkpoint format versioning ------------------------------------------
+
+def test_checkpoint_roundtrips_weight_column(tmp_path):
+    g, lab, _ = _weighted_instance()
+    save_snapshot(str(tmp_path / "ck"), Snapshot(3, g, lab, None))
+    back = restore_snapshot(str(tmp_path / "ck"))
+    assert back.version == 3
+    np.testing.assert_array_equal(np.asarray(back.graph.w),
+                                  np.asarray(g.w))
+    np.testing.assert_array_equal(np.asarray(back.graph.valid),
+                                  np.asarray(g.valid))
+
+
+def test_pre_weighted_checkpoint_rejected_by_name(tmp_path):
+    """Deleting graph_w simulates a checkpoint written before the
+    weighted-metric format: restore must raise the named error, not a
+    downstream shape/KeyError."""
+    g, lab, _ = _weighted_instance()
+    save_snapshot(str(tmp_path / "ck"), Snapshot(1, g, lab, None))
+    step_dirs = [d for d in os.listdir(tmp_path / "ck")
+                 if d.startswith("step_")]
+    assert step_dirs
+    os.remove(tmp_path / "ck" / step_dirs[0] / "graph_w.npy")
+    with pytest.raises(UnweightedCheckpointError,
+                       match="weighted-metric format"):
+        restore_snapshot(str(tmp_path / "ck"))
+    # And the named error is still a FileNotFoundError, so pre-existing
+    # callers that handled missing state keep working.
+    assert issubclass(UnweightedCheckpointError, FileNotFoundError)
+
+
+# --- the traffic serving scenario ------------------------------------------
+
+def test_traffic_serve_dijkstra_exact_and_slotless_reweights():
+    """Five traffic ticks on the road grid, verified: every sampled
+    answer matches the Dijkstra oracle at its version, and the
+    weight-change-only tick (tick 4) leaves the slot validity untouched
+    — re-weights consume no capacity."""
+    cfg = ServeConfig(n=49, graph="road", scenario="traffic", landmarks=6,
+                      batches=5, batch_size=10, queries=16, qps=5000.0,
+                      microbatch=8, verify=True, quiet=True,
+                      keep_history=True)
+    loop = ServeLoop(cfg)
+    assert cfg.n == 49  # 7x7 grid realized exactly
+    rep = loop.run()
+    assert rep.final.version == 5
+    assert all((t.verify_mismatches or 0) == 0 for t in rep.ticks)
+    # tick 4 is the scenario's weight-change-only tick: same validity
+    # plane before and after, weights the only thing that moved.
+    g_before = rep.history[4].graph
+    g_after = rep.history[5].graph
+    np.testing.assert_array_equal(np.asarray(g_before.valid),
+                                  np.asarray(g_after.valid))
+    np.testing.assert_array_equal(np.asarray(g_before.src),
+                                  np.asarray(g_after.src))
+    assert not np.array_equal(np.asarray(g_before.w),
+                              np.asarray(g_after.w))
