@@ -16,6 +16,13 @@ sub-millisecond rows on shared CI runners are noise, and the paper-table
 modules are trajectory telemetry, not gates. New candidate rows pass
 freely — that is how the trajectory grows.
 
+Rows whose baseline ``derived`` carries ``better=higher`` (the replica
+tier's saturation throughput, ``serve/.../max_qps_r<k>``) are gated with
+the *inverted* ratio — a drop in sustained qps is the regression — and
+bypass the --min-us floor, whose unit they don't share. Their emitter
+quantizes the ramp in ×1.3 steps so one step of runner noise (−23%)
+stays inside the default 25% budget.
+
 Shared runners are noisy, and not uniformly so: the sub-second jnp tick
 rows are scheduler-sensitive (2× swings under transient load) while the
 compute-bound interpret-mode pallas rows hold within ~10% run-to-run —
@@ -105,20 +112,29 @@ def main() -> None:
             failures.append(f"{name}: missing from candidate")
             continue
         c = cand[name]["us_per_call"]
-        raw_ratio = c / b if b else float("inf")
+        # Throughput rows (``better=higher`` in the baseline's derived,
+        # e.g. the replica tier's serve/.../max_qps_r<k>) invert the
+        # ratio so >1 still means "regressed", and skip the --min-us
+        # floor — their value is a rate, not microseconds.
+        hib = "better=higher" in base[name].get("derived", "")
+        if hib:
+            raw_ratio = b / c if c else float("inf")
+        else:
+            raw_ratio = c / b if b else float("inf")
         ratio = raw_ratio / cal
-        big = b >= args.min_us and not (
+        big = (hib or b >= args.min_us) and not (
             args.skip_suffix and name.endswith(args.skip_suffix))
+        unit = "" if hib else "us"
         flag = ""
         if big and name != args.calibrate \
                 and ratio > 1.0 + args.max_regression:
             flag = "  << REGRESSION"
-            failures.append(f"{name}: {b:.0f}us -> {c:.0f}us "
+            failures.append(f"{name}: {b:.0f}{unit} -> {c:.0f}{unit} "
                             f"({(ratio - 1) * 100:+.0f}% calibrated)")
         elif big and args.max_regression_abs is not None \
                 and raw_ratio > 1.0 + args.max_regression_abs:
             flag = "  << ABSOLUTE REGRESSION"
-            failures.append(f"{name}: {b:.0f}us -> {c:.0f}us "
+            failures.append(f"{name}: {b:.0f}{unit} -> {c:.0f}{unit} "
                             f"({(raw_ratio - 1) * 100:+.0f}% raw, backstop "
                             f"{args.max_regression_abs:.0%})")
         elif not big:

@@ -48,6 +48,18 @@ the weighted road grid (``ticks/road_2k/<backend>/none``) and the
 churn dominates each batch, every 4th tick is weight-change-only, and
 the Dijkstra-exact answers ride the same percentile contract.
 
+PR 8 adds the replica-tier saturation trajectory (DESIGN.md §9): a real
+multi-process topology — one updater publishing versions, R mmap'd
+reader replicas behind the coalescing router of ``launch/replica.py`` —
+rammed with an open-loop client stream at a rising qps ladder until the
+p99 breaks the SLO:
+
+    serve/<dataset>/<backend>/max_qps_r1    sustained qps, 1 reader
+    serve/<dataset>/<backend>/max_qps_r2    sustained qps, 2 readers
+
+(``unit=qps;better=higher`` — compare.py gates these with the inverted
+ratio; r2/r1 is the throughput the second reader buys.)
+
 Rows follow the ``name,us_per_call,derived`` contract of benchmarks/run.py;
 ``python -m benchmarks.run --preset quick --json BENCH_pr5.json`` persists
 them in the bench-trajectory JSON format that `benchmarks/compare.py`
@@ -240,6 +252,67 @@ def _serve_loop(name: str, n: int, deg: int, backend: str, mode: str,
     return rows
 
 
+def _saturation_loop(name: str, n: int, deg: int, backend: str,
+                     readers: int, landmarks: int, block_v: int,
+                     tile_shards: int, microbatch: int,
+                     slo_ms: float = 50.0, ticks: int = 3,
+                     batch_size: int = 64,
+                     autotune: bool = False) -> list[str]:
+    """The replica-tier saturation row: ramp qps until p99 breaks the SLO.
+
+    Deploys a real 1-updater + `readers`-reader topology (separate
+    processes, the `launch/replica.py` router in front), lets the
+    updater finish its ticks so the ramp measures serving alone, then
+    drives open-loop client streams at a ×1.3 qps ladder. The row's
+    value is the last rate the topology sustained with p99 <= `slo_ms`
+    and <1% admission rejections — ``unit=qps;better=higher``, which
+    `benchmarks/compare.py` gates with the inverted ratio. The ladder's
+    coarseness is deliberate: one step of runner noise (−23%) stays
+    inside the gate's 25% budget.
+    """
+    import shutil
+    import tempfile
+
+    from repro.launch import replica
+    from repro.launch.config import (EngineSpec, GraphSpec, ServeSpec,
+                                     StreamSpec, TopologySpec)
+
+    publish_dir = tempfile.mkdtemp(prefix="repro_sat_")
+    spec = ServeSpec(
+        graph=GraphSpec(n=n, deg=deg, landmarks=landmarks),
+        engine=EngineSpec(backend=backend, block_v=block_v,
+                          tile_shards=tile_shards, autotune=autotune),
+        stream=StreamSpec(batches=ticks, batch_size=batch_size, queries=0,
+                          microbatch=microbatch, quiet=True),
+        topology=TopologySpec(readers=readers, slo_ms=slo_ms),
+    )
+    topo = replica.ReplicaTopology(spec, publish_dir)
+    max_qps, p99_at_max = 0.0, 0.0
+    try:
+        topo.start()
+        topo.updater.wait(timeout=300)  # ramp against a quiesced tier
+        qps = 200.0
+        while qps <= 8200.0:
+            total = min(int(qps * 1.2), 4000)
+            rep = replica.stream_queries(
+                spec, topo, total, qps,
+                workers=min(64, max(8, int(qps / 40))))
+            p99 = rep.latency_percentiles()["p99"]
+            if (p99 * 1e3 > slo_ms or not rep.answers
+                    or rep.rejected > 0.01 * total):
+                break
+            max_qps, p99_at_max = qps, p99
+            qps *= 1.3
+    finally:
+        topo.stop()
+        shutil.rmtree(publish_dir, ignore_errors=True)
+    row = (f"{name},{max_qps:.1f},unit=qps;better=higher;"
+           f"readers={readers};slo_ms={slo_ms:g};mb={microbatch};"
+           f"p99_at_max={p99_at_max * 1e3:.1f}ms")
+    print(row)
+    return [row]
+
+
 def run(datasets=("ba_2k",), backends=("jnp", "pallas"),
         meshes=("none", "host"), ticks: int = 6, batch_size: int = 64,
         queries: int = 128, landmarks: int = 16, block_v: int = 256,
@@ -310,6 +383,17 @@ def run(datasets=("ba_2k",), backends=("jnp", "pallas"),
                                 qps, microbatch,
                                 capacity=e0 + 7 * batch_size // 2,
                                 fused=True)
+            # PR 8: the replica-tier saturation trajectory (DESIGN.md
+            # §9) — how much client qps a real multi-process topology
+            # (1 updater + R readers behind the coalescing router)
+            # sustains inside the p99 SLO, for R=1 and R=2. The pair is
+            # the scale-out story in two numbers: r2/r1 is the
+            # throughput the second reader actually buys.
+            for r in (1, 2):
+                rows += _saturation_loop(
+                    f"serve/{ds}/{backend}/max_qps_r{r}", n, deg,
+                    backend, r, landmarks, block_v, tile_shards,
+                    microbatch, autotune=(backend == "pallas"))
     # The weighted trajectory (DESIGN.md §8): tick rows on the road grid
     # (mesh composition is covered by the ba rows above; benching it
     # again on road would double the preset) and the `traffic` serving

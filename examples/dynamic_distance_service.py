@@ -1,19 +1,30 @@
 """End-to-end driver: a BatchHL distance-query service under churn.
 
-Simulates the paper's serving scenario: a power-law network receives
-batches of edge updates while answering distance-query traffic; the
-labelling is maintained incrementally (never rebuilt), checkpointed, and
-verified against a BFS oracle each tick.
+Simulates the paper's serving scenario through the public façade
+(`repro.api.serve`): a power-law network receives batches of edge
+updates while answering distance-query traffic; the labelling is
+maintained incrementally (never rebuilt), checkpointed, and verified
+against a BFS oracle each tick.
+
+Process topology is configuration: pass ``--replicated`` to run the very
+same spec as a multi-process tier — one updater publishing versions, two
+reader replicas mmap-ing them, a coalescing router in front — instead of
+the single-process loop.
 
     PYTHONPATH=src python examples/dynamic_distance_service.py
+    PYTHONPATH=src python examples/dynamic_distance_service.py --replicated
 """
-import subprocess
 import sys
+import tempfile
+
+from repro import api
 
 if __name__ == "__main__":
-    sys.exit(subprocess.call(
-        [sys.executable, "-m", "repro.launch.serve",
-         "--n", "3000", "--batches", "4", "--batch-size", "120",
-         "--queries", "256", "--verify",
-         "--ckpt-dir", "/tmp/repro_service_ckpt"],
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"}))
+    replicated = "--replicated" in sys.argv[1:]
+    api.serve(
+        api.ServeSpec(),
+        publish_dir=(tempfile.mkdtemp(prefix="repro_service_")
+                     if replicated else None),
+        n=3000, batches=4, batch_size=120, queries=256, verify=True,
+        **({} if replicated else
+           {"ckpt_dir": "/tmp/repro_service_ckpt"}))

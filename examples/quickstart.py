@@ -1,40 +1,33 @@
 """Quickstart: build a highway-cover labelling, apply a batch update,
-answer exact distance queries — the paper's pipeline in ~30 lines.
+answer exact distance queries — the paper's pipeline through the public
+façade (`repro.api`) in ~20 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
-import jax.numpy as jnp
 
+from repro import api
 from repro.graphs import generators as gen
-from repro.graphs.coo import from_edges, make_batch
-from repro.core.construct import build_labelling, select_landmarks_by_degree
-from repro.core.batch import batchhl_update
-from repro.core.query import batched_query
 
 # 1. a small-diameter complex network (Barabási–Albert, like the paper's)
 n = 5_000
 edges = gen.barabasi_albert(n, 4, seed=0)
-g = from_edges(n, edges, capacity=edges.shape[0] + 256)
 
 # 2. offline: pick high-degree landmarks, build the minimal labelling
-landmarks = select_landmarks_by_degree(g, k=16)
-lab = build_labelling(g, landmarks)
+g, lab = api.build(n, edges, num_landmarks=16)
 print(f"labelling built: {int(lab.label_size())} entries "
       f"({int(lab.label_size()) / n:.2f} per vertex, R=16)")
 
 # 3. online: a mixed batch of edge insertions + deletions (BatchHL)
 updates = gen.random_batch_updates(edges, n, n_ins=50, n_del=50, seed=1)
-batch = make_batch(updates, pad_to=100)
-g, lab, affected = batchhl_update(g, batch, lab, improved=True)
+g, lab, affected = api.update(g, lab, updates, pad_to=100)
 print(f"batch of 100 updates applied; "
-      f"{int(jnp.sum(affected))} (landmark, vertex) pairs affected")
+      f"{int(affected.sum())} (landmark, vertex) pairs affected")
 
 # 4. answer exact distance queries on the updated graph
 rng = np.random.default_rng(0)
-s = jnp.asarray(rng.integers(0, n, 8), jnp.int32)
-t = jnp.asarray(rng.integers(0, n, 8), jnp.int32)
-dist = batched_query(g, lab, s, t)
+s, t = rng.integers(0, n, 8), rng.integers(0, n, 8)
+dist = api.query(g, lab, s, t)
 for i in range(8):
     d = int(dist[i])
     print(f"d({int(s[i])}, {int(t[i])}) = {'inf' if d > n else d}")

@@ -1,0 +1,139 @@
+"""The public face of the repro: build / update / query / serve.
+
+Four verbs cover the paper's whole lifecycle (BatchHL, arXiv 2204.11012):
+
+    >>> from repro import api
+    >>> g, lab = api.build(n, edges, num_landmarks=16)
+    >>> g, lab, affected = api.update(g, lab, updates)
+    >>> dist = api.query(g, lab, sources, targets)
+
+and for the online story, a serve entry point whose *process topology is
+configuration*: the same `ServeSpec` drives a single in-process loop or
+a 1-updater + N-reader replica tier (`api.serve`).
+
+Everything here is a thin, stable wrapper over the library modules —
+`repro.graphs.coo`, `repro.core.{construct,batch,query}`, and
+`repro.launch.{config,serve,replica}` own the machinery. Scripts that
+need knobs beyond these signatures (custom relax plans, sharding,
+kernels) should import those modules directly; this façade trades
+surface for stability.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.batch import batchhl_update
+from repro.core.construct import build_labelling, select_landmarks_by_degree
+from repro.core.labelling import HighwayLabelling
+from repro.core.query import batched_query
+from repro.graphs.coo import BatchUpdate, Graph, from_edges, make_batch
+from repro.launch.config import (CheckpointSpec, EngineSpec, GraphSpec,
+                                 ServeSpec, StreamSpec, TopologySpec)
+
+__all__ = [
+    "build", "update", "query", "serve",
+    "Graph", "BatchUpdate", "HighwayLabelling",
+    "ServeSpec", "GraphSpec", "EngineSpec", "StreamSpec",
+    "CheckpointSpec", "TopologySpec",
+]
+
+
+def build(n: int, edges: np.ndarray, *, num_landmarks: int = 16,
+          landmarks=None, capacity: int | None = None,
+          slack: int = 256) -> tuple[Graph, HighwayLabelling]:
+    """Construct a dynamic graph and its highway-cover labelling.
+
+    `edges` is an (E, 2) or (E, 3) int array of undirected edges
+    (optional third column: positive integer weights). `capacity`
+    reserves COO slots for future insertions (default: E + `slack`).
+    Landmarks default to the paper's policy — the `num_landmarks`
+    highest-degree vertices — or pass an explicit int array.
+
+    Returns `(graph, labelling)`, the pair every other verb consumes.
+    """
+    edges = np.asarray(edges)
+    g = from_edges(n, edges,
+                   capacity=capacity or edges.shape[0] + slack)
+    if landmarks is None:
+        landmarks = select_landmarks_by_degree(g, k=num_landmarks)
+    else:
+        import jax.numpy as jnp
+        landmarks = jnp.asarray(landmarks, jnp.int32)
+    return g, build_labelling(g, landmarks)
+
+
+def update(g: Graph, lab: HighwayLabelling, updates, *,
+           improved: bool = True, pad_to: int | None = None
+           ) -> tuple[Graph, HighwayLabelling, np.ndarray]:
+    """Apply one batch of edge updates and repair the labelling (BatchHL).
+
+    `updates` is a sequence of `(op, u, v)` or `(op, u, v, w)` rows
+    (op: +1 insert, -1 delete, 0 re-weight) or an already-padded
+    `BatchUpdate`. `pad_to` fixes the batch width so repeated calls with
+    the same width reuse one compiled update (the serving pattern).
+    `improved=True` selects the BHL⁺ search with landmark-distance
+    pruning; `False` the basic variant.
+
+    Returns `(graph', labelling', affected)` — `affected` is the boolean
+    (R, n) plane of (landmark, vertex) pairs the repair recomputed.
+    """
+    batch = updates if isinstance(updates, BatchUpdate) \
+        else make_batch(updates, pad_to=pad_to)
+    g, lab, aff = batchhl_update(g, batch, lab, improved=improved)
+    return g, lab, np.asarray(aff)
+
+
+def query(g: Graph, lab: HighwayLabelling, s, t, *,
+          max_steps: int = 64) -> np.ndarray:
+    """Exact batched distances d_G(s, t) (paper §4: sparse BiBFS under a
+    landmark upper bound). `s`/`t` are equal-length int vertex arrays;
+    unreachable pairs come back as a value > any finite distance
+    (compare with `np.inf` semantics via `d >= 10**9`)."""
+    import jax.numpy as jnp
+    s = jnp.asarray(np.asarray(s, np.int32))
+    t = jnp.asarray(np.asarray(t, np.int32))
+    return np.asarray(batched_query(g, lab, s, t, max_steps=max_steps))
+
+
+def serve(spec: ServeSpec | None = None, *, publish_dir: str | None = None,
+          **overrides) -> None:
+    """Run the online serving story for a `ServeSpec`.
+
+    Process topology is configuration: with `publish_dir=None` (default)
+    this runs the single-process `ServeLoop` — updates and queries
+    interleaved in one process. With a `publish_dir`, it deploys the
+    replica tier (`repro.launch.replica`): one updater process
+    publishing versions into `publish_dir`, `spec.topology.readers`
+    reader processes mapping them, a coalescing router in front, and an
+    open-loop client stream driven through it.
+
+    `overrides` are `ServeSpec` group fields by name (`n=5000`,
+    `readers=4`, `verify=True`, ...) applied over `spec` (or over the
+    defaults when `spec is None`).
+    """
+    import dataclasses
+
+    from repro.launch import replica
+    from repro.launch.serve import ServeLoop
+
+    spec = spec or ServeSpec()
+    if overrides:
+        groups = {}
+        for gname, cls in (("graph", GraphSpec), ("engine", EngineSpec),
+                           ("stream", StreamSpec),
+                           ("checkpoint", CheckpointSpec),
+                           ("topology", TopologySpec)):
+            fields = {f.name for f in dataclasses.fields(cls)}
+            got = {k: overrides.pop(k) for k in list(overrides)
+                   if k in fields}
+            if got:
+                groups[gname] = dataclasses.replace(
+                    getattr(spec, gname), **got)
+        if overrides:
+            raise TypeError(f"unknown serve() overrides: "
+                            f"{sorted(overrides)}")
+        spec = dataclasses.replace(spec, **groups)
+    if publish_dir is None:
+        ServeLoop(spec.to_serve_config()).run()
+    else:
+        replica.serve_main(spec, publish_dir, verify_limit=None)

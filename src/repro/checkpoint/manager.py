@@ -1,14 +1,30 @@
-"""Checkpointing with atomic rename + elastic re-shard on restore.
+"""The one checkpoint stack: atomic fsync'd step trees + the publish
+protocol readers subscribe to.
 
-Fault-tolerance contract (DESIGN.md §4):
-  * save(step) writes every leaf as .npy under a temp dir, then atomically
-    renames to step_<n> — a preempted writer never corrupts the latest
-    checkpoint;
-  * restore() finds the newest complete checkpoint and places each leaf
-    with the *current* mesh/sharding — restoring a 512-chip checkpoint onto
-    256 chips (or CPU) re-shards transparently (elastic scaling);
-  * the data pipeline is stateless-seeded, so (params, opt, step) is the
-    entire job state and restart is exact.
+Every durable artifact in the repo goes through this module — the train
+driver's (params, opt, step) trees, the serve loop's full snapshot state
+(`core/snapshot.save_snapshot` routes here), and the replica tier's
+publish/subscribe protocol (`launch/replica.py`). One on-disk format,
+one step-discovery rule, one prune policy.
+
+Fault-tolerance contract (DESIGN.md §4, §9):
+
+  * `save(step)` writes every leaf as .npy under a temp dir, fsyncs each
+    leaf and the directory, then atomically renames to ``step_<n>`` — a
+    preempted writer never corrupts the newest checkpoint, and a rename
+    that survives a crash implies the leaves under it are durable;
+  * `restore()` finds the newest complete checkpoint and places each
+    leaf with the *current* mesh/sharding — restoring a 512-chip
+    checkpoint onto 256 chips (or CPU) re-shards transparently;
+  * `publish(step)` flips the ``CURRENT`` pointer file to a saved step
+    via the same write-fsync-rename dance. ``CURRENT`` is the
+    single-writer/many-reader seam of the replica tier: readers map
+    whatever step it names (`load_leaves(mmap=True)` — the labelling
+    planes are never copied on the host) and only ever observe fully
+    durable steps, because the pointer is flipped *after* the step's
+    own fsync'd rename;
+  * `prune(keep=)` never removes the published step, so a reader that
+    restarts mid-prune always finds the snapshot ``CURRENT`` names.
 """
 from __future__ import annotations
 
@@ -19,6 +35,8 @@ import shutil
 import jax
 import numpy as np
 
+CURRENT = "CURRENT"
+
 
 def _flatten(tree):
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
@@ -28,6 +46,41 @@ def _flatten(tree):
 def _key_str(path) -> str:
     return "__".join(str(getattr(p, "key", getattr(p, "idx", p)))
                      for p in path)
+
+
+def _fsync_path(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def write_json_atomic(path: str, payload: dict) -> None:
+    """Write-fsync-rename a small JSON record (pointer files, acks).
+
+    A reader polling `path` sees either the old complete record or the
+    new complete record, never a torn write; after the rename returns,
+    the record survives a crash (file fsync'd before, directory after).
+    """
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    _fsync_path(os.path.dirname(path) or ".")
+
+
+def read_json(path: str) -> dict | None:
+    """Best-effort read of an atomic JSON record (None if absent)."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        # A JSONDecodeError can only be a partially-visible non-atomic
+        # write (e.g. NFS); the poller retries on its next turn.
+        return None
 
 
 def save(ckpt_dir: str, step: int, tree) -> str:
@@ -42,17 +95,32 @@ def save(ckpt_dir: str, step: int, tree) -> str:
     for path, leaf in leaves:
         name = _key_str(path)
         arr = np.asarray(jax.device_get(leaf))
-        np.save(os.path.join(tmp, name + ".npy"), arr)
+        leaf_path = os.path.join(tmp, name + ".npy")
+        np.save(leaf_path, arr)
+        _fsync_path(leaf_path)
         manifest.append(name)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump({"step": step, "leaves": manifest}, f)
+        f.flush()
+        os.fsync(f.fileno())
     if os.path.exists(final):
         shutil.rmtree(final)
+    _fsync_path(tmp)
     os.rename(tmp, final)  # atomic commit
+    _fsync_path(ckpt_dir)
     return final
 
 
+def step_dir(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step}")
+
+
+def step_manifest(ckpt_dir: str, step: int) -> dict | None:
+    return read_json(os.path.join(step_dir(ckpt_dir, step), "manifest.json"))
+
+
 def latest_step(ckpt_dir: str) -> int | None:
+    """Newest complete step on disk (scan; `current_step` for published)."""
     if not os.path.isdir(ckpt_dir):
         return None
     steps = []
@@ -63,13 +131,36 @@ def latest_step(ckpt_dir: str) -> int | None:
     return max(steps) if steps else None
 
 
+def load_leaves(ckpt_dir: str, step: int, names: tuple[str, ...] | None = None,
+                mmap: bool = False) -> dict[str, np.ndarray]:
+    """Load (a subset of) a step's leaves by name.
+
+    `mmap=True` maps each array copy-free (`np.load(mmap_mode="r")`) —
+    the replica readers' path: N readers of one published labelling
+    share one page-cache copy of the planes instead of N host copies.
+    """
+    d = step_dir(ckpt_dir, step)
+    man = step_manifest(ckpt_dir, step)
+    if man is None:
+        raise FileNotFoundError(f"no complete checkpoint at {d}")
+    want = man["leaves"] if names is None else list(names)
+    mode = "r" if mmap else None
+    out = {}
+    for name in want:
+        p = os.path.join(d, name + ".npy")
+        if not os.path.exists(p):
+            raise FileNotFoundError(f"checkpoint {d} lacks leaf {name!r}")
+        out[name] = np.load(p, mmap_mode=mode)
+    return out
+
+
 def restore(ckpt_dir: str, tree_like, shardings=None, step: int | None = None):
     """Restore into the structure of `tree_like`; optionally place each
     leaf with `shardings` (same pytree structure) — elastic re-shard."""
     step = step if step is not None else latest_step(ckpt_dir)
     if step is None:
         raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
-    d = os.path.join(ckpt_dir, f"step_{step}")
+    d = step_dir(ckpt_dir, step)
     leaves, treedef = _flatten(tree_like)
     sh_leaves = None
     if shardings is not None:
@@ -86,11 +177,52 @@ def restore(ckpt_dir: str, tree_like, shardings=None, step: int | None = None):
         jax.tree_util.tree_structure(tree_like), out), step
 
 
+# ---------------------------------------------------------------------------
+# Publish protocol (the replica tier's single-writer/many-reader seam)
+# ---------------------------------------------------------------------------
+
+def publish(ckpt_dir: str, step: int, extra: dict | None = None) -> dict:
+    """Flip the CURRENT pointer to a saved step, durably.
+
+    The step must already be committed by `save` (its rename + fsync
+    happened-before this call), so a reader that observes the new
+    pointer can always map the step it names — the crash-safety half of
+    the staleness ≤ 1 contract (DESIGN.md §9). `extra` rides along in
+    the pointer record (the updater stores the run's base config hash).
+    """
+    if step_manifest(ckpt_dir, step) is None:
+        raise FileNotFoundError(
+            f"cannot publish step {step}: no complete checkpoint under "
+            f"{step_dir(ckpt_dir, step)}")
+    record = {"version": int(step), "path": f"step_{step}"}
+    record.update(extra or {})
+    write_json_atomic(os.path.join(ckpt_dir, CURRENT), record)
+    return record
+
+
+def read_current(ckpt_dir: str) -> dict | None:
+    """The published pointer record, or None before the first publish."""
+    return read_json(os.path.join(ckpt_dir, CURRENT))
+
+
+def current_step(ckpt_dir: str) -> int | None:
+    rec = read_current(ckpt_dir)
+    return int(rec["version"]) if rec is not None else None
+
+
 def prune(ckpt_dir: str, keep: int = 3) -> None:
+    """Remove all but the newest `keep` steps — except the published one.
+
+    A reader (re)starting from CURRENT must always find the step the
+    pointer names, however old the pointer is relative to the writer.
+    """
     if not os.path.isdir(ckpt_dir):
         return
+    protected = current_step(ckpt_dir)
     steps = sorted(
         int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
         if d.startswith("step_"))
-    for s in steps[:-keep]:
-        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+    for s in steps[:-keep] if keep > 0 else steps:
+        if s == protected:
+            continue
+        shutil.rmtree(step_dir(ckpt_dir, s), ignore_errors=True)

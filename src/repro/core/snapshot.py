@@ -458,47 +458,69 @@ def restore_extra(ckpt_dir: str, names: tuple[str, ...],
     step = step if step is not None else ckpt.latest_step(ckpt_dir)
     if step is None:
         raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
-    d = os.path.join(ckpt_dir, f"step_{step}")
-    return {name: np.load(os.path.join(d, name + ".npy")) for name in names}
+    return ckpt.load_leaves(ckpt_dir, step, names)
 
 
+def publish_snapshot(ckpt_dir: str, snap: Snapshot,
+                     extra: dict | None = None) -> str:
+    """`save_snapshot` + flip the CURRENT pointer to it, durably.
+
+    The replica updater's commit path (DESIGN.md §9): the step's leaves
+    are fsync'd and renamed *before* the pointer flip, so a reader that
+    observes the new CURRENT can always map the snapshot it names.
+    """
+    path = save_snapshot(ckpt_dir, snap, extra=extra)
+    ckpt.publish(ckpt_dir, snap.version)
+    return path
 
 
-def restore_snapshot(ckpt_dir: str, step: int | None = None) -> Snapshot:
+def restore_snapshot(ckpt_dir: str, step: int | None = None,
+                     mmap: bool = False) -> Snapshot:
     """Rebuild a `Snapshot` from the newest (or given) checkpoint.
 
     Self-describing: shapes and the static vertex count come from the
     checkpoint itself, so no template tree is needed. The returned
     snapshot has `plan=None` — prepare one with the serving engine.
+
+    `mmap=True` maps the arrays copy-free on the host (the replica
+    readers' path — N readers of one published labelling share one
+    page-cache copy); the device transfer, if any, is the backend's.
     """
     step = step if step is not None else ckpt.latest_step(ckpt_dir)
     if step is None:
         raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
-    d = os.path.join(ckpt_dir, f"step_{step}")
+    d = ckpt.step_dir(ckpt_dir, step)
 
-    def load(name: str) -> np.ndarray:
-        return np.load(os.path.join(d, name + ".npy"))
+    core = ("graph_src", "graph_dst", "graph_valid", "graph_w", "n",
+            "landmarks", "dist", "hub", "highway", "version")
+    try:
+        leaves = ckpt.load_leaves(ckpt_dir, step, core, mmap=mmap)
+    except FileNotFoundError as e:
+        missing = [k for k in ("graph_src", "graph_dst", "graph_valid")
+                   if not os.path.exists(os.path.join(d, k + ".npy"))]
+        if missing:
+            raise FileNotFoundError(
+                f"checkpoint {d} lacks graph state {missing}: it predates "
+                "the full-state format and cannot resume a serve loop") \
+                from e
+        if not os.path.exists(os.path.join(d, "graph_w.npy")):
+            raise UnweightedCheckpointError(
+                f"checkpoint {d} lacks the edge-weight column graph_w: it "
+                "predates the weighted-metric format. Re-serve from the "
+                "original stream (or re-save the snapshot) to migrate; the "
+                "weight column cannot be reconstructed from topology "
+                "alone.") from e
+        raise
 
-    missing = [k for k in ("graph_src", "graph_dst", "graph_valid")
-               if not os.path.exists(os.path.join(d, k + ".npy"))]
-    if missing:
-        raise FileNotFoundError(
-            f"checkpoint {d} lacks graph state {missing}: it predates the "
-            "full-state format and cannot resume a serve loop")
-    if not os.path.exists(os.path.join(d, "graph_w.npy")):
-        raise UnweightedCheckpointError(
-            f"checkpoint {d} lacks the edge-weight column graph_w: it "
-            "predates the weighted-metric format. Re-serve from the "
-            "original stream (or re-save the snapshot) to migrate; the "
-            "weight column cannot be reconstructed from topology alone.")
-    g = Graph(jnp.asarray(load("graph_src")), jnp.asarray(load("graph_dst")),
-              jnp.asarray(load("graph_valid")), jnp.asarray(load("graph_w")),
-              int(load("n")))
-    lab = HighwayLabelling(jnp.asarray(load("landmarks")),
-                           jnp.asarray(load("dist")),
-                           jnp.asarray(load("hub")),
-                           jnp.asarray(load("highway")))
-    return Snapshot(int(load("version")), g, lab, None)
+    g = Graph(jnp.asarray(leaves["graph_src"]),
+              jnp.asarray(leaves["graph_dst"]),
+              jnp.asarray(leaves["graph_valid"]),
+              jnp.asarray(leaves["graph_w"]), int(leaves["n"]))
+    lab = HighwayLabelling(jnp.asarray(leaves["landmarks"]),
+                           jnp.asarray(leaves["dist"]),
+                           jnp.asarray(leaves["hub"]),
+                           jnp.asarray(leaves["highway"]))
+    return Snapshot(int(leaves["version"]), g, lab, None)
 
 
 # ---------------------------------------------------------------------------

@@ -57,7 +57,6 @@ required sizes before anything is dispatched.
 """
 from __future__ import annotations
 
-import argparse
 import dataclasses
 import math
 import time
@@ -82,7 +81,7 @@ from repro.core.snapshot import (Snapshot, SnapshotStore, pipelined_update,
                                  save_snapshot)
 from repro.core import ref
 from repro.checkpoint import manager as ckpt
-from repro.data.scenarios import SCENARIOS, get_scenario
+from repro.data.scenarios import get_scenario
 from repro.launch.mesh import make_host_mesh
 
 
@@ -206,6 +205,13 @@ class ServeLoop:
 
     def __init__(self, cfg: ServeConfig):
         self.cfg = cfg
+        #: optional process hooks (launch/replica.py): `on_start(snap0)`
+        #: fires once the initial snapshot is in the store, before any
+        #: tick; `on_commit(tick, snap)` fires after each tick's commit
+        #: and checkpoint — the replica updater publishes + runs the
+        #: reader ack barrier there (DESIGN.md §9).
+        self.on_start = None
+        self.on_commit = None
         self.scenario = get_scenario(cfg.scenario)
         if cfg.graph not in ("ba", "road"):
             raise ValueError(f"unknown graph family {cfg.graph!r}; "
@@ -494,6 +500,8 @@ class ServeLoop:
         snap0 = self._resumed_snapshot() if resumable \
             else self._fresh_snapshot()
         self.store = SnapshotStore(snap0)
+        if self.on_start is not None:
+            self.on_start(snap0)
         ticks: list[TickStats] = []
         out: list[MicrobatchRecord] = []
         growth: list[GrowthEvent] = []
@@ -614,6 +622,8 @@ class ServeLoop:
                     cfg.ckpt_dir, nxt,
                     extra={"edge_list": edge_rows,
                            "base_n": np.int64(cfg.n)})
+            if self.on_commit is not None:
+                self.on_commit(tick, nxt)
 
         self.report = ServeReport(config=cfg, ticks=ticks, microbatches=out,
                                   final=self.store.committed,
@@ -647,108 +657,17 @@ class ServeLoop:
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--n", type=int, default=2000)
-    ap.add_argument("--deg", type=int, default=4)
-    ap.add_argument("--graph", default="ba", choices=("ba", "road"),
-                    help="initial graph family: ba = power-law unit "
-                         "weights, road = weighted planar grid (rounds n "
-                         "up to rows*cols; pair with --scenario traffic)")
-    ap.add_argument("--landmarks", type=int, default=16)
-    ap.add_argument("--batches", type=int, default=5)
-    ap.add_argument("--batch-size", type=int, default=100)
-    ap.add_argument("--scenario", default="mixed",
-                    choices=tuple(sorted(SCENARIOS)),
-                    help="workload shape: update mix + query-source law "
-                         "(data/scenarios.py)")
-    ap.add_argument("--queries", type=int, default=256,
-                    help="open-loop query arrivals per tick")
-    ap.add_argument("--qps", type=float, default=2000.0,
-                    help="Poisson arrival rate of the query stream")
-    ap.add_argument("--microbatch", type=int, default=32,
-                    help="max queries per dispatched microbatch")
-    ap.add_argument("--pipeline", action="store_true",
-                    help="serve queries against the committed snapshot "
-                         "while the update runs as bounded chunks "
-                         "(DESIGN.md §5); default is the synchronous loop")
-    ap.add_argument("--chunk-sweeps", type=int, default=1,
-                    help="relaxation waves per pipelined update dispatch "
-                         "(the head-of-line blocking bound)")
-    ap.add_argument("--backend", default="auto",
-                    choices=("auto", "jnp", "pallas"),
-                    help="relaxation-engine backend for every sweep "
-                         "(auto = pallas on TPU, jnp elsewhere)")
-    ap.add_argument("--block-v", type=int, default=512,
-                    help="destination-block size for the pallas tiling")
-    ap.add_argument("--tile-shards", type=int, default=1,
-                    help="vertex-shard count of the pallas tiling (the "
-                         "kernel grid's leading axis; bit-identical for "
-                         "every value)")
-    ap.add_argument("--block-e", type=int, default=None,
-                    help="tile-row width cap of the pallas tiling; chunks "
-                         "power-law hub blocks into bounded rows (default: "
-                         "widest block)")
-    ap.add_argument("--autotune", action="store_true",
-                    help="measure sweep-impl candidates per snapshot shape "
-                         "and adopt the fastest (core/autotune.py); winners "
-                         "are cached per (n, capacity, shards)")
-    ap.add_argument("--tune-table", default=None,
-                    help="path of the on-disk tuning table; a restart with "
-                         "the same table re-tunes nothing (implies "
-                         "--autotune)")
-    ap.add_argument("--fused", action="store_true",
-                    help="run pipelined update chunks as fused megakernel "
-                         "dispatches (seed + K sweeps in one launch, "
-                         "labelling planes donated; DESIGN.md §7)")
-    ap.add_argument("--use-minplus-kernel", action="store_true",
-                    help="route the Eq.-3 upper bound through the Pallas "
-                         "minplus kernel")
-    ap.add_argument("--mesh", default="none", choices=("none", "host"),
-                    help="run the BatchHL stack sharded over a device mesh "
-                         "(host = make_host_mesh over the local devices)")
-    ap.add_argument("--shards", type=int, default=1,
-                    help="model-axis size of the host mesh: landmark planes "
-                         "shard over it, the other devices form the data "
-                         "(query) axis; must divide the device count")
-    ap.add_argument("--capacity", type=int, default=None,
-                    help="initial edge capacity (slot pairs); default "
-                         "provisions the scenario's worst-case inserts up "
-                         "front. Pair with --grow to start small and grow "
-                         "in place (DESIGN.md §6)")
-    ap.add_argument("--grow", action="store_true",
-                    help="grow edge slots and labelling planes "
-                         "geometrically when a batch would overflow, "
-                         "committing the grown arrays as the next version; "
-                         "without it an overflow raises CapacityError "
-                         "naming the tick and required sizes")
-    ap.add_argument("--growth-factor", type=float, default=2.0,
-                    help="geometric growth step (> 1); each growth at "
-                         "least multiplies the overflowing dimension by "
-                         "this")
-    ap.add_argument("--verify", action="store_true",
-                    help="check sampled answers against a BFS oracle at "
-                         "the version each was answered")
-    ap.add_argument("--ckpt-dir", default=None,
-                    help="checkpoint the full serve state each tick")
-    ap.add_argument("--resume", action="store_true",
-                    help="restart from the newest checkpoint in --ckpt-dir")
-    ap.add_argument("--seed", type=int, default=7)
-    args = ap.parse_args()
+    # The parser is generated from the composable spec dataclasses
+    # (launch/config.py) — one source of truth shared with the replica
+    # roles; `--config <spec.json>` launches from a serialized ServeSpec
+    # and flat flags remain as the (warned) legacy override surface.
+    from repro.launch import config as cfgmod
 
-    cfg = ServeConfig(
-        n=args.n, deg=args.deg, graph=args.graph, landmarks=args.landmarks,
-        batches=args.batches, batch_size=args.batch_size,
-        scenario=args.scenario, queries=args.queries, qps=args.qps,
-        microbatch=args.microbatch, pipeline=args.pipeline,
-        chunk_sweeps=args.chunk_sweeps, backend=args.backend,
-        block_v=args.block_v, tile_shards=args.tile_shards,
-        block_e=args.block_e,
-        autotune=args.autotune or args.tune_table is not None,
-        tune_table=args.tune_table, fused=args.fused,
-        use_minplus_kernel=args.use_minplus_kernel, mesh=args.mesh,
-        shards=args.shards, capacity=args.capacity, grow=args.grow,
-        growth_factor=args.growth_factor, verify=args.verify,
-        ckpt_dir=args.ckpt_dir, resume=args.resume, seed=args.seed)
+    ap = cfgmod.build_parser(__doc__.splitlines()[0])
+    args = ap.parse_args()
+    spec = cfgmod.spec_from_cli(args, ap)
+    autotune = spec.engine.autotune or spec.engine.tune_table is not None
+    cfg = spec.to_serve_config(autotune=autotune)
     try:
         # Config validation (mesh shape, landmark groupings, scenario,
         # backend) happens at construction; runtime errors inside run()

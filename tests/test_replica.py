@@ -1,0 +1,284 @@
+"""The replica serve tier, bottom-up: the router's QueryQueue policies
+(admission control + microbatch coalescing) in isolation, the wire
+protocol, the publish/ack barrier records, the ServeSpec config re-cut's
+lossless round-trips — and the crash-recovery integration test: a reader
+killed mid-stream, restarted from ``CURRENT``, with every answer checked
+against the Dijkstra oracle *at the version it was served* and the
+staleness ≤ 1 contract held across the process boundary (DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import threading
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager as ckpt
+from repro.launch import replica
+from repro.launch.config import (EngineSpec, GraphSpec, ServeSpec,
+                                 StreamSpec, TopologySpec, build_parser,
+                                 spec_from_cli)
+from repro.launch.replica import QueryQueue
+
+
+# ---------------------------------------------------------------------------
+# QueryQueue: admission control
+# ---------------------------------------------------------------------------
+
+def test_admission_counts_queries_not_requests():
+    q = QueryQueue(max_pending=10, microbatch=32, coalesce_s=0.0)
+    assert q.offer("a", 6)
+    assert q.offer("b", 4)          # exactly at the cap
+    assert q.pending == 10
+    assert not q.offer("c", 1)      # one over: refused
+    assert q.rejected == 1
+    assert q.pending == 10          # refusal left the queue untouched
+
+
+def test_admission_exempts_front_requeue():
+    """A batch reclaimed from a dead reader re-enters at the head even
+    when the queue is full — a reader crash must not surface as client
+    rejections."""
+    q = QueryQueue(max_pending=4, microbatch=32, coalesce_s=0.0)
+    assert q.offer("a", 4)
+    assert not q.offer("b", 1)
+    assert q.offer("requeued", 3, front=True)
+    assert q.pending == 7
+    assert q.take() == ["requeued", "a"]  # head position preserved
+
+
+# ---------------------------------------------------------------------------
+# QueryQueue: coalescing
+# ---------------------------------------------------------------------------
+
+def test_coalesce_merges_up_to_microbatch():
+    q = QueryQueue(max_pending=100, microbatch=8, coalesce_s=10.0)
+    for name, m in (("a", 3), ("b", 3), ("c", 2), ("d", 1)):
+        q.offer(name, m)
+    # 3+3+2 fills the microbatch exactly; "d" stays for the next take —
+    # and a full batch returns without waiting out the 10s window.
+    t0 = time.monotonic()
+    assert q.take() == ["a", "b", "c"]
+    assert time.monotonic() - t0 < 5.0
+    assert q.pending == 1
+
+
+def test_coalesce_never_splits_entries():
+    """Entries are whole client requests — each must be answered at one
+    version, so the coalescer takes them entirely or not at all."""
+    q = QueryQueue(max_pending=100, microbatch=8, coalesce_s=0.01)
+    q.offer("a", 5)
+    q.offer("b", 5)                  # 5+5 > 8: must not be split
+    assert q.take() == ["a"]
+    assert q.take() == ["b"]
+
+
+def test_coalesce_dispatches_oversized_alone():
+    q = QueryQueue(max_pending=100, microbatch=8, coalesce_s=0.01)
+    q.offer("big", 20)               # admitted (<=max_pending), > microbatch
+    q.offer("small", 1)
+    assert q.take() == ["big"]       # oversized runs alone
+    assert q.take() == ["small"]
+
+
+def test_coalesce_window_closes_on_partial_batch():
+    q = QueryQueue(max_pending=100, microbatch=32, coalesce_s=0.05)
+    q.offer("a", 2)
+    t0 = time.monotonic()
+    assert q.take(timeout=5.0) == ["a"]
+    assert time.monotonic() - t0 < 2.0   # window (50ms), not timeout (5s)
+
+
+def test_take_empty_after_timeout():
+    q = QueryQueue(max_pending=10, microbatch=8, coalesce_s=0.01)
+    assert q.take(timeout=0.01) == []
+
+
+def test_take_picks_up_late_arrivals_inside_window():
+    q = QueryQueue(max_pending=100, microbatch=8, coalesce_s=0.5)
+    got = []
+    t = threading.Thread(target=lambda: got.extend(q.take(timeout=2.0)))
+    q.offer("a", 2)
+    t.start()
+    time.sleep(0.05)
+    q.offer("b", 2)                  # lands inside the open window
+    t.join()
+    assert got == ["a", "b"]
+
+
+# ---------------------------------------------------------------------------
+# Wire protocol
+# ---------------------------------------------------------------------------
+
+def test_query_answer_pack_roundtrip():
+    qs = np.arange(5, dtype=np.int32)
+    qt = np.arange(5, 10, dtype=np.int32)
+    qs2, qt2 = replica.unpack_query(replica.pack_query(qs, qt))
+    np.testing.assert_array_equal(qs, qs2)
+    np.testing.assert_array_equal(qt, qt2)
+    v, h, d = replica.unpack_answer(
+        replica.pack_answer(7, 8, np.asarray([1, 2, 3], np.int32)))
+    assert (v, h) == (7, 8)
+    np.testing.assert_array_equal(d, [1, 2, 3])
+
+
+# ---------------------------------------------------------------------------
+# Publish/ack records (the barrier's inputs)
+# ---------------------------------------------------------------------------
+
+def test_publish_requires_saved_step(tmp_path):
+    d = str(tmp_path)
+    with pytest.raises(FileNotFoundError):
+        ckpt.publish(d, 3)
+    ckpt.save(d, 3, {"x": np.arange(4)})
+    rec = ckpt.publish(d, 3)
+    assert rec["version"] == 3
+    assert ckpt.current_step(d) == 3
+
+
+def test_prune_never_removes_published_step(tmp_path):
+    d = str(tmp_path)
+    for s in range(5):
+        ckpt.save(d, s, {"x": np.arange(4) + s})
+    ckpt.publish(d, 1)
+    ckpt.prune(d, keep=2)
+    assert ckpt.current_step(d) == 1
+    assert ckpt.step_manifest(d, 1) is not None      # published: protected
+    assert ckpt.step_manifest(d, 4) is not None      # newest: kept
+    assert ckpt.step_manifest(d, 0) is None          # pruned
+
+
+def test_ack_barrier_ignores_dead_readers(tmp_path):
+    d = str(tmp_path)
+    replica.write_ack(d, 0, version=5)               # live: this process
+    # A pid that has definitely exited: a finished child.
+    p = subprocess.Popen(["true"])
+    p.wait()
+    replica.write_ack(d, 1, version=0)
+    acks = replica.read_acks(d)
+    rec = dict(acks[1])
+    rec["pid"] = p.pid
+    ckpt.write_json_atomic(
+        os.path.join(d, "acks", "reader_1.json"), rec)
+    # Reader 1 is behind but dead — the barrier must not wait for it.
+    assert replica.wait_for_acks(d, version=5, timeout_s=5.0)
+
+
+def test_ack_barrier_times_out_on_live_laggard(tmp_path):
+    d = str(tmp_path)
+    replica.write_ack(d, 0, version=1)               # live (us), behind
+    t0 = time.monotonic()
+    assert not replica.wait_for_acks(d, version=2, timeout_s=0.1,
+                                     log=lambda *a: None)
+    assert time.monotonic() - t0 < 2.0
+
+
+# ---------------------------------------------------------------------------
+# ServeSpec round-trips (the config re-cut's losslessness contract)
+# ---------------------------------------------------------------------------
+
+def _nondefault_spec() -> ServeSpec:
+    return ServeSpec(
+        graph=GraphSpec(n=500, deg=3, landmarks=8, capacity=640, grow=True),
+        engine=EngineSpec(backend="pallas", block_v=128, fused=True),
+        stream=StreamSpec(batches=3, qps=123.5, pipeline=True, verify=True),
+        topology=TopologySpec(readers=3, coalesce_ms=5.0, restart=True))
+
+
+def test_spec_cli_roundtrip():
+    spec = _nondefault_spec()
+    ap = build_parser("t")
+    ns = ap.parse_args(spec.to_args())
+    assert ServeSpec.from_parsed_args(ns) == spec
+
+
+def test_spec_json_roundtrip(tmp_path):
+    spec = _nondefault_spec()
+    path = str(tmp_path / "spec.json")
+    spec.save_json(path)
+    assert ServeSpec.load_json(path) == spec
+
+
+def test_spec_serve_config_roundtrip():
+    spec = _nondefault_spec()
+    cfg = spec.to_serve_config()
+    assert cfg.n == 500 and cfg.backend == "pallas" and cfg.qps == 123.5
+    back = ServeSpec.from_serve_config(cfg, topology=spec.topology)
+    assert back == spec
+
+
+def test_flat_flags_alone_are_the_spec():
+    ap = build_parser("t")
+    ns = ap.parse_args(["--n", "700"])
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        spec = spec_from_cli(ns, ap)
+    assert spec.graph.n == 700
+    assert not w                     # flat-only: supported, no warning
+
+
+def test_flat_overrides_alongside_config_warn_deprecated(tmp_path):
+    path = str(tmp_path / "spec.json")
+    _nondefault_spec().save_json(path)
+    ap = build_parser("t")
+    ns = ap.parse_args(["--config", path, "--n", "700"])
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        spec = spec_from_cli(ns, ap)
+    assert spec.graph.n == 700               # flat flag overrode the JSON
+    assert spec.engine.backend == "pallas"   # the rest came from the JSON
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+
+
+def test_realized_n_road_rounds_to_grid():
+    import math
+    gs = GraphSpec(n=2025, graph="road")
+    rows = max(2, math.isqrt(2025))
+    assert gs.realized_n() == rows * max(2, (2025 + rows - 1) // rows)
+    assert GraphSpec(n=2025).realized_n() == 2025
+
+
+# ---------------------------------------------------------------------------
+# Crash recovery: kill a reader mid-stream, restart from CURRENT,
+# zero wrong answers at each answer's served version, staleness <= 1.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_reader_crash_recovery(tmp_path):
+    spec = ServeSpec(
+        graph=GraphSpec(n=300, deg=3, landmarks=8),
+        stream=StreamSpec(batches=3, batch_size=30, queries=0,
+                          microbatch=16, seed=3, quiet=True),
+        topology=TopologySpec(readers=2, restart=True))
+    topo = replica.ReplicaTopology(spec, str(tmp_path))
+    killed = [False]
+
+    def kill_once():
+        # Mid-stream, not at the edges: the victim is likely holding an
+        # in-flight batch, which must be requeued and answered elsewhere.
+        if not killed[0] and time.monotonic() > t_kill[0]:
+            killed[0] = True
+            topo.kill_reader(0)
+
+    try:
+        topo.start()
+        t_kill = [time.monotonic() + 1.0]
+        report = replica.stream_queries(spec, topo, total=240, qps=120.0,
+                                        on_tick=kill_once)
+        assert killed[0]
+        assert topo.updater_ok()
+        assert topo.reader_restarts >= 1
+        # No client-visible loss: every query either answered or (at
+        # most transiently, while one reader was down) rejected.
+        assert len(report.answers) + report.rejected == 240
+        assert len(report.answers) >= 200
+        assert report.max_staleness() <= 1
+        # The heart of the contract: zero wrong answers, each checked
+        # against Dijkstra on the graph at the version that served it.
+        assert replica.verify_answers(str(tmp_path), report.answers) == 0
+    finally:
+        topo.stop()
