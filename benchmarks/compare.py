@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import sys
 
 
@@ -96,8 +97,15 @@ def main() -> None:
         if args.calibrate not in base or args.calibrate not in cand:
             raise SystemExit(f"--calibrate row {args.calibrate!r} missing "
                              f"from baseline or candidate")
-        cal = (cand[args.calibrate]["us_per_call"]
-               / base[args.calibrate]["us_per_call"])
+        base_cal = base[args.calibrate]["us_per_call"]
+        cand_cal = cand[args.calibrate]["us_per_call"]
+        if not (math.isfinite(base_cal) and math.isfinite(cand_cal)
+                and base_cal > 0 and cand_cal > 0):
+            raise SystemExit(f"--calibrate row {args.calibrate!r} has a "
+                             f"non-finite or zero latency (base={base_cal!r},"
+                             f" cand={cand_cal!r}) — it would poison every "
+                             f"calibrated ratio")
+        cal = cand_cal / base_cal
         print(f"calibration: {args.calibrate} ratio {cal:.2f} "
               f"(divided out below)")
 
@@ -112,6 +120,16 @@ def main() -> None:
             failures.append(f"{name}: missing from candidate")
             continue
         c = cand[name]["us_per_call"]
+        # NaN poisons every comparison below into False (`nan > x` is
+        # never true), so a broken emitter used to sail through the
+        # gate; treat a non-finite measurement like a missing row.
+        if not (math.isfinite(b) and math.isfinite(c)):
+            if not (args.skip_suffix and name.endswith(args.skip_suffix)):
+                print(f"{name:56s} {str(b):>12s} {str(c):>12s} "
+                      f"{'—':>7s}  << NON-FINITE")
+                failures.append(f"{name}: non-finite measurement "
+                                f"(base={b!r}, cand={c!r})")
+            continue
         # Throughput rows (``better=higher`` in the baseline's derived,
         # e.g. the replica tier's serve/.../max_qps_r<k>) invert the
         # ratio so >1 still means "regressed", and skip the --min-us

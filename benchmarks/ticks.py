@@ -60,6 +60,18 @@ p99 breaks the SLO:
 (``unit=qps;better=higher`` — compare.py gates these with the inverted
 ratio; r2/r1 is the throughput the second reader buys.)
 
+PR 10 adds the frontier-proportional trajectory (DESIGN.md §10):
+
+    ticks/<dataset>/<backend>/footprint_small   quiet-tick trickle,
+                                                no-retile op mix
+    ticks/<dataset>/<backend>/footprint_large   full mixed batch
+
+both timed with the frontier mode on (each row's ``derived`` records
+the same tick stream's full-sweep latency as ``fullsweep_us``) — the
+scale-with-batch-footprint claim in two gated rows, on both the
+hub-dominated BA graph and the planar road grid where change stays
+local.
+
 Rows follow the ``name,us_per_call,derived`` contract of benchmarks/run.py;
 ``python -m benchmarks.run --preset quick --json BENCH_pr5.json`` persists
 them in the bench-trajectory JSON format that `benchmarks/compare.py`
@@ -171,6 +183,100 @@ def _tick_loop(name: str, g0, landmarks, edges, backend: str, mesh,
     rows.append(emit(f"{name}/query", float(np.min(steady_q)),
                      f"stat=min;ticks={ticks};B={queries};impl={impl}"))
     return rows
+
+
+def _footprint_rows(ds: str, g0, landmarks, edges, backend: str,
+                    ticks: int, block_v: int, tile_shards: int,
+                    large: int = 64) -> list[str]:
+    """PR 10: the frontier-proportional trajectory (DESIGN.md §10).
+
+    ``ticks/<ds>/<backend>/footprint_small|footprint_large`` time the
+    steady-state update tick with the frontier mode on at two batch
+    footprints:
+
+    ``footprint_small`` is the quiet-tick trickle — the batch size the
+    `bursty` scenario uses between bursts (``max(2, round(0.1*batch))``),
+    carrying the no-retile op mix of the production trickle: re-weights
+    on weighted datasets (the `traffic` shape), deletions on unweighted
+    ones (expiry churn). ``topology_changed=False`` end to end, so the
+    tick prices plan+frontier reuse, not retiling.
+
+    ``footprint_large`` is the preset's full mixed batch over the whole
+    vertex range — the same shape as the main tick rows, with the
+    frontier on. At that footprint the density fallback fires and the
+    row tracks the bookkeeping overhead of carrying the bitmaps.
+
+    The pair is the scale-with-footprint claim in two numbers. Each
+    row's ``derived`` also records the full-sweep latency of the *same*
+    tick stream (``fullsweep_us=``), so the masked win — or, on
+    hub-dominated graphs where one block-hop saturates the bitmap, the
+    masked *overhead* — is auditable per row rather than only against
+    the committed baseline trajectory.
+    """
+    n = g0.n
+    weighted = edges.shape[1] > 2
+    small = max(2, round(large * 0.1))
+    rows = []
+    for frontier in (True, False):
+        engine = RelaxEngine(backend=backend, block_v=block_v,
+                             shards=tile_shards, frontier=frontier,
+                             autotune=(backend == "pallas"))
+        lab0 = build_labelling(g0, landmarks, plan=engine.prepare(g0))
+        jax.block_until_ready(lab0.dist)
+        for tag, bs, trickle in (("footprint_small", small, True),
+                                 ("footprint_large", large, False)):
+            g, lab = g0, lab0
+            cur = edges[:, :2] if weighted else edges
+            t_upd = []
+            for tick in range(ticks):
+                # Same deterministic stream for both engines (seed only).
+                if trickle and weighted:
+                    ups = gen.random_batch_updates(cur, n, n_ins=0,
+                                                   n_del=0, n_rew=bs,
+                                                   max_weight=8,
+                                                   seed=900 + tick)
+                elif trickle:
+                    ups = gen.random_batch_updates(cur, n, n_ins=0,
+                                                   n_del=bs,
+                                                   seed=900 + tick)
+                else:
+                    ups = gen.random_batch_updates(cur, n, n_ins=bs // 2,
+                                                   n_del=bs // 2,
+                                                   seed=900 + tick)
+                batch = make_batch(ups, pad_to=bs)
+                # Trickle ops never consume or free slot pairs in a way
+                # the tiling sees; only insertions force a retile.
+                has_ins = (not trickle) and any(not u[2] for u in ups)
+                t0 = time.time()
+                g_next = apply_batch(g, batch)
+                plan = engine.prepare(g_next, topology_changed=has_ins)
+                g, lab, _ = batchhl_update(g, batch, lab, improved=True,
+                                           plan=plan, g_new=g_next)
+                jax.block_until_ready(lab.dist)
+                t_upd.append(time.time() - t0)
+                if not (trickle and weighted):
+                    # Fold membership churn (re-weights don't change it).
+                    es = {(int(min(u, v)), int(max(u, v))) for u, v in cur}
+                    for u, v, is_del, *_ in ups:
+                        k = (min(u, v), max(u, v))
+                        es.discard(k) if is_del else es.add(k)
+                    cur = np.asarray(sorted(es), np.int32)
+            warm = 2 if ticks > 2 else 1 if ticks > 1 else 0
+            rows.append((tag, bs, trickle, frontier,
+                         float(np.min(t_upd[warm:]))))
+    by_tag = {}
+    for tag, bs, trickle, frontier, m in rows:
+        by_tag.setdefault(tag, {})[frontier] = (bs, trickle, m)
+    out = []
+    for tag, d in by_tag.items():
+        bs, trickle, masked_s = d[True]
+        _, _, full_s = d[False]
+        ops = ("rew" if weighted else "del") if trickle else "mixed"
+        out.append(emit(
+            f"ticks/{ds}/{backend}/{tag}", masked_s,
+            f"stat=min;ticks={ticks};batch={bs};ops={ops};frontier=on;"
+            f"fullsweep_us={full_s * 1e6:.1f}"))
+    return out
 
 
 def _tune_rows(ds: str, g, tile_shards: int,
@@ -344,6 +450,11 @@ def run(datasets=("ba_2k",), backends=("jnp", "pallas"),
                                    batch_size, queries, block_v,
                                    tile_shards,
                                    autotune=(backend == "pallas"))
+            # PR 10: frontier-proportional update rows (DESIGN.md §10) —
+            # tick cost vs batch footprint with change propagation on.
+            rows += _footprint_rows(ds, g0, lms, edges, backend, ticks,
+                                    block_v, tile_shards,
+                                    large=batch_size)
     # Telemetry, not a latency: smallest benched vertex count where the
     # tuned pallas config beat the jnp reference (0 = none did).
     row = (f"tune/crossover,{crossover or 0},unit=vertices;"
@@ -409,6 +520,12 @@ def run(datasets=("ba_2k",), backends=("jnp", "pallas"),
                            road_edges, backend, None, ticks, batch_size,
                            queries, block_v, tile_shards,
                            autotune=(backend == "pallas"))
+        # Frontier footprint rows on the road grid too: the planar block
+        # graph is where change propagation stays local (DESIGN.md §10)
+        # and the trickle is the traffic scenario's weight-only tick.
+        rows += _footprint_rows("road_2k", g0r, lms_r, road_edges,
+                                backend, ticks, block_v, tile_shards,
+                                large=batch_size)
         rows += _serve_loop(f"serve/road_2k/{backend}/traffic",
                             ROAD_PARAMS["road_2k"][0], 3, backend,
                             "pipeline", ticks, batch_size, queries,

@@ -211,10 +211,18 @@ def current_step(ckpt_dir: str) -> int | None:
 
 
 def prune(ckpt_dir: str, keep: int = 3) -> None:
-    """Remove all but the newest `keep` steps — except the published one.
+    """Remove all but the newest `keep` steps — and never anything from
+    the published step forward.
 
     A reader (re)starting from CURRENT must always find the step the
-    pointer names, however old the pointer is relative to the writer.
+    pointer names, however old the pointer is relative to the writer —
+    and a reader that loaded CURRENT and is walking forward to the head
+    must find every intermediate step too (the staleness ≤ 1 catch-up
+    path in DESIGN.md §9). So the whole range [CURRENT, latest] is
+    protected, not just the one step the pointer names: protecting only
+    ``s == protected`` would let an aggressive ``keep`` delete a step
+    between the pointer and the head out from under a catching-up
+    reader.
     """
     if not os.path.isdir(ckpt_dir):
         return
@@ -223,6 +231,6 @@ def prune(ckpt_dir: str, keep: int = 3) -> None:
         int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
         if d.startswith("step_"))
     for s in steps[:-keep] if keep > 0 else steps:
-        if s == protected:
+        if protected is not None and s >= protected:
             continue
         shutil.rmtree(step_dir(ckpt_dir, s), ignore_errors=True)

@@ -63,21 +63,34 @@ KERNEL_BLOCK_E = (None, 1024)
 
 @dataclasses.dataclass(frozen=True)
 class TuneConfig:
-    """One point in the tuner's candidate space (hashable, JSON-able)."""
+    """One point in the tuner's candidate space (hashable, JSON-able).
+
+    `frontier_threshold` is the masked-sweep density knob (DESIGN.md
+    §10), tuned separately by `tune_frontier_threshold` — None (the
+    default, and what every pre-frontier table deserializes to) leaves
+    the engine's configured threshold untouched.
+    """
     impl: str                 # "kernel" | "sorted"
     block_v: int              # destination-block tile (kernel impl)
     block_e: int | None       # tile-row width cap; None = widest block
     tile_shards: int          # leading grid axis of the tiling
+    frontier_threshold: float | None = None
 
     def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        if self.frontier_threshold is None:
+            del d["frontier_threshold"]
+        return d
 
     @staticmethod
     def from_dict(d: dict) -> "TuneConfig":
+        ft = d.get("frontier_threshold")
         return TuneConfig(impl=d["impl"], block_v=int(d["block_v"]),
                           block_e=(None if d.get("block_e") is None
                                    else int(d["block_e"])),
-                          tile_shards=int(d["tile_shards"]))
+                          tile_shards=int(d["tile_shards"]),
+                          frontier_threshold=(None if ft is None
+                                              else float(ft)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -199,6 +212,72 @@ def tune(g, *, shards: int = 1, block_v: int = 512, r_planes: int = 8,
                       candidates=tuple(measured))
 
 
+#: Candidate grid for the masked sweep's density-fallback knob.
+FRONTIER_THRESHOLDS = (0.0625, 0.125, 0.25, 0.5)
+
+
+def tune_frontier_threshold(g, *, fblock: int = 64, r_planes: int = 8,
+                            warmup: int = 1, iters: int = 3,
+                            inf: int = INF32,
+                            thresholds=FRONTIER_THRESHOLDS) -> float:
+    """Pick the masked sweep's density-fallback threshold for `g`'s shape.
+
+    Measures the full jnp reference wave against the masked gathered-
+    scatter wave (DESIGN.md §10) at each candidate active fraction
+    (rows_cap = ceil(threshold · NR) rows gathered) and returns the
+    largest candidate whose masked wave is still faster — the densest
+    frontier worth masking on this snapshot shape; anything denser
+    should fall back to the full sweep. Returns the smallest candidate
+    when masking never wins. The math mirrors `engine.relax_rows`
+    inline (this module must not import the engine — it imports us).
+    """
+    keys, hub = _sweep_inputs(g, r_planes)
+    mask = g.valid
+
+    @jax.jit
+    def full_wave(ks, hb, m):
+        def one(k, h):
+            s = k[g.src] + 2 * g.w
+            cand = jnp.minimum(jnp.where(s < 0, inf, s), inf)
+            cand = jnp.where(h[g.dst], cand & ~jnp.int32(1), cand)
+            return masked_segment_min(cand, g.dst, g.n, m, inf)
+        return jax.vmap(one)(ks, hb)
+
+    _, full_us = measure_compiled(full_wave, keys, hub, mask,
+                                  warmup=warmup, iters=iters)
+
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    keep = np.asarray(g.valid)
+    best = min(thresholds)
+    for th in sorted(thresholds):
+        ft = er_ops.prepare_frontier(src, dst, keep, g.n, fblock,
+                                     threshold=th)
+        # A representative worst-case-at-threshold index vector: the
+        # budget fully spent on real rows.
+        ridx = jnp.arange(ft.rows_cap, dtype=jnp.int32) % max(ft.nrows, 1)
+
+        @jax.jit
+        def masked_wave(ks, hb, m, ft=ft, ridx=ridx):
+            src_g, dstg, perm_g, slot_g = ft.gather(ridx)
+            emask = slot_g & m[perm_g]
+            w_g = jnp.where(slot_g, g.w[perm_g], 0)
+
+            def one(k, h):
+                s = k[src_g] + 2 * w_g
+                cand = jnp.minimum(jnp.where(s < 0, inf, s), inf)
+                cand = jnp.where(h[dstg], cand & ~jnp.int32(1), cand)
+                cand = jnp.where(emask, cand, inf)
+                return k.at[dstg.ravel()].min(cand.ravel())
+            return jax.vmap(one)(ks, hb)
+
+        _, masked_us = measure_compiled(masked_wave, keys, hub, mask,
+                                        warmup=warmup, iters=iters)
+        if masked_us < full_us:
+            best = max(best, th)
+    return best
+
+
 class TuneTable:
     """On-disk (n, capacity, shards) → winning TuneConfig map.
 
@@ -259,6 +338,9 @@ def main() -> None:
     ap.add_argument("--block-v", type=int, default=256)
     ap.add_argument("--r-planes", type=int, default=8)
     ap.add_argument("--table", default="experiments/tuning.json")
+    ap.add_argument("--tune-frontier", action="store_true",
+                    help="also tune the masked sweep's density-fallback "
+                         "threshold and persist it with the winner")
     args = ap.parse_args()
 
     from repro.graphs import generators as gen
@@ -268,6 +350,12 @@ def main() -> None:
     g = from_edges(args.n, edges, edges.shape[0] + args.extra_capacity)
     res = tune(g, shards=args.shards, block_v=args.block_v,
                r_planes=args.r_planes)
+    if args.tune_frontier:
+        th = tune_frontier_threshold(g, r_planes=args.r_planes)
+        res = dataclasses.replace(
+            res, config=dataclasses.replace(res.config,
+                                            frontier_threshold=th))
+        print(f"frontier_threshold={th}")
     table = TuneTable(args.table)
     key = table_key(g.n, int(g.src.shape[0]), args.shards)
     table.put(key, res)

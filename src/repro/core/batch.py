@@ -30,7 +30,8 @@ import numpy as np
 
 from repro.graphs.coo import (Graph, BatchUpdate, INF_D, apply_batch,
                               resolve_seed_weights)
-from repro.core.engine import RelaxEngine, RelaxPlan, relax_sweep
+from repro.core.engine import (RelaxEngine, RelaxPlan, gather_rows,
+                               relax_rows, relax_sweep)
 from repro.core.labelling import (
     HighwayLabelling, INF_KEY2, INF_KEY4,
     key2_dist, key2_hub, key2_make,
@@ -76,6 +77,119 @@ def _fixpoint(body_fn, init: jax.Array) -> jax.Array:
     out, _, _ = jax.lax.while_loop(cond, body,
                                    (init, jnp.asarray(True), jnp.asarray(0)))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Frontier-proportional waves (change propagation, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+#
+# Every fixpoint below is a monotone Bellman-Ford-style iteration, so a
+# vertex can improve at wave k only through an edge whose source changed
+# at wave k-1 (an unchanged finite source re-proposes the candidate the
+# destination already absorbed — the per-destination acceptance bounds are
+# wave-invariant, so the filtered candidate is unchanged too). Tracking
+# *changed destination blocks* per plane and relaxing only the tile rows
+# one block-adjacency hop ahead of them is therefore exact, not a
+# heuristic: the masked wave computes bit-identical planes to the full
+# sweep. When the frontier densifies past the plan's static row budget
+# (`FrontierTiles.rows_cap`, the autotunable density threshold) the wave
+# falls back to the full sweep — a *correctness* requirement, since a
+# truncated `nonzero(size=...)` would silently drop active rows — and the
+# frontier keeps being tracked so later sparse waves re-enter the masked
+# mode. The branch is a scalar `lax.cond` with the plane vmap *inside*
+# each branch: a per-plane cond under vmap would lower to `select` and
+# execute both branches every wave.
+
+def frontier_active_rows(plan: RelaxPlan, front: jax.Array
+                         ) -> tuple[jax.Array, jax.Array]:
+    """(active-row flags [NR], count) one propagation hop ahead of the
+    changed-block bitmap `front` [P, NBf]."""
+    ft = plan.frontier
+    rows = ft.active_rows(ft.propagate(jnp.any(front, axis=0)))
+    return rows, jnp.sum(rows)
+
+
+def frontier_wave(plan: RelaxPlan, g: Graph, full_step, masked_step,
+                  x: jax.Array, front: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+    """One frontier wave: propagate, relax (masked or full), re-derive.
+
+    `full_step(x)` is the existing whole-plane wave; `masked_step(x,
+    rows_g)` the same wave restricted to the gathered rows (`rows_g`
+    from `engine.gather_rows`, shared across planes). Returns (x',
+    front') where front' marks the blocks whose values changed — the
+    fixpoint is reached exactly when front' is empty, matching
+    `_fixpoint`'s x' == x test.
+    """
+    ft = plan.frontier
+    rows, count = frontier_active_rows(plan, front)
+
+    def masked(x):
+        ridx = jnp.nonzero(rows, size=ft.rows_cap,
+                           fill_value=ft.nrows)[0].astype(jnp.int32)
+        return masked_step(x, gather_rows(plan, g, ridx))
+
+    nx = jax.lax.cond(count <= ft.rows_cap, masked, full_step, x)
+    return nx, ft.changed_blocks(nx != x)
+
+
+def _frontier_fixpoint(plan: RelaxPlan, g: Graph, full_step, masked_step,
+                       init: jax.Array, front0: jax.Array) -> jax.Array:
+    """Iterate `frontier_wave` until the changed-block frontier empties."""
+    def cond(state):
+        _, front, it = state
+        return jnp.any(front) & (it < _MAX_WAVES_CAP)
+
+    def body(state):
+        x, front, it = state
+        nx, nfront = frontier_wave(plan, g, full_step, masked_step, x, front)
+        return nx, nfront, it + 1
+
+    out, _, _ = jax.lax.while_loop(cond, body, (init, front0, jnp.asarray(0)))
+    return out
+
+
+def search_step_rows(rows_g, best: jax.Array, bound_g: jax.Array,
+                     hub_mask: jax.Array | None, *,
+                     improved: bool) -> jax.Array:
+    """Masked twin of `search_{basic,improved}_step` over gathered rows.
+
+    The full step's trailing `min(·, seed)` is dropped: the fixpoint
+    starts at `best = seed` and is monotone decreasing, so the seed term
+    is a no-op on every wave. The acceptance filter (Algo 2 line 12 /
+    Algo 3 line 14) moves per-edge via `relax_rows(bound=...)`.
+    """
+    src_g, dstg, valid_g, w_g = rows_g
+    if improved:
+        def one(best_p, beta_p, hub_p):
+            return relax_rows(best_p, best_p, src_g, dstg, valid_g, w_g,
+                              4, INF_KEY4, hub=hub_p, clear_bit=2,
+                              bound=beta_p)
+        return jax.vmap(one)(best, bound_g, hub_mask)
+
+    def one(best_p, dist_p):
+        return relax_rows(best_p, best_p, src_g, dstg, valid_g, w_g,
+                          1, INF_D, bound=dist_p)
+    return jax.vmap(one)(best, bound_g)
+
+
+def repair_step_rows(rows_g, cur: jax.Array, aff: jax.Array,
+                     hub_mask: jax.Array) -> jax.Array:
+    """Masked twin of `repair_step`: interior relaxation over gathered rows."""
+    src_g, dstg, valid_g, w_g = rows_g
+
+    def one(cur_p, aff_p, hub_p):
+        emask = valid_g & aff_p[src_g] & aff_p[dstg]
+        return relax_rows(cur_p, cur_p, src_g, dstg, emask, w_g,
+                          2, INF_KEY2, hub=hub_p, clear_bit=1)
+    return jax.vmap(one)(cur, aff, hub_mask)
+
+
+def use_frontier(plan: RelaxPlan | None, g: Graph) -> bool:
+    """Trace-time frontier dispatch: plan carries the tiling and the graph
+    has edge slots (a zero-capacity snapshot has nothing to gather)."""
+    return (plan is not None and plan.frontier is not None
+            and g.src.shape[0] > 0)
 
 
 # ---------------------------------------------------------------------------
@@ -136,8 +250,16 @@ def search_basic_planes(g_new: Graph, batch: BatchUpdate, dist_g: jax.Array,
     runs this on each shard's local planes with no cross-shard traffic.
     """
     seed, seeded = search_basic_seed(g_new, batch, dist_g)
-    best = _fixpoint(
-        lambda b: search_basic_step(plan, g_new, b, seed, dist_g), seed)
+    if use_frontier(plan, g_new):
+        best = _frontier_fixpoint(
+            plan, g_new,
+            lambda b: search_basic_step(plan, g_new, b, seed, dist_g),
+            lambda b, rows_g: search_step_rows(rows_g, b, dist_g, None,
+                                               improved=False),
+            seed, plan.frontier.changed_blocks(seeded))
+    else:
+        best = _fixpoint(
+            lambda b: search_basic_step(plan, g_new, b, seed, dist_g), seed)
     return seeded | (best < INF_D)
 
 
@@ -208,9 +330,19 @@ def search_improved_planes(g_new: Graph, batch: BatchUpdate,
     """
     seed, seeded, beta = search_improved_seed(g_new, batch, dist_g, hub_g,
                                               hub_mask)
-    best = _fixpoint(
-        lambda b: search_improved_step(plan, g_new, b, seed, beta, hub_mask),
-        seed)
+    if use_frontier(plan, g_new):
+        best = _frontier_fixpoint(
+            plan, g_new,
+            lambda b: search_improved_step(plan, g_new, b, seed, beta,
+                                           hub_mask),
+            lambda b, rows_g: search_step_rows(rows_g, b, beta, hub_mask,
+                                               improved=True),
+            seed, plan.frontier.changed_blocks(seeded))
+    else:
+        best = _fixpoint(
+            lambda b: search_improved_step(plan, g_new, b, seed, beta,
+                                           hub_mask),
+            seed)
     return seeded | (best < INF_KEY4)
 
 
@@ -237,6 +369,41 @@ def repair_base(plan: RelaxPlan | None, g_new: Graph, aff: jax.Array,
                            hub=hub_p, clear_bit=1, edge_mask=bou_mask)
         return jnp.where(aff_p, base, INF_KEY2)
     return jax.vmap(one)(aff, key2_g, hub_mask)
+
+
+def repair_base_frontier(plan: RelaxPlan, g_new: Graph, aff: jax.Array,
+                         key2_g: jax.Array, hub_mask: jax.Array
+                         ) -> jax.Array:
+    """Masked `repair_base`: one sweep over the affected sets' blocks.
+
+    Boundary edges end on affected vertices, so the rows of the blocks
+    holding *any* plane's affected vertices cover every boundary edge of
+    every plane — no propagation hop needed. Falls back to the full
+    sweep when the affected footprint overflows the row budget.
+    """
+    ft = plan.frontier
+    rows = ft.active_rows(ft.changed_blocks(jnp.any(aff, axis=0)))
+
+    def masked(args):
+        aff, key2_g, hub_mask = args
+        ridx = jnp.nonzero(rows, size=ft.rows_cap,
+                           fill_value=ft.nrows)[0].astype(jnp.int32)
+        src_g, dstg, valid_g, w_g = gather_rows(plan, g_new, ridx)
+
+        def one(aff_p, key2_p, hub_p):
+            emask = valid_g & ~aff_p[src_g] & aff_p[dstg]
+            base = relax_rows(key2_p, jnp.full_like(key2_p, INF_KEY2),
+                              src_g, dstg, emask, w_g, 2, INF_KEY2,
+                              hub=hub_p, clear_bit=1)
+            return jnp.where(aff_p, base, INF_KEY2)
+        return jax.vmap(one)(aff, key2_g, hub_mask)
+
+    def full(args):
+        aff, key2_g, hub_mask = args
+        return repair_base(plan, g_new, aff, key2_g, hub_mask)
+
+    return jax.lax.cond(jnp.sum(rows) <= ft.rows_cap, masked, full,
+                        (aff, key2_g, hub_mask))
 
 
 def repair_step(plan: RelaxPlan | None, g_new: Graph, cur: jax.Array,
@@ -266,9 +433,17 @@ def repair_planes(g_new: Graph, aff: jax.Array, key2_g: jax.Array,
     values by Lemma 5.20 + monotonicity. Entirely per-plane, so
     `core/shard.py` runs it on shard-local planes.
     """
-    base = repair_base(plan, g_new, aff, key2_g, hub_mask)
-    settled = _fixpoint(
-        lambda c: repair_step(plan, g_new, c, aff, hub_mask), base)
+    if use_frontier(plan, g_new):
+        base = repair_base_frontier(plan, g_new, aff, key2_g, hub_mask)
+        settled = _frontier_fixpoint(
+            plan, g_new,
+            lambda c: repair_step(plan, g_new, c, aff, hub_mask),
+            lambda c, rows_g: repair_step_rows(rows_g, c, aff, hub_mask),
+            base, plan.frontier.changed_blocks(base < INF_KEY2))
+    else:
+        base = repair_base(plan, g_new, aff, key2_g, hub_mask)
+        settled = _fixpoint(
+            lambda c: repair_step(plan, g_new, c, aff, hub_mask), base)
     return repair_merge(aff, settled, key2_g)
 
 

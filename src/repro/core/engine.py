@@ -45,19 +45,20 @@ from repro.graphs.coo import Graph
 from repro.graphs.segment import masked_segment_min
 from repro.core import autotune as tune_mod
 from repro.kernels.edge_relax import ops as er_ops
-from repro.kernels.edge_relax.ops import BlockedGraph, SortedGraph
+from repro.kernels.edge_relax.ops import BlockedGraph, FrontierTiles, SortedGraph
 
 BACKENDS = ("jnp", "pallas")
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=("tiles", "sorted_tiles"), meta_fields=("backend", "impl"))
+         data_fields=("tiles", "sorted_tiles", "frontier"),
+         meta_fields=("backend", "impl"))
 @dataclasses.dataclass(frozen=True)
 class RelaxPlan:
     """How to run sweeps on one graph snapshot.
 
-    A pytree: `tiles` / `sorted_tiles` (the prepared edge representation
-    for the plan's impl, None otherwise) flow through jit as data;
+    A pytree: `tiles` / `sorted_tiles` / `frontier` (the prepared edge
+    representations, None when unused) flow through jit as data;
     `backend` and `impl` are metadata, so dispatch below is resolved at
     trace time — each (backend, impl) gets its own executable, with no
     runtime branching inside the compiled sweep loops.
@@ -66,11 +67,18 @@ class RelaxPlan:
     (see `core/autotune.py`): "kernel" = the tiled Pallas kernel on
     `tiles`, "sorted" = the dst-sorted compiled segment-min twin on
     `sorted_tiles`. Both are bit-identical to the jnp reference.
+
+    `frontier` (any backend) carries the change-propagation row tiling
+    that lets `core/batch.py` relax only the destination blocks the
+    batch's frontier touches (DESIGN.md §10). Whether it is present is
+    pytree *structure*, so the fixpoint loops specialize at trace time:
+    plans without it compile exactly the pre-frontier full-sweep program.
     """
     tiles: BlockedGraph | None
     backend: str
     sorted_tiles: SortedGraph | None = None
     impl: str = "kernel"
+    frontier: FrontierTiles | None = None
 
 
 #: Default plan: the pure-jnp reference path, no tiling required.
@@ -111,6 +119,48 @@ def relax_sweep(plan: RelaxPlan | None, g: Graph, keys: jax.Array,
     raise ValueError(f"unknown backend {plan.backend!r}; pick from {BACKENDS}")
 
 
+def gather_rows(plan: RelaxPlan, g: Graph, ridx: jax.Array):
+    """Materialize the masked sweep's active tile rows (plane-independent).
+
+    `ridx` int32[rows_cap] names tile rows of `plan.frontier`, sentinel-
+    filled to its static size. Returns (src_g, dstg, valid_g, w_g), each
+    [rows_cap, BE]: source vertex, global destination vertex, per-slot
+    validity (tile occupancy ∧ current edge validity through the stored
+    slot permutation — the same device re-tiling trick BlockedGraph
+    uses), and edge weight. Gathered once per wave, shared by every
+    landmark plane's `relax_rows`.
+    """
+    src_g, dstg, perm_g, slot_g = plan.frontier.gather(ridx)
+    valid_g = slot_g & g.valid[perm_g]
+    w_g = jnp.where(slot_g, g.w[perm_g], 0)
+    return src_g, dstg, valid_g, w_g
+
+
+def relax_rows(keys: jax.Array, out: jax.Array, src_g, dstg, emask_g, w_g,
+               step, inf, *, hub: jax.Array | None = None,
+               clear_bit: int = 0, bound: jax.Array | None = None
+               ) -> jax.Array:
+    """One masked relaxation wave: scatter-min row candidates into `out`.
+
+    The same extend/hub-clear math as `relax_sweep`, restricted to the
+    gathered rows: candidates from masked-off slots (and the sentinel
+    fill rows, whose dstg is 0 and emask false) become `inf`, so the
+    scatter-min is a no-op for them. `bound`, when given, applies the
+    per-destination acceptance filter (`cand <= bound[dst]`) per edge —
+    equivalent because the bound is constant per destination, and
+    required here because the masked path never materializes the
+    per-destination segment min before combining into `out`.
+    """
+    s = keys[src_g] + step * w_g
+    cand = jnp.minimum(jnp.where(s < 0, inf, s), inf)
+    if hub is not None and clear_bit:
+        cand = jnp.where(hub[dstg], cand & ~jnp.int32(clear_bit), cand)
+    if bound is not None:
+        cand = jnp.where(cand <= bound[dstg], cand, inf)
+    cand = jnp.where(emask_g, cand, inf)
+    return out.at[dstg.ravel()].min(cand.ravel())
+
+
 class RelaxEngine:
     """Host-side owner of the backend choice and the tiling cache.
 
@@ -130,7 +180,9 @@ class RelaxEngine:
     def __init__(self, backend: str = "auto", block_v: int = 512,
                  shards: int = 1, cache_plans: int = 2,
                  block_e: int | None = None, autotune: bool = False,
-                 tune_table: "tune_mod.TuneTable | str | None" = None):
+                 tune_table: "tune_mod.TuneTable | str | None" = None,
+                 frontier: bool = False, frontier_threshold: float = 0.25,
+                 frontier_block: int = 64):
         if backend == "auto":
             backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
         if backend not in BACKENDS:
@@ -145,6 +197,14 @@ class RelaxEngine:
         self.shards = shards
         self.block_e = block_e
         self.cache_plans = cache_plans
+        # Frontier-proportional sweeps (DESIGN.md §10): when enabled,
+        # prepared plans additionally carry the change-propagation row
+        # tiling so batch search/repair can relax only the destination
+        # blocks the batch footprint touches. Orthogonal to the backend —
+        # even jnp plans get tiled (and therefore pay the tiling sync).
+        self.frontier = frontier
+        self.frontier_threshold = frontier_threshold
+        self.frontier_block = frontier_block
         # Autotuning (core/autotune.py): pick impl + tile shape per
         # snapshot shape, memoized in a TuneTable (optionally on disk so
         # serve restarts skip the measurement entirely).
@@ -247,11 +307,14 @@ class RelaxEngine:
         (`plan_cache_hits` counts these; the fingerprint sync is the same
         one a retile would pay).
 
-        On the jnp backend this is free — no tiling, no host sync.
+        On the jnp backend this is free — no tiling, no host sync —
+        unless `frontier` is enabled, in which case jnp plans carry (and
+        cache) the change-propagation tiling like any other and pay the
+        same fingerprint sync.
         """
-        if self.backend == "jnp":
+        if self.backend == "jnp" and not self.frontier:
             return JNP_PLAN
-        cfg = self._ensure_tuned(g)
+        cfg = self._ensure_tuned(g) if self.backend == "pallas" else None
         if self._plan is not None and not topology_changed:
             if not (verify_cache and self._cache_is_stale(g)):
                 return self._plan
@@ -259,6 +322,9 @@ class RelaxEngine:
         fp = self._snapshot_fingerprint(g)
         key = fp + ((cfg.impl, cfg.block_v, cfg.block_e, cfg.tile_shards)
                     if cfg else ())
+        if self.frontier:
+            key = key + ("frontier", self.frontier_block,
+                         self.frontier_threshold)
         plan = self._plans.pop(key, None)
         if plan is None:
             # Host sync: pull the slot arrays once per topology change and
@@ -268,16 +334,22 @@ class RelaxEngine:
             src = np.asarray(g.src)
             dst = np.asarray(g.dst)
             keep = np.asarray(g.valid)
-            if cfg is not None and cfg.impl == "sorted":
+            ft = (er_ops.prepare_frontier(
+                      src, dst, keep, g.n, self.frontier_block,
+                      threshold=self.frontier_threshold)
+                  if self.frontier else None)
+            if self.backend == "jnp":
+                plan = RelaxPlan(tiles=None, backend="jnp", frontier=ft)
+            elif cfg is not None and cfg.impl == "sorted":
                 plan = RelaxPlan(tiles=None, backend="pallas",
                                  sorted_tiles=er_ops.prepare_sorted(
                                      src, dst, keep, g.n),
-                                 impl="sorted")
+                                 impl="sorted", frontier=ft)
             else:
                 tiling_s = cfg.tile_shards if cfg else self.shards
                 plan = RelaxPlan(tiles=er_ops.prepare_topology(
                     src, dst, keep, g.n, self.block_v, tiling_s,
-                    self.block_e), backend="pallas")
+                    self.block_e), backend="pallas", frontier=ft)
             self.retile_count += 1
         else:
             self.plan_cache_hits += 1
@@ -312,4 +384,6 @@ class RelaxEngine:
             if cfg.impl == "kernel":
                 self.block_v = cfg.block_v
                 self.block_e = cfg.block_e
+            if cfg.frontier_threshold is not None:
+                self.frontier_threshold = cfg.frontier_threshold
         return cfg

@@ -60,16 +60,18 @@ from jax.sharding import PartitionSpec as P
 
 from repro.graphs.coo import (Graph, BatchUpdate, INF_D, apply_batch,
                               resolve_seed_weights)
-from repro.core.batch import (check_labelling_width, repair_base,
+from repro.core.batch import (check_labelling_width, frontier_wave,
+                              repair_base, repair_base_frontier,
                               repair_merge, repair_planes,
-                              repair_step, search_basic_planes,
+                              repair_step, repair_step_rows,
+                              search_basic_planes,
                               search_basic_seed, search_basic_step,
                               search_improved_planes, search_improved_seed,
-                              search_improved_step)
+                              search_improved_step, search_step_rows)
 from repro.core.construct import construct_key2_planes
 from repro.core.engine import RelaxPlan
-from repro.core.labelling import (HighwayLabelling, key2_dist, key2_hub,
-                                  key2_make, per_plane_hub_mask)
+from repro.core.labelling import (HighwayLabelling, INF_KEY2, key2_dist,
+                                  key2_hub, key2_make, per_plane_hub_mask)
 from repro.core.query import bounded_bibfs, effective_label_planes
 
 #: Plane-sharding spec during maintenance: landmark planes over the whole
@@ -446,6 +448,220 @@ def shard_fused_repair_chunk(mesh, g_new: Graph, cur: jax.Array,
         in_specs=(P(), rv, rv, rv, P()),
         out_specs=(rv, P()),
         check_rep=False)(g_new, cur, aff, hub_mask, plan)
+
+
+# --- frontier chunk twins (change propagation, DESIGN.md §10) --------------
+#
+# Mesh versions of `snapshot.*_frontier`: the per-plane changed-block
+# bitmap `front` [P, NBf] shards over the maintenance grouping exactly
+# like the labelling planes (rv), so each device propagates and relaxes
+# the frontier of *its own* plane slice — the masked/full density branch
+# is taken per device, against its local frontier (a tighter mask than a
+# global one, and still exact per plane). The convergence flag is the
+# usual pmax OR-merge of "is my local frontier non-empty".
+
+def _shard_search_wave_fns(plan, g_new, seed, bound, hub_mask, improved):
+    if improved:
+        return (lambda b: search_improved_step(plan, g_new, b, seed, bound,
+                                               hub_mask),
+                lambda b, rows_g: search_step_rows(rows_g, b, bound,
+                                                   hub_mask, improved=True))
+    return (lambda b: search_basic_step(plan, g_new, b, seed, bound),
+            lambda b, rows_g: search_step_rows(rows_g, b, bound, None,
+                                               improved=False))
+
+
+@partial(jax.jit, static_argnames=("mesh", "improved", "sweeps"))
+def shard_search_chunk_frontier(mesh, g_new: Graph, best: jax.Array,
+                                front: jax.Array, seed: jax.Array,
+                                bound: jax.Array, hub_mask: jax.Array,
+                                plan: RelaxPlan, improved: bool = True,
+                                sweeps: int = 1):
+    """Mesh twin of `snapshot.search_chunk_frontier` →
+    (best', front', changed scalar)."""
+
+    def body(g_new, best, front, seed, bound, hub_mask, plan):
+        full, masked = _shard_search_wave_fns(plan, g_new, seed, bound,
+                                              hub_mask, improved)
+        cur = best
+        for _ in range(sweeps):
+            cur, front = frontier_wave(plan, g_new, full, masked, cur, front)
+        changed = jax.lax.pmax(
+            jnp.any(front).astype(jnp.int32), MAINT_AXES)
+        return cur, front, changed > 0
+
+    rv = P(MAINT_AXES, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), rv, rv, rv, rv, rv, P()),
+        out_specs=(rv, rv, P()),
+        check_rep=False)(g_new, best, front, seed, bound, hub_mask, plan)
+
+
+@partial(jax.jit, static_argnames=("mesh",))
+def shard_repair_start_frontier(mesh, g_new: Graph, aff: jax.Array,
+                                dist: jax.Array, hub: jax.Array,
+                                hub_mask: jax.Array, plan: RelaxPlan):
+    """Mesh twin of `snapshot.repair_start_frontier` → (base, front)."""
+
+    def body(g_new, aff, dist, hub, hub_mask, plan):
+        base = repair_base_frontier(plan, g_new, aff, key2_make(dist, hub),
+                                    hub_mask)
+        return base, plan.frontier.changed_blocks(base < INF_KEY2)
+
+    rv = P(MAINT_AXES, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), rv, rv, rv, rv, P()),
+        out_specs=(rv, rv),
+        check_rep=False)(g_new, aff, dist, hub, hub_mask, plan)
+
+
+@partial(jax.jit, static_argnames=("mesh", "sweeps"))
+def shard_repair_chunk_frontier(mesh, g_new: Graph, cur: jax.Array,
+                                front: jax.Array, aff: jax.Array,
+                                hub_mask: jax.Array, plan: RelaxPlan,
+                                sweeps: int = 1):
+    """Mesh twin of `snapshot.repair_chunk_frontier` →
+    (cur', front', changed scalar)."""
+
+    def body(g_new, cur, front, aff, hub_mask, plan):
+        full = lambda c: repair_step(plan, g_new, c, aff, hub_mask)
+        masked = lambda c, rows_g: repair_step_rows(rows_g, c, aff, hub_mask)
+        out = cur
+        for _ in range(sweeps):
+            out, front = frontier_wave(plan, g_new, full, masked, out, front)
+        changed = jax.lax.pmax(
+            jnp.any(front).astype(jnp.int32), MAINT_AXES)
+        return out, front, changed > 0
+
+    rv = P(MAINT_AXES, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), rv, rv, rv, rv, P()),
+        out_specs=(rv, rv, P()),
+        check_rep=False)(g_new, cur, front, aff, hub_mask, plan)
+
+
+@partial(jax.jit, static_argnames=("mesh", "improved", "sweeps"))
+def shard_fused_search_start_frontier(mesh, g_new: Graph,
+                                      batch: BatchUpdate, dist: jax.Array,
+                                      hub: jax.Array, landmarks: jax.Array,
+                                      plan: RelaxPlan, improved: bool = True,
+                                      sweeps: int = 1):
+    """Mesh twin of `snapshot.fused_search_start_frontier` →
+    (best, front, seed, seeded, bound, hub_mask, changed)."""
+    _check_planes(landmarks.shape[0], _maint_size(mesh), "maintenance")
+    check_labelling_width(g_new, dist)
+
+    def body(g_new, batch, dist, hub, own, landmarks_full, plan):
+        hub_mask = per_plane_hub_mask(landmarks_full, own, g_new.n)
+        if improved:
+            seed, seeded, bound = search_improved_seed(g_new, batch, dist,
+                                                       hub, hub_mask)
+        else:
+            seed, seeded = search_basic_seed(g_new, batch, dist)
+            bound = dist
+        front = plan.frontier.changed_blocks(seeded)
+        full, masked = _shard_search_wave_fns(plan, g_new, seed, bound,
+                                              hub_mask, improved)
+        best = seed
+        for _ in range(sweeps):
+            best, front = frontier_wave(plan, g_new, full, masked, best,
+                                        front)
+        changed = jax.lax.pmax(
+            jnp.any(front).astype(jnp.int32), MAINT_AXES)
+        return best, front, seed, seeded, bound, hub_mask, changed > 0
+
+    rv = P(MAINT_AXES, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), rv, rv, P(MAINT_AXES), P(), P()),
+        out_specs=(rv, rv, rv, rv, rv, rv, P()),
+        check_rep=False)(g_new, batch, dist, hub, landmarks, landmarks,
+                         plan)
+
+
+@partial(jax.jit, static_argnames=("mesh", "improved", "sweeps"),
+         donate_argnums=(2,))
+def shard_fused_search_chunk_frontier(mesh, g_new: Graph, best: jax.Array,
+                                      front: jax.Array, seed: jax.Array,
+                                      bound: jax.Array, hub_mask: jax.Array,
+                                      plan: RelaxPlan, improved: bool = True,
+                                      sweeps: int = 1):
+    """`shard_search_chunk_frontier` with the labelling plane donated."""
+
+    def body(g_new, best, front, seed, bound, hub_mask, plan):
+        full, masked = _shard_search_wave_fns(plan, g_new, seed, bound,
+                                              hub_mask, improved)
+        cur = best
+        for _ in range(sweeps):
+            cur, front = frontier_wave(plan, g_new, full, masked, cur, front)
+        changed = jax.lax.pmax(
+            jnp.any(front).astype(jnp.int32), MAINT_AXES)
+        return cur, front, changed > 0
+
+    rv = P(MAINT_AXES, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), rv, rv, rv, rv, rv, P()),
+        out_specs=(rv, rv, P()),
+        check_rep=False)(g_new, best, front, seed, bound, hub_mask, plan)
+
+
+@partial(jax.jit, static_argnames=("mesh", "sweeps"))
+def shard_fused_repair_start_chunk_frontier(mesh, g_new: Graph,
+                                            aff: jax.Array, dist: jax.Array,
+                                            hub: jax.Array,
+                                            hub_mask: jax.Array,
+                                            plan: RelaxPlan,
+                                            sweeps: int = 1):
+    """Mesh twin of `snapshot.fused_repair_start_chunk_frontier` →
+    (cur, front, changed)."""
+
+    def body(g_new, aff, dist, hub, hub_mask, plan):
+        cur = repair_base_frontier(plan, g_new, aff, key2_make(dist, hub),
+                                   hub_mask)
+        front = plan.frontier.changed_blocks(cur < INF_KEY2)
+        full = lambda c: repair_step(plan, g_new, c, aff, hub_mask)
+        masked = lambda c, rows_g: repair_step_rows(rows_g, c, aff, hub_mask)
+        for _ in range(sweeps):
+            cur, front = frontier_wave(plan, g_new, full, masked, cur, front)
+        changed = jax.lax.pmax(
+            jnp.any(front).astype(jnp.int32), MAINT_AXES)
+        return cur, front, changed > 0
+
+    rv = P(MAINT_AXES, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), rv, rv, rv, rv, P()),
+        out_specs=(rv, rv, P()),
+        check_rep=False)(g_new, aff, dist, hub, hub_mask, plan)
+
+
+@partial(jax.jit, static_argnames=("mesh", "sweeps"), donate_argnums=(2,))
+def shard_fused_repair_chunk_frontier(mesh, g_new: Graph, cur: jax.Array,
+                                      front: jax.Array, aff: jax.Array,
+                                      hub_mask: jax.Array, plan: RelaxPlan,
+                                      sweeps: int = 1):
+    """`shard_repair_chunk_frontier` with the key2 plane donated."""
+
+    def body(g_new, cur, front, aff, hub_mask, plan):
+        full = lambda c: repair_step(plan, g_new, c, aff, hub_mask)
+        masked = lambda c, rows_g: repair_step_rows(rows_g, c, aff, hub_mask)
+        out = cur
+        for _ in range(sweeps):
+            out, front = frontier_wave(plan, g_new, full, masked, out, front)
+        changed = jax.lax.pmax(
+            jnp.any(front).astype(jnp.int32), MAINT_AXES)
+        return out, front, changed > 0
+
+    rv = P(MAINT_AXES, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), rv, rv, rv, rv, P()),
+        out_specs=(rv, rv, P()),
+        check_rep=False)(g_new, cur, front, aff, hub_mask, plan)
 
 
 @partial(jax.jit, static_argnames=("mesh",))

@@ -52,12 +52,15 @@ import numpy as np
 from repro.graphs.coo import (Graph, BatchUpdate, INF_D, apply_batch, grow,
                               resolve_seed_weights)
 from repro.checkpoint import manager as ckpt
-from repro.core.batch import (check_labelling_width, repair_base,
-                              repair_merge, repair_step,
+from repro.core.batch import (check_labelling_width, frontier_wave,
+                              repair_base, repair_base_frontier,
+                              repair_merge, repair_step, repair_step_rows,
                               search_basic_seed, search_basic_step,
-                              search_improved_seed, search_improved_step)
+                              search_improved_seed, search_improved_step,
+                              search_step_rows, use_frontier)
 from repro.core.engine import RelaxPlan
-from repro.core.labelling import (HighwayLabelling, INF_KEY4, grow_labelling,
+from repro.core.labelling import (HighwayLabelling, INF_KEY2, INF_KEY4,
+                                  grow_labelling,
                                   key2_dist, key2_hub, key2_make,
                                   per_plane_hub_mask)
 
@@ -205,6 +208,145 @@ def repair_chunk(g_new: Graph, cur: jax.Array, aff: jax.Array,
     return out, jnp.any(out != cur)
 
 
+# --- frontier chunk variants (change propagation, DESIGN.md §10) -----------
+#
+# The masked-sweep twins of the chunks above, used by `pipelined_update`
+# when the plan carries a `FrontierTiles`. Each threads the per-plane
+# changed-block bitmap `front` [P, NBf] through the chunk loop as extra
+# carried state; the per-chunk convergence flag becomes "is the frontier
+# empty", which is the same fixpoint condition expressed one wave earlier
+# (values are bit-identical either way — the parity suite pins it).
+
+def _search_wave_fns(plan, g_new, seed, bound, hub_mask, improved):
+    """(full_step, masked_step) pair for one search wave (Algo 2/3)."""
+    if improved:
+        return (lambda b: search_improved_step(plan, g_new, b, seed, bound,
+                                               hub_mask),
+                lambda b, rows_g: search_step_rows(rows_g, b, bound,
+                                                   hub_mask, improved=True))
+    return (lambda b: search_basic_step(plan, g_new, b, seed, bound),
+            lambda b, rows_g: search_step_rows(rows_g, b, bound, None,
+                                               improved=False))
+
+
+@jax.jit
+def frontier_seed_blocks(plan: RelaxPlan, seeded: jax.Array) -> jax.Array:
+    """Initial changed-block bitmap: wave 0 'changed' the seeded vertices."""
+    return plan.frontier.changed_blocks(seeded)
+
+
+@partial(jax.jit, static_argnames=("improved", "sweeps"))
+def search_chunk_frontier(g_new: Graph, best: jax.Array, front: jax.Array,
+                          seed: jax.Array, bound: jax.Array,
+                          hub_mask: jax.Array, plan: RelaxPlan,
+                          improved: bool = True, sweeps: int = 1):
+    """`search_chunk` with frontier waves → (best', front', changed)."""
+    full, masked = _search_wave_fns(plan, g_new, seed, bound, hub_mask,
+                                    improved)
+    cur = best
+    for _ in range(sweeps):
+        cur, front = frontier_wave(plan, g_new, full, masked, cur, front)
+    return cur, front, jnp.any(front)
+
+
+@jax.jit
+def repair_start_frontier(g_new: Graph, aff: jax.Array, dist: jax.Array,
+                          hub: jax.Array, hub_mask: jax.Array,
+                          plan: RelaxPlan):
+    """`repair_start` masked to the affected blocks → (base, front)."""
+    base = repair_base_frontier(plan, g_new, aff, key2_make(dist, hub),
+                                hub_mask)
+    return base, plan.frontier.changed_blocks(base < INF_KEY2)
+
+
+@partial(jax.jit, static_argnames=("sweeps",))
+def repair_chunk_frontier(g_new: Graph, cur: jax.Array, front: jax.Array,
+                          aff: jax.Array, hub_mask: jax.Array,
+                          plan: RelaxPlan, sweeps: int = 1):
+    """`repair_chunk` with frontier waves → (cur', front', changed)."""
+    full = lambda c: repair_step(plan, g_new, c, aff, hub_mask)
+    masked = lambda c, rows_g: repair_step_rows(rows_g, c, aff, hub_mask)
+    out = cur
+    for _ in range(sweeps):
+        out, front = frontier_wave(plan, g_new, full, masked, out, front)
+    return out, front, jnp.any(front)
+
+
+@partial(jax.jit, static_argnames=("improved", "sweeps"))
+def fused_search_start_frontier(g_new: Graph, batch: BatchUpdate,
+                                dist: jax.Array, hub: jax.Array,
+                                landmarks: jax.Array, plan: RelaxPlan,
+                                improved: bool = True, sweeps: int = 1):
+    """`fused_search_start` with frontier waves →
+    (best, front, seed, seeded, bound, hub_mask, changed).
+
+    Returned `best` is a fresh buffer distinct from `seed` (each masked
+    wave's scatter-min is functional), so the donation contract of the
+    fused chunks holds unchanged.
+    """
+    check_labelling_width(g_new, dist)
+    hub_mask = per_plane_hub_mask(landmarks, landmarks, g_new.n)
+    if improved:
+        seed, seeded, bound = search_improved_seed(g_new, batch, dist, hub,
+                                                   hub_mask)
+    else:
+        seed, seeded = search_basic_seed(g_new, batch, dist)
+        bound = dist
+    front = plan.frontier.changed_blocks(seeded)
+    full, masked = _search_wave_fns(plan, g_new, seed, bound, hub_mask,
+                                    improved)
+    best = seed
+    for _ in range(sweeps):
+        best, front = frontier_wave(plan, g_new, full, masked, best, front)
+    return best, front, seed, seeded, bound, hub_mask, jnp.any(front)
+
+
+@partial(jax.jit, static_argnames=("improved", "sweeps"), donate_argnums=(1,))
+def fused_search_chunk_frontier(g_new: Graph, best: jax.Array,
+                                front: jax.Array, seed: jax.Array,
+                                bound: jax.Array, hub_mask: jax.Array,
+                                plan: RelaxPlan, improved: bool = True,
+                                sweeps: int = 1):
+    """`search_chunk_frontier` with the labelling plane donated."""
+    full, masked = _search_wave_fns(plan, g_new, seed, bound, hub_mask,
+                                    improved)
+    cur = best
+    for _ in range(sweeps):
+        cur, front = frontier_wave(plan, g_new, full, masked, cur, front)
+    return cur, front, jnp.any(front)
+
+
+@partial(jax.jit, static_argnames=("sweeps",))
+def fused_repair_start_chunk_frontier(g_new: Graph, aff: jax.Array,
+                                      dist: jax.Array, hub: jax.Array,
+                                      hub_mask: jax.Array, plan: RelaxPlan,
+                                      sweeps: int = 1):
+    """`fused_repair_start_chunk` with frontier waves →
+    (cur, front, changed)."""
+    cur = repair_base_frontier(plan, g_new, aff, key2_make(dist, hub),
+                               hub_mask)
+    front = plan.frontier.changed_blocks(cur < INF_KEY2)
+    full = lambda c: repair_step(plan, g_new, c, aff, hub_mask)
+    masked = lambda c, rows_g: repair_step_rows(rows_g, c, aff, hub_mask)
+    for _ in range(sweeps):
+        cur, front = frontier_wave(plan, g_new, full, masked, cur, front)
+    return cur, front, jnp.any(front)
+
+
+@partial(jax.jit, static_argnames=("sweeps",), donate_argnums=(1,))
+def fused_repair_chunk_frontier(g_new: Graph, cur: jax.Array,
+                                front: jax.Array, aff: jax.Array,
+                                hub_mask: jax.Array, plan: RelaxPlan,
+                                sweeps: int = 1):
+    """`repair_chunk_frontier` with the key2 plane donated."""
+    full = lambda c: repair_step(plan, g_new, c, aff, hub_mask)
+    masked = lambda c, rows_g: repair_step_rows(rows_g, c, aff, hub_mask)
+    out = cur
+    for _ in range(sweeps):
+        out, front = frontier_wave(plan, g_new, full, masked, out, front)
+    return out, front, jnp.any(front)
+
+
 # --- fused chunk variants (one dispatch per pipeline phase boundary) -------
 #
 # The unfused pipeline pays one dispatch for the seed plus one per chunk,
@@ -346,6 +488,14 @@ def pipelined_update(snapshot: Snapshot, batch: BatchUpdate, *,
         rchunk_fn = fused_repair_chunk if fused else repair_chunk
         frstart_fn = fused_repair_start_chunk
         finish_fn = update_finish
+        f_seed_blocks = frontier_seed_blocks
+        f_chunk_fn = (fused_search_chunk_frontier if fused
+                      else search_chunk_frontier)
+        f_fstart_fn = fused_search_start_frontier
+        f_rstart_fn = repair_start_frontier
+        f_rchunk_fn = (fused_repair_chunk_frontier if fused
+                       else repair_chunk_frontier)
+        f_frstart_fn = fused_repair_start_chunk_frontier
     else:
         from repro.core import shard
         seed_fn = partial(shard.shard_search_seed, mesh)
@@ -357,6 +507,15 @@ def pipelined_update(snapshot: Snapshot, batch: BatchUpdate, *,
                             else shard.shard_repair_chunk, mesh)
         frstart_fn = partial(shard.shard_fused_repair_start_chunk, mesh)
         finish_fn = partial(shard.shard_update_finish, mesh)
+        f_seed_blocks = frontier_seed_blocks
+        f_chunk_fn = partial(shard.shard_fused_search_chunk_frontier if fused
+                             else shard.shard_search_chunk_frontier, mesh)
+        f_fstart_fn = partial(shard.shard_fused_search_start_frontier, mesh)
+        f_rstart_fn = partial(shard.shard_repair_start_frontier, mesh)
+        f_rchunk_fn = partial(shard.shard_fused_repair_chunk_frontier if fused
+                              else shard.shard_repair_chunk_frontier, mesh)
+        f_frstart_fn = partial(shard.shard_fused_repair_start_chunk_frontier,
+                               mesh)
 
     lab = snapshot.labelling
     if g_new is None:
@@ -365,6 +524,49 @@ def pipelined_update(snapshot: Snapshot, batch: BatchUpdate, *,
     # (see coo.resolve_seed_weights); apply_batch above already consumed
     # the original post-update weights.
     batch = resolve_seed_weights(snapshot.graph, batch)
+
+    if use_frontier(plan, g_new):
+        # Frontier mode (DESIGN.md §10): swap in the chunk twins that
+        # thread the changed-block bitmap, closing over it so the driver
+        # below (and its yield discipline) stays identical. The bitmap is
+        # chunk-carried state like `best`/`cur`, never surfaced to
+        # callers.
+        fr = {"front": None}
+        base_seed_fn, base_fstart_fn = seed_fn, fstart_fn
+
+        def seed_fn(g, b, dist, hub, lms, improved):
+            seed, seeded, bound, hub_mask = base_seed_fn(
+                g, b, dist, hub, lms, improved=improved)
+            fr["front"] = f_seed_blocks(plan, seeded)
+            return seed, seeded, bound, hub_mask
+
+        def chunk_fn(g, best, seed, bound, hub_mask, plan_, improved,
+                     sweeps):
+            best, fr["front"], changed = f_chunk_fn(
+                g, best, fr["front"], seed, bound, hub_mask, plan_,
+                improved=improved, sweeps=sweeps)
+            return best, changed
+
+        def fstart_fn(g, b, dist, hub, lms, plan_, improved, sweeps):
+            (best, fr["front"], seed, seeded, bound, hub_mask,
+             changed) = f_fstart_fn(g, b, dist, hub, lms, plan_,
+                                    improved=improved, sweeps=sweeps)
+            return best, seed, seeded, bound, hub_mask, changed
+
+        def rstart_fn(g, aff, dist, hub, hub_mask, plan_):
+            cur, fr["front"] = f_rstart_fn(g, aff, dist, hub, hub_mask,
+                                           plan_)
+            return cur
+
+        def rchunk_fn(g, cur, aff, hub_mask, plan_, sweeps):
+            cur, fr["front"], changed = f_rchunk_fn(
+                g, cur, fr["front"], aff, hub_mask, plan_, sweeps=sweeps)
+            return cur, changed
+
+        def frstart_fn(g, aff, dist, hub, hub_mask, plan_, sweeps):
+            cur, fr["front"], changed = f_frstart_fn(
+                g, aff, dist, hub, hub_mask, plan_, sweeps=sweeps)
+            return cur, changed
 
     if fused:
         best, seed, seeded, bound, hub_mask, changed = fstart_fn(

@@ -132,18 +132,19 @@ def block_edges_topology(src: np.ndarray, dst: np.ndarray, keep: np.ndarray,
                        rows_per_block).astype(np.int32)
     starts = np.concatenate([[0], np.cumsum(counts)])
     row_starts = np.concatenate([[0], np.cumsum(rows_per_block)])
-    for b in range(nb):
-        lo, hi = starts[b], starts[b + 1]
-        for c in range(int(rows_per_block[b])):
-            a = lo + c * be
-            m = min(hi - a, be)
-            if m <= 0:
-                break
-            r = int(row_starts[b]) + c
-            src_t[r, :m] = src_k[a:a + m]
-            dst_t[r, :m] = dst_k[a:a + m] - b * block_v
-            perm_t[r, :m] = idx[a:a + m]
-            slot_t[r, :m] = 1
+    if src_k.size:
+        # Each kept edge lands at (row_starts[block] + within // BE,
+        # within % BE) where `within` is its rank inside its block —
+        # one vectorized scatter (this runs every insert tick on the
+        # serving path, so no per-block python loop).
+        blk = dst_k // block_v
+        within = np.arange(src_k.size, dtype=np.int64) - starts[blk]
+        r = row_starts[blk] + within // be
+        c = within % be
+        src_t[r, c] = src_k
+        dst_t[r, c] = dst_k - blk * block_v
+        perm_t[r, c] = idx
+        slot_t[r, c] = 1
     return src_t, dst_t, perm_t, slot_t, rowblk, block_v
 
 

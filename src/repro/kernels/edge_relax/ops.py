@@ -106,6 +106,125 @@ class BlockedGraph:
 
 
 @partial(jax.tree_util.register_dataclass,
+         data_fields=("src_r", "dstg_r", "perm_r", "slot_r", "rowblk_r",
+                      "adj"),
+         meta_fields=("n", "fblock", "nbf", "nrows", "rows_cap"))
+@dataclasses.dataclass(frozen=True)
+class FrontierTiles:
+    """The third prepared representation: change-propagation row tiling.
+
+    Groups the kept edge slots into destination-block rows (the same
+    host-side tiling `BlockedGraph` uses, at its own — typically finer —
+    block size `fblock`), plus the block-adjacency matrix that propagates
+    an active frontier one tile-neighbourhood per wave. A masked sweep
+    gathers only the rows of active destination blocks through a
+    static-size index vector (`jnp.nonzero(size=rows_cap,
+    fill_value=nrows)` — the ragged-segment/padding shape discipline, so
+    shapes stay static under jit) and scatter-mins their candidates into
+    the key plane; row `nrows` is an all-padding sentinel that absorbs
+    the fill slots as no-ops. Backend-independent: all three sweep impls
+    (jnp, sorted, kernel) share this masked path and fall back to their
+    own full sweep — bit-identically — when the frontier densifies past
+    `rows_cap` (see DESIGN.md §10).
+    """
+    src_r: jax.Array     # int32[NR+1, BE] source vertex (row NR: sentinel)
+    dstg_r: jax.Array    # int32[NR+1, BE] global destination vertex
+    perm_r: jax.Array    # int32[NR+1, BE] original edge-slot index
+    slot_r: jax.Array    # int32[NR+1, BE] 1 on real slots, 0 on padding
+    rowblk_r: jax.Array  # int32[NR] destination block per row (nbf on
+                         # bucket-padding rows: the never-active sentinel)
+    adj: jax.Array       # bool[NBf, NBf] block u holds an edge into block v
+    n: int
+    fblock: int          # frontier block size (vertices per block)
+    nbf: int             # number of frontier blocks = ceil(n / fblock)
+    nrows: int           # tile rows NR, bucketed to a multiple of 64 so
+                         # shapes stay trace-stable across edge churn
+                         # (sentinel gather row lives at index NR)
+    rows_cap: int        # masked-sweep row budget (density threshold)
+
+    def propagate(self, front: jax.Array) -> jax.Array:
+        """Blocks reachable in one wave from changed blocks `front` [NBf].
+
+        active[bv] = ∃ bu: front[bu] ∧ adj[bu, bv] — every destination
+        block that receives an edge from a changed block must relax this
+        wave; all others provably cannot improve (DESIGN.md §10).
+        """
+        return jnp.any(self.adj & front[:, None], axis=0)
+
+    def changed_blocks(self, changed_v: jax.Array) -> jax.Array:
+        """Per-vertex changed flags [..., V] → per-block flags [..., NBf]."""
+        pad = self.nbf * self.fblock - self.n
+        lead = changed_v.shape[:-1]
+        padded = jnp.concatenate(
+            [changed_v, jnp.zeros(lead + (pad,), changed_v.dtype)], axis=-1)
+        return jnp.any(padded.reshape(lead + (self.nbf, self.fblock)),
+                       axis=-1)
+
+    def active_rows(self, active_blocks: jax.Array) -> jax.Array:
+        """Active-block flags [NBf] → tile-row flags [NR].
+
+        Bucket-padding rows carry `rowblk = nbf`, which indexes the
+        appended always-False slot — they never activate.
+        """
+        never = jnp.zeros((1,), dtype=active_blocks.dtype)
+        return jnp.concatenate([active_blocks, never])[self.rowblk_r]
+
+    def gather(self, ridx: jax.Array):
+        """Materialize the rows named by `ridx` (static size, sentinel-
+        filled): (src [K, BE], dst-global [K, BE], perm [K, BE],
+        slot [K, BE] bool)."""
+        return (self.src_r[ridx], self.dstg_r[ridx], self.perm_r[ridx],
+                self.slot_r[ridx] != 0)
+
+
+def prepare_frontier(src, dst, keep, n: int, fblock: int = 64,
+                     block_e: int | None = 128,
+                     threshold: float = 0.25) -> FrontierTiles:
+    """Build the change-propagation tiling (host sync, once per topology).
+
+    `fblock` is the frontier granularity: smaller blocks track a tight
+    batch footprint more precisely but grow the adjacency matrix
+    (NBf² bits) and the row count. `block_e` caps row width the way the
+    kernel tiling's block_e does (oversized blocks chunk into several
+    rows), keeping the masked gather's [rows_cap, BE] working set small
+    on power-law hub blocks. `threshold` is the density-fallback knob:
+    the masked sweep runs while the active rows fit within
+    ceil(threshold · NR); denser frontiers fall back to the full sweep
+    (autotunable — `core/autotune.py:tune_frontier_threshold`).
+    """
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    keep = np.asarray(keep, bool)
+    src_t, dstloc_t, perm_t, slot_t, rowblk, fb = kernel.block_edges_topology(
+        src, dst, keep, n, fblock, block_e)
+    nr, be = src_t.shape
+    nbf = -(-n // fb)
+    dstg_t = np.where(slot_t != 0, rowblk[:, None] * fb + dstloc_t, 0)
+    # Bucket the row count to a multiple of 64: the row arrays' shapes
+    # (and rows_cap below) are jit-trace constants, so letting NR drift
+    # with every inserted edge would retrace the whole update per tick —
+    # a >1s spike on the serving path. Bucket-padding rows are all
+    # padding slots with rowblk = nbf (the always-inactive sentinel
+    # block in `active_rows`). The sentinel gather row still lives at
+    # index NR (= the bucketed count).
+    nr_b = max(64, -(-nr // 64) * 64)
+    pad_rows = np.zeros((nr_b - nr + 1, be), np.int32)
+    rowblk_b = np.concatenate(
+        [rowblk, np.full(nr_b - nr, nbf, np.int32)])
+    adj = np.zeros((nbf, nbf), bool)
+    if keep.any():
+        adj[src[keep] // fb, dst[keep] // fb] = True
+    rows_cap = max(1, min(nr_b, int(np.ceil(nr_b * threshold))))
+    return FrontierTiles(
+        jnp.asarray(np.concatenate([src_t, pad_rows])),
+        jnp.asarray(np.concatenate([dstg_t, pad_rows])),
+        jnp.asarray(np.concatenate([perm_t, pad_rows])),
+        jnp.asarray(np.concatenate([slot_t, pad_rows])),
+        jnp.asarray(rowblk_b), jnp.asarray(adj),
+        n, fb, nbf, nr_b, rows_cap)
+
+
+@partial(jax.tree_util.register_dataclass,
          data_fields=("src_s", "dst_s", "perm_s"),
          meta_fields=("n",))
 @dataclasses.dataclass(frozen=True)

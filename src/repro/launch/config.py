@@ -97,6 +97,14 @@ class EngineSpec:
                                 "--autotune)", arg_type=str)
     fused: bool = _f(False, "pipelined chunks as fused megakernel "
                      "dispatches with donated planes (DESIGN.md §7)")
+    frontier: bool = _f(False, "frontier-proportional sweeps: relax only "
+                        "the tile rows the batch's change frontier touches, "
+                        "falling back to full sweeps past the density "
+                        "threshold (DESIGN.md §10)")
+    frontier_threshold: float = _f(0.25, "masked-sweep density fallback: "
+                                   "max fraction of tile rows a frontier "
+                                   "wave may gather before the full sweep "
+                                   "takes over (autotunable)")
     use_minplus_kernel: bool = _f(False, "Eq.-3 bound through the Pallas "
                                   "minplus kernel")
     mesh: str = _f("none", "run sharded on a device mesh",

@@ -511,8 +511,12 @@ class Router:
         self._head = -1
         self._head_at = 0.0
         self._stats_lock = threading.Lock()
+        # Query-denominated counters. Admission refusals are owned by
+        # the queue (`QueryQueue.rejected`) — the stats doc reads them
+        # from there so the count has exactly one owner; `oversized`
+        # covers requests refused before they ever reach the queue.
         self.stats = {
-            "answered": 0, "rejected": 0, "requeued": 0,
+            "answered": 0, "oversized": 0, "requeued": 0,
             "per_reader": {i: 0 for i in range(len(reader_addrs))},
             "reader_errors": {i: 0 for i in range(len(reader_addrs))},
             "staleness": {},  # lag -> answer count
@@ -541,20 +545,24 @@ class Router:
                     if kind == MSG_QUERY:
                         qs, qt = unpack_query(payload)
                         if qs.size > self.spec.stream.microbatch:
+                            with self._stats_lock:
+                                self.stats["oversized"] += int(qs.size)
                             with lock:
                                 send_msg(conn, MSG_REJECT,
                                          b"request larger than microbatch")
                             continue
                         entry = _Entry(conn, lock, qs, qt)
                         if not self.queue.offer(entry, qs.size):
-                            with self._stats_lock:
-                                self.stats["rejected"] += int(qs.size)
+                            # `offer` already counted the refusal in
+                            # queue.rejected; counting it again here
+                            # double-reported every admission reject.
                             with lock:
                                 send_msg(conn, MSG_REJECT, b"overloaded")
                     elif kind == MSG_STATS:
                         with self._stats_lock:
                             doc = json.dumps(
                                 {**self.stats,
+                                 "rejected": self.queue.rejected,
                                  "pending": self.queue.pending,
                                  "head": self.head()})
                         send_msg(conn, MSG_STATS, doc.encode())
@@ -601,7 +609,9 @@ class Router:
                     sock = None
                 with self._stats_lock:
                     self.stats["reader_errors"][ridx] += 1
-                    self.stats["requeued"] += len(batch)
+                    # Queries, not entries — every other counter in this
+                    # dict is query-denominated.
+                    self.stats["requeued"] += int(qs.size)
                 for e in reversed(batch):
                     self.queue.offer(e, e.qs.size, front=True)
                 continue

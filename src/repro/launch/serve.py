@@ -120,6 +120,11 @@ class ServeConfig:
                                    # the measurement entirely
     fused: bool = False          # pipelined chunks as fused megakernel
                                  # dispatches with donated planes
+    # frontier-proportional sweeps (DESIGN.md §10)
+    frontier: bool = False       # relax only the tile rows the change
+                                 # frontier touches (masked sweeps)
+    frontier_threshold: float = 0.25  # density fallback: max fraction of
+                                      # tile rows a masked wave may gather
     # capacity / grow-in-place (DESIGN.md §6)
     capacity: int | None = None  # initial edge capacity (None = provision
                                  # for the scenario's worst-case inserts)
@@ -231,7 +236,9 @@ class ServeLoop:
                                   shards=cfg.tile_shards,
                                   block_e=cfg.block_e,
                                   autotune=cfg.autotune,
-                                  tune_table=cfg.tune_table)
+                                  tune_table=cfg.tune_table,
+                                  frontier=cfg.frontier,
+                                  frontier_threshold=cfg.frontier_threshold)
         self.store: SnapshotStore | None = None
         self.report: ServeReport | None = None
         # host-side current edge set, maintained incrementally: a

@@ -1,0 +1,109 @@
+"""Pins for the bench regression gate (`benchmarks/compare.py`).
+
+Each test drives the real CLI in a subprocess — exactly how the CI bench
+job invokes it — against tiny synthetic ``repro-bench/v1`` payloads.
+Three behaviours are load-bearing for CI and pinned here:
+
+- a baseline ``serve/.../max_qps_*`` row absent from the candidate run
+  is a gate failure (coverage loss counts as a regression), not a
+  silent pass;
+- a zero-throughput max_qps row fails (inverted ratio goes to inf);
+- a non-finite measurement (NaN from a broken emitter) fails instead of
+  sailing through every ``>`` comparison as False.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+QPS_DERIVED = "better=higher; saturation throughput (replica tier)"
+
+
+def _payload(rows):
+    return {"schema": "repro-bench/v1",
+            "rows": [dict({"name": name, "us_per_call": us}, **extra)
+                     for name, us, extra in rows]}
+
+
+def _run_gate(tmp_path, base_rows, cand_rows, *extra_args):
+    base_path = tmp_path / "base.json"
+    cand_path = tmp_path / "cand.json"
+    base_path.write_text(json.dumps(_payload(base_rows)))
+    cand_path.write_text(json.dumps(_payload(cand_rows)))
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.compare",
+         str(base_path), str(cand_path), "--max-regression", "0.25"],
+        cwd=REPO_ROOT, capture_output=True, text=True)
+
+
+TICK = ("ticks/ba_2k/pallas/none/update", 30000.0, {})
+QPS = ("serve/ba_2k/jnp/max_qps_r2", 338.0, {"derived": QPS_DERIVED})
+
+
+def test_identical_rows_pass(tmp_path):
+    res = _run_gate(tmp_path, [TICK, QPS], [TICK, QPS])
+    assert res.returncode == 0, res.stderr
+    assert "OK: no gated row" in res.stdout
+
+
+def test_missing_max_qps_row_fails(tmp_path):
+    # The replica tier's saturation rows are emitted by a separate code
+    # path from the tick rows; if that path silently stops running, the
+    # gate must treat the vanished row as a regression.
+    res = _run_gate(tmp_path, [TICK, QPS], [TICK])
+    assert res.returncode == 1
+    assert "missing from candidate" in res.stderr
+    assert "max_qps_r2" in res.stderr
+
+
+def test_zero_qps_fails(tmp_path):
+    res = _run_gate(tmp_path, [QPS], [(QPS[0], 0.0, QPS[2])])
+    assert res.returncode == 1
+    assert "max_qps_r2" in res.stderr
+
+
+def test_qps_drop_gates_inverted_ratio(tmp_path):
+    # better=higher rows invert the ratio: a 50% qps drop must fail
+    # even though the raw cand/base ratio is < 1.
+    res = _run_gate(tmp_path, [QPS], [(QPS[0], 169.0, QPS[2])])
+    assert res.returncode == 1
+    res = _run_gate(tmp_path, [QPS], [(QPS[0], 400.0, QPS[2])])
+    assert res.returncode == 0, res.stderr
+
+
+def test_nan_candidate_fails(tmp_path):
+    res = _run_gate(tmp_path, [TICK], [(TICK[0], float("nan"), {})])
+    assert res.returncode == 1
+    assert "non-finite" in res.stderr
+
+
+def test_nan_baseline_fails(tmp_path):
+    res = _run_gate(tmp_path, [(TICK[0], float("nan"), {})], [TICK])
+    assert res.returncode == 1
+    assert "non-finite" in res.stderr
+
+
+def test_nan_fails_even_below_min_us_floor(tmp_path):
+    # NaN also defeats the `b >= min_us` floor check (False), which used
+    # to park the row in the ungated bucket; a broken emitter must fail
+    # regardless of the floor.
+    small = ("ticks/ba_2k/jnp/none/query", float("nan"), {})
+    res = _run_gate(tmp_path, [small], [small])
+    assert res.returncode == 1
+    assert "non-finite" in res.stderr
+
+
+def test_nan_calibration_row_rejected(tmp_path):
+    base_path = tmp_path / "base.json"
+    cand_path = tmp_path / "cand.json"
+    base_path.write_text(json.dumps(_payload([TICK, QPS])))
+    cand_path.write_text(json.dumps(_payload(
+        [(TICK[0], float("nan"), {}), QPS])))
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.compare",
+         str(base_path), str(cand_path), "--calibrate", TICK[0]],
+        cwd=REPO_ROOT, capture_output=True, text=True)
+    assert res.returncode != 0
+    assert "non-finite or zero" in res.stderr

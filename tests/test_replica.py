@@ -8,7 +8,9 @@ staleness ≤ 1 contract held across the process boundary (DESIGN.md §9).
 """
 from __future__ import annotations
 
+import json
 import os
+import socket
 import subprocess
 import threading
 import time
@@ -49,6 +51,122 @@ def test_admission_exempts_front_requeue():
     assert q.offer("requeued", 3, front=True)
     assert q.pending == 7
     assert q.take() == ["requeued", "a"]  # head position preserved
+
+
+def test_front_requeue_never_counts_as_rejected():
+    """The rejected counter is admission refusals only: an exempt
+    front-requeue past the cap must neither bump it nor unbalance the
+    pending count across the eventual take."""
+    q = QueryQueue(max_pending=4, microbatch=32, coalesce_s=0.0)
+    assert q.offer("a", 4)
+    assert not q.offer("b", 2)
+    assert q.rejected == 2
+    assert q.offer("r", 3, front=True)   # reclaimed batch
+    assert q.rejected == 2               # exempt → uncounted
+    assert q.pending == 7
+    assert q.take() == ["r", "a"]
+    assert q.pending == 0                # requeued queries fully drained
+
+
+def test_coalesce_split_refusal_leaves_counters_intact():
+    """When the next entry doesn't fit the open microbatch the coalescer
+    refuses to split it and leaves it queued whole — that refusal is not
+    an admission reject and must not leak pending queries."""
+    q = QueryQueue(max_pending=100, microbatch=8, coalesce_s=0.01)
+    q.offer("a", 6)
+    q.offer("b", 5)                  # 6+5 > 8: left whole for next take
+    assert q.take() == ["a"]
+    assert q.pending == 5            # the refused entry is still accounted
+    assert q.rejected == 0
+    assert q.take() == ["b"]
+    assert q.pending == 0
+
+
+# ---------------------------------------------------------------------------
+# Router counters (the stats doc the benchmarks and operators read)
+# ---------------------------------------------------------------------------
+
+def _router(tmp_path, microbatch=4, max_queue=2, readers=()):
+    spec = ServeSpec(
+        stream=StreamSpec(microbatch=microbatch, quiet=True),
+        topology=TopologySpec(max_queue=max_queue))
+    return replica.Router(spec, str(tmp_path), port=0,
+                          reader_addrs=list(readers))
+
+
+def test_router_counts_oversized_and_rejected_once(tmp_path):
+    """Regression, two counter bugs in one client session: (a) the
+    oversized-request REJECT path reported nothing at all, and (b) an
+    admission refusal was counted twice — once by `QueryQueue.offer`,
+    once again by the client loop. The stats doc must show each refusal
+    exactly once, under its actual cause."""
+    router = _router(tmp_path, microbatch=4, max_queue=2)
+    client, server = socket.socketpair()
+    t = threading.Thread(target=router._client_loop, args=(server,),
+                         daemon=True)
+    t.start()
+    try:
+        big = np.arange(6, dtype=np.int32)       # > microbatch
+        replica.send_msg(client, replica.MSG_QUERY,
+                         replica.pack_query(big, big))
+        kind, _ = replica.recv_msg(client)
+        assert kind == replica.MSG_REJECT
+        two = np.arange(2, dtype=np.int32)       # fills max_queue exactly
+        replica.send_msg(client, replica.MSG_QUERY,
+                         replica.pack_query(two, two))
+        one = np.arange(1, dtype=np.int32)       # one over: refused
+        replica.send_msg(client, replica.MSG_QUERY,
+                         replica.pack_query(one, one))
+        kind, _ = replica.recv_msg(client)
+        assert kind == replica.MSG_REJECT
+        replica.send_msg(client, replica.MSG_STATS)
+        kind, payload = replica.recv_msg(client)
+        assert kind == replica.MSG_STATS
+        stats = json.loads(payload)
+        assert stats["oversized"] == 6           # queries, its own cause
+        assert stats["rejected"] == 1            # once, owned by the queue
+        assert router.queue.rejected == 1
+        assert stats["pending"] == 2             # the admitted entry
+    finally:
+        replica.send_msg(client, replica.MSG_STOP)
+        t.join(timeout=5.0)
+        client.close()
+
+
+def test_router_requeued_counts_queries_not_entries(tmp_path):
+    """Regression: the dead-reader requeue path bumped `requeued` by
+    len(batch) — entries — while every other stat is query-denominated.
+    One reclaimed 3-query batch must count as 3."""
+    srv = socket.create_server(("127.0.0.1", 0))
+    addr = srv.getsockname()
+
+    def accept_and_drop():
+        conn, _ = srv.accept()
+        replica.recv_msg(conn)       # take the dispatched batch...
+        conn.close()                 # ...and die before answering
+        srv.close()                  # no reconnect: one failure exactly
+
+    threading.Thread(target=accept_and_drop, daemon=True).start()
+    router = _router(tmp_path, microbatch=8, max_queue=16, readers=[addr])
+    qs = np.arange(3, dtype=np.int32)
+    entry = replica._Entry(None, threading.Lock(), qs, qs)
+    assert router.queue.offer(entry, qs.size)
+    t = threading.Thread(target=router._dispatch_loop, args=(0,),
+                         daemon=True)
+    t.start()
+    try:
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline:
+            with router._stats_lock:
+                if router.stats["requeued"]:
+                    break
+            time.sleep(0.01)
+        assert router.stats["requeued"] == 3     # queries, not 1 entry
+        assert router.stats["reader_errors"][0] == 1
+        assert router.queue.pending == 3         # reclaimed at the head
+    finally:
+        router.running = False
+        t.join(timeout=5.0)
 
 
 # ---------------------------------------------------------------------------
@@ -150,6 +268,30 @@ def test_prune_never_removes_published_step(tmp_path):
     assert ckpt.step_manifest(d, 1) is not None      # published: protected
     assert ckpt.step_manifest(d, 4) is not None      # newest: kept
     assert ckpt.step_manifest(d, 0) is None          # pruned
+
+
+def test_prune_keeps_steps_between_current_and_latest(tmp_path):
+    """Regression: prune protected only the step CURRENT names, so with
+    an old pointer and an aggressive keep it deleted the steps between
+    CURRENT and the head — breaking a reader that loaded CURRENT and is
+    replaying forward to catch up. The whole [CURRENT, latest] range
+    must survive."""
+    d = str(tmp_path)
+    for s in range(6):
+        ckpt.save(d, s, {"x": np.arange(4) + s})
+    ckpt.publish(d, 2)                               # pointer lags the head
+    ckpt.prune(d, keep=1)
+    for s in range(2, 6):                            # published..latest
+        assert ckpt.step_manifest(d, s) is not None, s
+    assert ckpt.step_manifest(d, 0) is None          # strictly older: pruned
+    assert ckpt.step_manifest(d, 1) is None
+    # No pointer yet: plain newest-k retention still applies.
+    d2 = str(tmp_path / "unpublished")
+    for s in range(3):
+        ckpt.save(d2, s, {"x": np.arange(4) + s})
+    ckpt.prune(d2, keep=1)
+    assert ckpt.step_manifest(d2, 2) is not None
+    assert ckpt.step_manifest(d2, 0) is None
 
 
 def test_ack_barrier_ignores_dead_readers(tmp_path):

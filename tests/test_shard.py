@@ -18,6 +18,7 @@ import subprocess
 import sys
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
 
@@ -33,6 +34,18 @@ from repro.core.shard import (_check_planes, affected_vertices,
 from repro.launch.mesh import make_host_mesh
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _fresh_compile_caches():
+    """This module's first shard_map compile is the biggest single
+    compile in the suite, and it runs ~200 tests deep; on top of the
+    accumulated executables the XLA CPU client has segfaulted inside
+    backend_compile. Start from a fresh client (test_weighted.py
+    hygiene) — the re-compiles the earlier modules' shapes pay for
+    later are all small."""
+    jax.clear_caches()
+    yield
 
 
 def _env_8dev():
